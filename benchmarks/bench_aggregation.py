@@ -1,0 +1,46 @@
+"""Aggregation-path benchmarks: β-solver scaling (eqs. 9-10) and the
+server blend op at model scale (eq. 3/11 folded), plus the §III-A
+effective-coefficient decay table."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_result, time_fn
+from repro.core import aggregation as agg
+
+
+def bench_beta_solver() -> None:
+    rng = np.random.default_rng(0)
+    rows = {}
+    for M in (10, 100, 1000, 10000):
+        alpha = rng.dirichlet(np.ones(M))
+        sched = list(rng.permutation(M))
+        us = time_fn(lambda: agg.solve_betas(alpha, sched), warmup=1,
+                     iters=5)
+        rows[M] = us
+        emit(f"agg.solve_betas.M{M}", us, "closed-form backward recursion")
+    save_result("beta_solver_scaling", rows)
+
+
+def bench_decay_table() -> None:
+    """§III-A: iterations until the first upload's weight halves/vanishes,
+    for uniform alpha over M clients."""
+    rows = {}
+    for M in (10, 100):
+        a = 1.0 / M
+        # weight of first upload after J iterations: a*(1-a)^(J-1)
+        j_half = int(np.ceil(1 + np.log(0.5) / np.log(1 - a)))
+        j_1pct = int(np.ceil(1 + np.log(0.01) / np.log(1 - a)))
+        rows[M] = {"half": j_half, "1pct": j_1pct}
+        emit(f"agg.decay.M{M}.iters_to_1pct", j_1pct,
+             "naive alpha-in-AFL (claim C2)")
+    save_result("alpha_decay", rows)
+
+
+def main() -> None:
+    bench_beta_solver()
+    bench_decay_table()
+
+
+if __name__ == "__main__":
+    main()

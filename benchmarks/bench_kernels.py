@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: the three Pallas kernels vs their jnp oracles.
+
+On this CPU container the kernels execute in interpret mode, so absolute
+numbers are NOT TPU performance — the derived column reports the
+arithmetic-intensity / bytes-streamed figures that the roofline uses, plus
+the oracle (XLA-compiled jnp) timing as the meaningful CPU datapoint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_result, time_fn
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ref import ssd_sequential
+from repro.kernels.weighted_agg.ref import weighted_agg_ref
+from repro.models.mamba2 import ssd_chunked
+
+
+def bench_attention() -> None:
+    B, H, Hkv, S, D = 1, 8, 2, 1024, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = time_fn(lambda: f(q, k, v))
+    flops = 4 * B * H * S * S * D / 2      # causal
+    emit("kernel.attention.oracle", us,
+         f"gflops={flops/1e9:.2f};S={S};GQA={H}/{Hkv}")
+
+
+def bench_ssd() -> None:
+    Bt, L, H, P, G, N = 1, 2048, 8, 64, 1, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (Bt, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, L, H))) * .1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * .3)
+    B = jax.random.normal(ks[3], (Bt, L, G, N))
+    C = jax.random.normal(ks[4], (Bt, L, G, N))
+    chunked = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    seq = jax.jit(lambda *a: ssd_sequential(*a)[0])
+    us_c = time_fn(lambda: chunked(x, dt, A, B, C))
+    us_s = time_fn(lambda: seq(x, dt, A, B, C), iters=3)
+    emit("kernel.ssd.chunked", us_c, f"L={L};speedup_vs_seq={us_s/us_c:.1f}x")
+    save_result("kernels_ssd", {"chunked_us": us_c, "sequential_us": us_s})
+
+
+def bench_weighted_agg() -> None:
+    for C, n in [(16, 1 << 22), (32, 1 << 22)]:
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        g = jax.random.normal(ks[0], (n,), jnp.bfloat16)
+        w = jax.random.normal(ks[1], (C, n), jnp.bfloat16)
+        coefs = jax.nn.softmax(jax.random.normal(ks[2], (C + 1,)))
+        f = jax.jit(lambda g, w, c: weighted_agg_ref(g, w, c))
+        us = time_fn(lambda: f(g, w, coefs))
+        bytes_moved = (C + 2) * n * 2
+        emit(f"kernel.weighted_agg.C{C}", us,
+             f"GBps={bytes_moved/us*1e6/1e9:.1f};n={n}")
+
+
+def main() -> None:
+    bench_attention()
+    bench_ssd()
+    bench_weighted_agg()
+
+
+if __name__ == "__main__":
+    main()

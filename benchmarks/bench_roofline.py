@@ -1,0 +1,43 @@
+"""Roofline summary benchmark: renders the §Roofline table from the
+dry-run records in experiments/dryrun (run ``python -m repro.launch.dryrun
+--all --roofline`` first; this bench only reads)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def main() -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__single.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        t = rec["roofline"]["terms_full"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute_s": t["t_compute_s"],
+            "t_memory_s": t["t_memory_s"],
+            "t_collective_s": t["t_collective_s"],
+            "dominant": t["dominant"],
+            "useful_flops_ratio": rec["roofline"]["useful_flops_ratio"],
+        })
+        emit(f"roofline.{rec['arch']}.{rec['shape']}",
+             t[f"t_{t['dominant']}_s"] * 1e6,
+             f"dominant={t['dominant']};useful="
+             f"{rec['roofline']['useful_flops_ratio']:.2f}")
+    if rows:
+        save_result("roofline_table", {"rows": rows})
+    else:
+        print("roofline.no_records,0,run dryrun --all --roofline first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing, CSV emission, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 10
+            ) -> float:
+    """Median wall time per call in microseconds (block_until_ready-aware)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

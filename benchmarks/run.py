@@ -1,0 +1,57 @@
+"""Benchmark entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig2          §II-C / Fig.2 completion-time comparison (SFL vs AFL)
+  convergence   Figs.3-5 FedAvg vs CSMAAFL, γ sweep (scaled by default;
+                ``--full`` for the paper's 100-client/60k-image setup)
+  kernels       Pallas-kernel oracles micro-bench
+  aggregation   β-solver scaling + §III-A decay table
+  roofline      §Roofline table from the dry-run records
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,convergence,kernels,"
+                         "aggregation,roofline")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else
+             ["fig2", "aggregation", "kernels", "convergence", "roofline"])
+    print("name,us_per_call,derived")
+    rc = 0
+    for name in names:
+        try:
+            if name == "fig2":
+                from benchmarks import bench_fig2_timing as b
+                b.main()
+            elif name == "convergence":
+                from benchmarks import bench_convergence as b
+                b.main(["--full"] if args.full else [])
+            elif name == "kernels":
+                from benchmarks import bench_kernels as b
+                b.main()
+            elif name == "aggregation":
+                from benchmarks import bench_aggregation as b
+                b.main()
+            elif name == "roofline":
+                from benchmarks import bench_roofline as b
+                b.main()
+            else:
+                print(f"{name},0,unknown-benchmark", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            rc = 1
+            print(f"{name},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Msgpack-based pytree checkpointing (no orbax offline).
+
+Stores the tree structure as a path→tensor map; tensors serialized as
+(dtype, shape, raw bytes).  Restore is sharding-aware: pass a target of
+ShapeDtypeStructs with shardings and leaves are ``jax.device_put`` to them.
+
+Layout:  <dir>/<name>.ckpt        (msgpack payload)
+         <dir>/<name>.meta.json   (step, user metadata)
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        out[prefix + "__type__"] = ("tuple" if isinstance(tree, tuple)
+                                    else "list")
+        out[prefix + "__len__"] = len(tree)
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], template: Any, prefix: str = "") -> Any:
+    if isinstance(template, dict):
+        return {k: _unflatten(flat, v, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        t = type(template)
+        return t(_unflatten(flat, v, f"{prefix}{i}/")
+                 for i, v in enumerate(template))
+    return flat[prefix[:-1]]
+
+
+def _encode_leaf(x) -> Dict[str, Any]:
+    arr = np.asarray(jax.device_get(x))
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def save(path: str, tree: Any, *, step: int = 0,
+         metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    payload = {}
+    for k, v in flat.items():
+        if k.endswith("__type__") or k.endswith("__len__"):
+            payload[k] = v
+        else:
+            payload[k] = _encode_leaf(v)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, "metadata": metadata or {}}, f)
+
+
+def load(path: str, template: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``template``.  ``shardings`` (same
+    structure) device_puts each leaf to its NamedSharding."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+
+    def decode(k: str):
+        e = payload[k]
+        arr = np.frombuffer(e["data"],
+                            dtype=np.dtype(e["dtype"])).reshape(e["shape"])
+        return arr
+
+    flat = {k: (v if isinstance(v, (str, int)) else decode(k))
+            for k, v in payload.items()}
+    tree = _unflatten(flat, template)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(jnp.asarray(x), s),
+                            tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

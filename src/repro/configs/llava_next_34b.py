@@ -1,0 +1,25 @@
+"""llava-next-34b [vlm] — anyres-tiled VLM; we build the LM backbone +
+projector; the SigLIP/CLIP vision tower is a stub supplying patch embeddings.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] for the anyres mechanics; the 34B
+backbone follows the Nous-Hermes-2-Yi-34B geometry given in the assignment:
+60L, d_model=7168, 56 heads (GQA kv=8), d_ff=20480, vocab 64000.
+anyres: base 576 patches + up to 4x576 tile patches -> we fix 2304 patch
+embeddings prepended to the text tokens.
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, VLM, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llava-next-34b",
+    family=VLM,
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    num_patches=2304,
+    vision_embed_dim=1152,    # SigLIP-SO400M patch embedding dim
+    attention=AttentionConfig(rope_theta=5_000_000.0),
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (anyres); Yi-34B geometry",
+))

@@ -1,0 +1,20 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention (4096).
+
+[arXiv:2401.04088] Mixtral of Experts.
+"""
+from repro.configs.base import AttentionConfig, MOE, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="mixtral-8x7b",
+    family=MOE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    attention=AttentionConfig(sliding_window=4096, rope_theta=1_000_000.0),
+    moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=14336,
+                  capacity_factor=1.25, group_size=4096),
+    source="arXiv:2401.04088",
+))

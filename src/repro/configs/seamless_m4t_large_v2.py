@@ -1,0 +1,27 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder multimodal backbone.
+
+[arXiv:2308.11596] SeamlessM4T v2. We model the text/unit decoder stack and
+the (speech-)encoder TRANSFORMER only; the conformer/mel front-end is a stub
+that supplies precomputed frame embeddings (the one allowed carve-out).
+24L refers to each stack (the large-v2 card lists 24 encoder + 24 decoder
+transformer layers at d_model=1024).
+"""
+from repro.configs.base import (
+    AttentionConfig, ENCDEC, ModelConfig, register,
+)
+
+CONFIG = register(ModelConfig(
+    arch_id="seamless-m4t-large-v2",
+    family=ENCDEC,
+    num_layers=24,            # decoder layers
+    enc_layers=24,            # encoder layers
+    enc_seq_divisor=4,        # ~4 tokens of audio per frame embedding
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,          # GQA kv=16 == MHA
+    d_ff=8192,
+    vocab_size=256206,
+    attention=AttentionConfig(rope_theta=10000.0),
+    mlp_gated=False,          # seamless uses ReLU non-gated FFN
+    source="arXiv:2308.11596",
+))

@@ -1,0 +1,19 @@
+"""yi-9b [dense] — llama-architecture GQA.
+
+[arXiv:2403.04652] Yi. 48L (depth-upscaled from 32), d_model=4096,
+32 heads / 4 kv heads, d_ff=11008, vocab 64000, rope theta 10k (4k ctx base).
+"""
+from repro.configs.base import AttentionConfig, DENSE, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="yi-9b",
+    family=DENSE,
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    attention=AttentionConfig(rope_theta=10000.0),
+    source="arXiv:2403.04652",
+))

@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone with shared attention blocks.
+
+[arXiv:2411.15242] Zamba2. 81 blocks total; we realize the hybrid as a
+period-6 pattern of 5 Mamba2 blocks + 1 full-attention block (the paper's
+shared transformer block applied at regular intervals). d_model=3584,
+attention 32 heads MHA (kv=32), d_ff=14336 for the attention blocks' MLP,
+ssm_state=64.
+"""
+from repro.configs.base import (
+    ATTN_GLOBAL, AttentionConfig, HYBRID, MAMBA, ModelConfig, SSMConfig, register,
+)
+
+CONFIG = register(ModelConfig(
+    arch_id="zamba2-7b",
+    family=HYBRID,
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    attention=AttentionConfig(
+        pattern=(MAMBA, MAMBA, MAMBA, MAMBA, MAMBA, ATTN_GLOBAL),
+        rope_theta=10000.0,
+    ),
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64,
+                  n_groups=2, chunk_size=128),
+    source="arXiv:2411.15242",
+))

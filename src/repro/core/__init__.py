@@ -1,0 +1,2 @@
+"""CSMAAFL core: the paper's contribution (scheduling + aggregation)."""
+from repro.core import afl, aggregation, scheduler, sfl  # noqa: F401

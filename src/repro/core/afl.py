@@ -1,0 +1,140 @@
+"""Asynchronous federated learning loops (paper §II-B, §III).
+
+Three AFL aggregation modes over the same event-driven scheduler:
+
+* ``afl_alpha``    — §III-A: naive reuse of SFL's α as (1-β): demonstrates
+  the geometric contribution decay (this is the *negative* result).
+* ``afl_baseline`` — §III-B: strict-cycle scheduling + the triangular-solved
+  β_j so that every M iterations reproduce one FedAvg round exactly.
+* ``csmaafl``      — §III-C: fairness scheduling + eq. (11) staleness-aware
+  coefficients (Algorithm 1).
+
+The client fleet is simulated in virtual time; each client *physically*
+holds its own model copy (as on a real edge fleet), so the server stores
+only the current global model and the scalar staleness tracker — matching
+the paper's storage argument against AsyncFedED.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
+                                  ClientSpec, UploadEvent)
+from repro.core.sfl import EvalFn, FLHistory, LocalTrainFn
+
+
+@dataclasses.dataclass
+class AFLResult:
+    params: Any
+    history: FLHistory
+    events: List[UploadEvent]
+    betas: List[float]
+
+
+def run_afl(params0, fleet: Sequence[ClientSpec],
+            local_train_fn: LocalTrainFn, *,
+            algorithm: str,              # afl_alpha | afl_baseline | csmaafl
+            iterations: int, tau_u: float, tau_d: float,
+            gamma: float = 0.4, mu_momentum: float = 0.9,
+            eval_fn: Optional[EvalFn] = None, eval_every: int = 10,
+            server_opt: Optional[str] = None, server_lr: float = 1.0,
+            max_staleness: Optional[int] = None,
+            seed: int = 0) -> AFLResult:
+    """Run one AFL variant.  One event == one global iteration (eq. 3).
+
+    ``server_opt`` (beyond-paper, FedOpt-style): instead of the plain blend
+    w ← β w + (1-β) w_m, treat Δ = (1-β)(w_m − w) as a pseudo-gradient and
+    apply a server optimizer (e.g. "adam"): w ← ServerOpt(w, −Δ).  With
+    server_opt=None this reduces exactly to eq. (3).
+
+    ``max_staleness`` (beyond-paper, admission control): uploads staler
+    than the bound are *dropped* — the client still receives the fresh
+    global model (so it resynchronizes), but its update is not blended.
+    eq. (11) already down-weights stale updates smoothly; the hard bound
+    guards against pathological stragglers.
+    """
+    M = len(fleet)
+    alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+    opt_state = None
+    if server_opt is not None:
+        from repro.optim import optimizers as _opt
+        s_init, s_update = _opt.get_optimizer(server_opt)
+        opt_state = s_init(params0)
+
+    if algorithm == "afl_baseline":
+        sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
+        order = sched.cycle_order()
+        cycle_betas = agg.solve_betas(alpha, order)   # eqs. (9)-(10)
+    elif algorithm in ("afl_alpha", "csmaafl"):
+        sched = AFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
+    else:
+        raise ValueError(f"unknown AFL algorithm '{algorithm}'")
+
+    tracker = agg.StalenessTracker(momentum=mu_momentum)
+    global_params = params0
+    # every client immediately trains on the initial broadcast w_0
+    client_models: Dict[int, Any] = {}
+    for c in fleet:
+        client_models[c.cid] = local_train_fn(
+            params0, c.cid, c.local_steps, seed * 100003)
+
+    hist = FLHistory()
+    events: List[UploadEvent] = []
+    betas: List[float] = []
+    if eval_fn is not None:
+        hist.add(0.0, 0, eval_fn(global_params))
+
+    for ev in sched.events(iterations):
+        events.append(ev)
+        # ---- choose the aggregation coefficient for this iteration ----
+        if algorithm == "afl_alpha":
+            one_minus_beta = float(alpha[ev.cid])          # §III-A naive
+        elif algorithm == "afl_baseline":
+            pos_in_cycle = (ev.j - 1) % M
+            one_minus_beta = 1.0 - float(cycle_betas[pos_in_cycle])
+        else:  # csmaafl, eq. (11)
+            mu = tracker.update(ev.staleness)
+            one_minus_beta = agg.staleness_coefficient(
+                ev.j, ev.i, mu, gamma)
+        if max_staleness is not None and ev.staleness > max_staleness:
+            one_minus_beta = 0.0          # admission control: drop update
+        beta = 1.0 - one_minus_beta
+        betas.append(beta)
+
+        # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
+        if server_opt is None:
+            global_params = agg.blend_pytree(
+                global_params, client_models[ev.cid], beta)
+        else:
+            # beyond-paper: pseudo-gradient −Δ through a server optimizer
+            import jax as _jax
+            import jax.numpy as _jnp
+            pseudo_grad = _jax.tree.map(
+                lambda g, c: (1.0 - beta) * (g.astype(_jnp.float32)
+                                             - c.astype(_jnp.float32)),
+                global_params, client_models[ev.cid])
+            global_params, opt_state = s_update(
+                global_params, pseudo_grad, opt_state, server_lr)
+
+        # ---- model redistribution ----
+        if algorithm == "afl_baseline":
+            # §III-B requirement (c): broadcast to *all* clients every M
+            # iterations; mid-cycle, clients keep training from the cycle-
+            # start model (their uploads must equal SFL's w_t^m).
+            if ev.j % M == 0:
+                for c in fleet:
+                    client_models[c.cid] = local_train_fn(
+                        global_params, c.cid, c.local_steps,
+                        seed * 100003 + ev.j)
+        else:
+            # §II-B: only the uploading client receives w_{j+1} (eq. 4)
+            client_models[ev.cid] = local_train_fn(
+                global_params, ev.cid, ev.local_steps, seed * 100003 + ev.j)
+
+        if eval_fn is not None and ev.j % eval_every == 0:
+            hist.add(ev.t_complete, ev.j, eval_fn(global_params))
+    return AFLResult(global_params, hist, events, betas)

@@ -1,0 +1,187 @@
+"""Model-aggregation mathematics of CSMAAFL (paper Sections III-A/B/C).
+
+Everything here is control-plane: pure NumPy/Python scalar math that
+computes *coefficients*.  Applying coefficients to parameter pytrees is the
+data plane (``blend_pytree`` below / the Pallas ``weighted_agg`` kernel /
+the distributed step in ``core/distributed.py``).
+
+Key results implemented:
+
+* ``sfl_alpha``             — eq. (5): α_m = |D_m| / Σ|D_c|.
+* ``solve_betas``           — eqs. (7)-(10): given a schedule φ and SFL
+  coefficients α, solve the triangular system backward so that M AFL
+  iterations reproduce one SFL round exactly.  Because Σα=1 the recursion
+  telescopes and β_1 = 0 (the initial model's residual weight vanishes).
+* ``effective_coefficients``— §III-A analysis: the weight each client's
+  *latest* upload carries in the current global model, given the raw
+  per-iteration (β_j) sequence.  Used to demonstrate the geometric decay
+  of naive SFL-α-in-AFL (claim C2).
+* ``staleness_coefficient`` — eq. (11): (1-β_j) = min(1, μ/(γ·j·(j-i))).
+* ``StalenessTracker``      — maintains the moving average μ_ji.
+* ``fold_sequential_blends``— folds a *trunk* of sequential single-client
+  blends into one weighted sum (used by the cluster-mode fused step):
+  w ← (Πβ_j)·w + Σ_j (1-β_j)(Π_{k>j}β_k)·w_{c_j}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# SFL coefficients — eq. (5)
+# ---------------------------------------------------------------------------
+def sfl_alpha(samples: Sequence[int]) -> np.ndarray:
+    """α_m = |D_m| / Σ_c |D_c|   (eq. 5)."""
+    d = np.asarray(samples, np.float64)
+    if np.any(d <= 0):
+        raise ValueError("all clients need positive sample counts")
+    return d / d.sum()
+
+
+# ---------------------------------------------------------------------------
+# Baseline AFL — eqs. (7)-(10)
+# ---------------------------------------------------------------------------
+def solve_betas(alpha: np.ndarray, schedule: Sequence[int]) -> np.ndarray:
+    """Solve β_1..β_M (eqs. 9-10) so that M sequential AFL blends
+    reproduce the SFL aggregation Σ α_m w^m exactly (eq. 7).
+
+    ``schedule[j]`` is the client uploaded at iteration j (0-based:
+    schedule[0] ↔ φ(1)).  Returns betas[j] ↔ β_{j+1}.
+
+    Derivation: expanding eq. (8), client φ(j)'s weight in w_{M+1} is
+    (1-β_j)·Π_{k>j} β_k, which must equal α_φ(j).  Solving backward:
+      β_M     = 1 - α_φ(M)                      (eq. 9)
+      β_{j}   = 1 - α_φ(j) / Π_{k>j} β_k        (generalizes eq. 10)
+    Σα = 1 forces β_1 = 0 → w_1's residual weight Πβ vanishes.
+    """
+    M = len(schedule)
+    if sorted(schedule) != list(range(M)):
+        raise ValueError("schedule must be a permutation of range(M)")
+    if abs(float(np.sum(alpha)) - 1.0) > 1e-9:
+        raise ValueError("alpha must sum to 1")
+    betas = np.zeros(M, np.float64)
+    suffix_prod = 1.0            # Π_{k>j} β_k, built from the back
+    for j in range(M - 1, -1, -1):
+        a = float(alpha[schedule[j]])
+        if suffix_prod <= 0.0:
+            raise FloatingPointError(
+                "suffix product vanished before reaching j=0; "
+                "alpha is degenerate (some α ≥ remaining mass)")
+        b = 1.0 - a / suffix_prod
+        # analytically b >= 0 with b == 0 exactly at j = 0 (Σα = 1); at
+        # large M the suffix product underflows toward α_φ(1) and rounding
+        # can push b slightly negative — clamp within a relative tolerance
+        if b < -1e-6 * max(1.0, a / max(suffix_prod, 1e-300)):
+            raise FloatingPointError(
+                f"negative β at j={j}: schedule/α inconsistent (b={b})")
+        betas[j] = max(b, 0.0)
+        suffix_prod *= betas[j]
+    return betas
+
+
+def verify_betas(alpha: np.ndarray, schedule: Sequence[int],
+                 betas: np.ndarray, atol: float = 1e-9) -> bool:
+    """Check that the folded blend coefficients equal α (permutation-applied)."""
+    c0, coefs = fold_sequential_blends(betas)
+    ok = abs(c0) <= atol
+    for j, c in enumerate(schedule):
+        ok &= abs(coefs[j] - alpha[c]) <= atol
+    return bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# §III-A: effective contribution decay of naive SFL-α-in-AFL
+# ---------------------------------------------------------------------------
+def effective_coefficients(one_minus_betas: Sequence[float]) -> np.ndarray:
+    """Given the per-iteration client weights (1-β_j), j = 1..J, return the
+    weight each iteration's upload retains in the *final* global model:
+        c_j = (1-β_j) · Π_{k>j} β_k.
+    For naive α-in-AFL, (1-β_j) = α_φ(j) and the early uploads decay
+    geometrically (claim C2)."""
+    omb = np.asarray(one_minus_betas, np.float64)
+    betas = 1.0 - omb
+    J = len(omb)
+    out = np.empty(J, np.float64)
+    suffix = 1.0
+    for j in range(J - 1, -1, -1):
+        out[j] = omb[j] * suffix
+        suffix *= betas[j]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CSMAAFL staleness-aware coefficient — eq. (11)
+# ---------------------------------------------------------------------------
+def staleness_coefficient(j: int, i: int, mu: float, gamma: float) -> float:
+    """(1-β_j) = min(1, μ_ji / (γ · j · (j-i))) — eq. (11).
+
+    j: current global iteration (1-based, >=1); i: iteration at which the
+    uploading client last received the global model; μ: moving average of
+    staleness (j-i); γ: positive constant hyperparameter.
+    """
+    if j < 1:
+        raise ValueError("iterations are 1-based")
+    stale = max(j - i, 1)        # j-i >= 1 once the first upload happens
+    return float(min(1.0, mu / (gamma * j * stale)))
+
+
+@dataclasses.dataclass
+class StalenessTracker:
+    """Moving average μ_ji of observed staleness values (j - i)."""
+    momentum: float = 0.9
+    mu: float = 1.0
+    count: int = 0
+
+    def update(self, staleness: float) -> float:
+        staleness = max(float(staleness), 1.0)
+        if self.count == 0:
+            self.mu = staleness
+        else:
+            self.mu = self.momentum * self.mu + (1 - self.momentum) * staleness
+        self.count += 1
+        return self.mu
+
+
+# ---------------------------------------------------------------------------
+# Trunk folding: sequence of blends -> one weighted sum
+# ---------------------------------------------------------------------------
+def fold_sequential_blends(betas: Sequence[float]
+                           ) -> Tuple[float, np.ndarray]:
+    """Fold w ← β_j w + (1-β_j) w_{c_j} applied for j = 1..J into
+    (c0, coefs): w_final = c0·w_initial + Σ_j coefs[j]·w_{c_j}."""
+    betas = np.asarray(betas, np.float64)
+    J = len(betas)
+    coefs = np.empty(J, np.float64)
+    suffix = 1.0
+    for j in range(J - 1, -1, -1):
+        coefs[j] = (1.0 - betas[j]) * suffix
+        suffix *= betas[j]
+    return float(suffix), coefs
+
+
+# ---------------------------------------------------------------------------
+# Data plane: blending parameter pytrees
+# ---------------------------------------------------------------------------
+def blend_pytree(global_params, client_params, beta: float):
+    """eq. (3): w ← β·w_global + (1-β)·w_client  (single client)."""
+    b = jnp.float32(beta)
+    return jax.tree.map(
+        lambda g, c: (b * g.astype(jnp.float32)
+                      + (1.0 - b) * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)
+
+
+def weighted_sum_pytrees(coef0: float, global_params,
+                         coefs: Sequence[float], client_params_list):
+    """w ← c0·w_global + Σ_j c_j·w_j  (folded trunk, data plane)."""
+    def one_leaf(g, *cs):
+        acc = jnp.float32(coef0) * g.astype(jnp.float32)
+        for c, x in zip(coefs, cs):
+            acc = acc + jnp.float32(c) * x.astype(jnp.float32)
+        return acc.astype(g.dtype)
+    return jax.tree.map(one_leaf, global_params, *client_params_list)

@@ -1,0 +1,152 @@
+"""A *truly asynchronous* CSMAAFL runtime: server + client worker threads.
+
+The event-driven simulator (`core/scheduler.py`) validates the timing
+model; this module demonstrates the paper's ARCHITECTURE (Fig. 1 right /
+Algorithm 1) as real concurrent code:
+
+  * each client runs in its own thread: local training, then a slot
+    REQUEST on the shared upload channel;
+  * the server thread APPROVES one request at a time (the paper's single
+    TDMA slot), preferring the client with the *older* model on ties
+    (§III-C fairness), blends with eq. (11) coefficients, and returns the
+    fresh global model to that client only;
+  * server state is one model + the scalar μ tracker (O(1) storage).
+
+Used by `examples/` and integration tests; heterogeneity is induced with
+real ``time.sleep`` scaled by each client's τ.  This is the deployment
+shape for an actual edge fleet; the SPMD cluster path (core/distributed)
+is the datacenter shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import aggregation as agg
+from repro.core.scheduler import ClientSpec
+
+
+@dataclasses.dataclass
+class _SlotRequest:
+    cid: int
+    model: Any               # locally trained model w_i^m
+    model_iter: int          # i — global iteration the client trained from
+    t_request: float
+    reply: "queue.Queue"     # server puts (new_global, j) here
+
+
+class AsyncCSMAAFLServer:
+    """Algorithm 1's server loop in a thread."""
+
+    def __init__(self, params0, *, gamma: float = 0.4,
+                 mu_momentum: float = 0.9,
+                 max_staleness: Optional[int] = None):
+        self.global_params = params0
+        self.gamma = gamma
+        self.tracker = agg.StalenessTracker(momentum=mu_momentum)
+        self.max_staleness = max_staleness
+        self.j = 0
+        self.requests: "queue.Queue[_SlotRequest]" = queue.Queue()
+        self.last_slot: Dict[int, int] = {}
+        self.betas: List[float] = []
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+    def snapshot(self):
+        with self._lock:
+            return self.global_params, self.j
+
+    def _serve(self):
+        while not self._stop.is_set():
+            # drain the queue to apply the fairness tie-break among all
+            # currently waiting requests (older model first)
+            batch: List[_SlotRequest] = []
+            try:
+                batch.append(self.requests.get(timeout=0.05))
+            except queue.Empty:
+                continue
+            while True:
+                try:
+                    batch.append(self.requests.get_nowait())
+                except queue.Empty:
+                    break
+            batch.sort(key=lambda r: (self.last_slot.get(r.cid, -1),
+                                      r.t_request))
+            chosen, rest = batch[0], batch[1:]
+            for r in rest:                     # others keep waiting
+                self.requests.put(r)
+            self._aggregate(chosen)
+
+    def _aggregate(self, req: _SlotRequest):
+        with self._lock:
+            self.j += 1
+            j = self.j
+            staleness = max(j - req.model_iter, 1)
+            if self.max_staleness is not None and \
+                    staleness > self.max_staleness:
+                one_minus_beta = 0.0
+            else:
+                mu = self.tracker.update(staleness)
+                one_minus_beta = agg.staleness_coefficient(
+                    j, req.model_iter, mu, self.gamma)
+            beta = 1.0 - one_minus_beta
+            self.betas.append(beta)
+            # eq. (3): w_{j+1} = β w_j + (1-β) w_i^m
+            self.global_params = agg.blend_pytree(
+                self.global_params, req.model, beta)
+            self.last_slot[req.cid] = j
+            req.reply.put((self.global_params, j))
+
+
+def client_worker(server: AsyncCSMAAFLServer, spec: ClientSpec,
+                  local_train_fn: Callable, *, rounds: int,
+                  time_scale: float = 0.01, params0=None,
+                  stats: Optional[Dict] = None):
+    """One client thread: train -> request slot -> receive fresh model."""
+    params, model_iter = (params0, 0) if params0 is not None \
+        else server.snapshot()
+    for r in range(rounds):
+        params = local_train_fn(params, spec.cid, spec.local_steps, r)
+        time.sleep(spec.tau_compute * spec.local_steps * time_scale)
+        reply: "queue.Queue" = queue.Queue()
+        server.requests.put(_SlotRequest(
+            cid=spec.cid, model=params, model_iter=model_iter,
+            t_request=time.monotonic(), reply=reply))
+        params, model_iter = reply.get()       # fresh global, iteration j
+        if stats is not None:
+            stats.setdefault(spec.cid, []).append(model_iter)
+
+
+def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
+              rounds_per_client: int, gamma: float = 0.4,
+              time_scale: float = 0.005,
+              max_staleness: Optional[int] = None):
+    """Run the threaded fleet to completion; returns (params, server)."""
+    server = AsyncCSMAAFLServer(params0, gamma=gamma,
+                                max_staleness=max_staleness).start()
+    stats: Dict[int, List[int]] = {}
+    threads = [threading.Thread(
+        target=client_worker,
+        args=(server, spec, local_train_fn),
+        kwargs=dict(rounds=rounds_per_client, time_scale=time_scale,
+                    params0=params0, stats=stats), daemon=True)
+        for spec in fleet]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    server.stop()
+    params, j = server.snapshot()
+    return params, server, stats

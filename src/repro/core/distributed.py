@@ -1,0 +1,308 @@
+"""Cluster-mode CSMAAFL: the fused SPMD step (DESIGN.md §3).
+
+The control plane (``core.scheduler`` + ``core.aggregation``) decides which
+clients' updates fold into this step and computes the scalar blend
+coefficients; the data plane below is ONE jit-compiled SPMD program per
+(arch × mesh):
+
+    w_new = c0 · w_global + Σ_c c_c · w_c,
+    w_c   = LocalSGD_K(w_global, batch_c)
+
+* ``w_global`` is ZeRO-sharded over (client axes × model).
+* The per-client local models are produced by ``jax.vmap`` over the leading
+  client axis C (sharded over the client mesh axes), so each client group
+  trains its own replica in parallel — the TPU-native realization of the
+  paper's per-client local rounds.
+* The final weighted sum contracts the client axis — GSPMD lowers it to one
+  weighted all-reduce over ('pod','data'): this is eq. (3)/(11) as a
+  collective.
+
+Also provides ``make_prefill_step`` / ``make_decode_step`` for the serving
+shapes, and ``make_sfl_step`` (FedAvg on-cluster) as the paper's baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FederatedConfig, MeshConfig, ModelConfig
+from repro.models import transformer as tmod
+from repro.optim import optimizers as opt
+from repro.sharding import specs as sspec
+
+
+# ---------------------------------------------------------------------------
+# Local training: K SGD steps for one client (vmapped over clients)
+# ---------------------------------------------------------------------------
+def _local_sgd(params, batches, lr, cfg: ModelConfig, local_steps: int,
+               attn_impl: str):
+    """K plain-SGD steps (paper eq. 1).  ``batches``: pytree whose leaves
+    have leading dim K (one micro-batch per local step)."""
+
+    def one_step(p, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            tmod.loss_fn, has_aux=True)(p, cfg, batch, attn_impl=attn_impl)
+        new = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(w.dtype),
+            p, grads)
+        return new, loss
+
+    if local_steps == 1:
+        batch = jax.tree.map(lambda x: x[0], batches)
+        p, loss = one_step(params, batch)
+        return p, loss
+    p, losses = jax.lax.scan(
+        lambda carry, b: one_step(carry, b), params, batches)
+    return p, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Fused CSMAAFL train step
+# ---------------------------------------------------------------------------
+def csmaafl_train_step(global_params, batches, coefs, lr, *,
+                       cfg: ModelConfig, fed: FederatedConfig,
+                       mesh_cfg: MeshConfig, attn_impl: str = "auto",
+                       param_pspecs=None):
+    """One fused federated step.
+
+    global_params : pytree (ZeRO-sharded)
+    batches       : pytree, leaves (C, K, b, ...) — per client, per local step
+    coefs         : (C+1,) float32 — [c0, c_1..c_C] from the control plane
+                    (c0 = Πβ_j; c_c = folded (1-β)·Πβ weights; Σ == 1)
+    lr            : scalar learning rate
+
+    Returns (new_global_params, metrics).
+    """
+    num_clients = jax.tree.leaves(batches)[0].shape[0]
+    from repro.sharding.context import activation_sharding
+    from jax.sharding import PartitionSpec as _P
+
+    c0 = coefs[0].astype(jnp.float32)
+    cc = coefs[1:].astype(jnp.float32)
+
+    if fed.local_steps == 1:
+        # K=1 algebraic fast path (exact, since Σ coefs == 1):
+        #   w_new = c0·w + Σ_c c_c·(w − lr·g_c) = w − lr·Σ_c c_c·g_c
+        # Clients fold into the batch dim with per-row loss weights
+        # w_r = c_{client(r)} / tokens_per_client, so ONE backward pass
+        # computes Σ_c c_c·∇mean_c — no per-client parameter copies, no
+        # vmap (which would force the client dim replicated in sharding
+        # constraints), and the client reduction is the data-parallel
+        # gradient all-reduce itself: eq.(3)/(11) as a collective.
+        def fold(x):   # (C, K=1, b, ...) -> (C*b, ...)
+            return x.reshape(x.shape[0] * x.shape[2], *x.shape[3:])
+
+        flat = jax.tree.map(fold, batches)
+        b = jax.tree.leaves(batches)[0].shape[2]
+        seq = flat["labels"].shape[1]
+        tokens_per_client = b * seq
+        row_w = jnp.repeat(cc, b) / tokens_per_client       # (C*b,)
+        flat = dict(flat)
+        flat["row_weights"] = row_w
+        caxes = mesh_cfg.client_axes
+        cax = caxes if len(caxes) > 1 else caxes[0]
+
+        # ZeRO-3 un-shard (FSDP semantics): non-stack parameters (embed,
+        # head, norms) are all-gathered over the client axes once at step
+        # start; the layer stack is gathered PER LAYER inside the scan body
+        # (context `unzero`), so at most one layer's full weights are live.
+        # Without any pin, GSPMD contracts activations against the
+        # still-ZeRO-sharded weights and all-gathers the *global batch* of
+        # activations instead — orders of magnitude more link traffic.
+        unzero_full = sspec.param_specs(cfg, global_params, mesh_cfg,
+                                        zero=False)
+        from repro.configs.base import ENCDEC as _ENCDEC
+        per_layer_ok = cfg.family != _ENCDEC
+
+        def constrain_nonstack(p, s):
+            return {k: (jax.tree.map(jax.lax.with_sharding_constraint,
+                                     p[k], s[k])
+                        if not (per_layer_ok and k == "stack") else p[k])
+                    for k in p}
+
+        params_c = constrain_nonstack(global_params, unzero_full)
+        if per_layer_ok and not cfg.family == _ENCDEC:
+            strip = lambda sp: _P(*sp[1:])   # drop the stacked layer dim
+            unzero_ctx = {
+                "period": [jax.tree.map(strip, s)
+                           for s in unzero_full["stack"]["period"]],
+                "rem": list(unzero_full["stack"]["rem"]),
+            }
+        else:
+            params_c = jax.tree.map(jax.lax.with_sharding_constraint,
+                                    global_params, unzero_full)
+            unzero_ctx = None
+
+        carry_spec = (_P(cax, "model", None)
+                      if fed.seq_parallel_carries else None)
+
+        def grad_of(batch_slice):
+            with activation_sharding(carry_spec, unzero=unzero_ctx):
+                (l, _), g = jax.value_and_grad(
+                    tmod.loss_fn, has_aux=True)(
+                        params_c, cfg, batch_slice,
+                        attn_impl=attn_impl)
+            return l, g
+
+        M = fed.grad_accum
+        R = jax.tree.leaves(flat)[0].shape[0]
+        if M > 1 and R % M == 0:
+            # micro-batched accumulation: each micro's grads are
+            # reduce-scattered to the ZeRO layout (param_pspecs) before the
+            # f32 accumulate, so the accumulator is /N_devices-sharded
+            micro = jax.tree.map(
+                lambda x: x.reshape(M, R // M, *x.shape[1:]), flat)
+
+            def acc_body(carry, mslice):
+                l_acc, g_acc = carry
+                l, g = grad_of(mslice)
+                if param_pspecs is not None:
+                    g = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     g, param_pspecs)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              global_params)
+            if param_pspecs is not None:
+                g0 = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  g0, param_pspecs)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0), g0), micro)
+        else:
+            loss, grads = grad_of(flat)
+        losses = loss[None]
+
+        def apply(g, gr):
+            return (g.astype(jnp.float32)
+                    - lr * gr.astype(jnp.float32)).astype(g.dtype)
+
+        new_global = jax.tree.map(apply, global_params, grads)
+    else:
+        # NOTE: no activation_sharding here — inside vmap a sharding
+        # constraint would pin the mapped client dim to replicated.
+        def per_client(batches_c):
+            local, loss = _local_sgd(global_params, batches_c, lr, cfg,
+                                     fed.local_steps, attn_impl)
+            return local, loss
+
+        local_params, losses = jax.vmap(per_client)(batches)
+        # constrain the stacked client copies to the client axis
+        cspecs = sspec.client_param_specs(cfg, global_params, mesh_cfg)
+        local_params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                    local_params, cspecs)
+
+        def blend(g, locs):
+            acc = c0 * g.astype(jnp.float32)
+            acc = acc + jnp.tensordot(cc, locs.astype(jnp.float32),
+                                      axes=(0, 0))
+            return acc.astype(g.dtype)
+
+        new_global = jax.tree.map(blend, global_params, local_params)
+    metrics = {"loss_per_client": losses,
+               "loss": jnp.mean(losses),
+               "coef0": c0,
+               "num_clients": jnp.asarray(num_clients, jnp.int32)}
+    return new_global, metrics
+
+
+def make_csmaafl_step(cfg: ModelConfig, fed: FederatedConfig,
+                      mesh: jax.sharding.Mesh, mesh_cfg: MeshConfig,
+                      params_shape, *, attn_impl: str = "auto",
+                      donate: bool = True):
+    """Build the jitted fused step with explicit in/out shardings."""
+    pspecs = sspec.param_specs(cfg, params_shape, mesh_cfg, zero=True)
+    bspecs = _per_client_batch_specs(cfg, mesh_cfg)
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs),
+        NamedSharding(mesh, P()),      # coefs
+        NamedSharding(mesh, P()),      # lr
+    )
+    out_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs), None)
+    step = functools.partial(csmaafl_train_step, cfg=cfg, fed=fed,
+                             mesh_cfg=mesh_cfg, attn_impl=attn_impl)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0,) if donate else ())
+
+
+def _per_client_batch_specs(cfg: ModelConfig, mesh_cfg: MeshConfig):
+    """Leaves are (C, K, b, ...): client axis sharded, rest replicated."""
+    caxes = mesh_cfg.client_axes
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+    tok = P(cspec, None, None, None)
+    emb = P(cspec, None, None, None, None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.num_patches:
+        out["patch_embeds"] = emb
+    if cfg.enc_layers:
+        out["frame_embeds"] = emb
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SFL (FedAvg) on-cluster step — the paper's synchronous baseline
+# ---------------------------------------------------------------------------
+def make_sfl_step(cfg: ModelConfig, fed: FederatedConfig,
+                  mesh: jax.sharding.Mesh, mesh_cfg: MeshConfig,
+                  params_shape, *, attn_impl: str = "auto"):
+    """FedAvg: same fused structure with coefs = [0, α_1..α_C]."""
+    return make_csmaafl_step(cfg, fed, mesh, mesh_cfg, params_shape,
+                             attn_impl=attn_impl)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (prefill / decode shapes)
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, mesh: jax.sharding.Mesh,
+                      mesh_cfg: MeshConfig, *, attn_impl: str = "auto"):
+    bspecs = sspec.batch_spec(cfg, mesh_cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = tmod.prefill(params, cfg, batch,
+                                     attn_impl=attn_impl)
+        return logits, cache
+
+    def build(params_shape, cache_shape):
+        pspecs = sspec.param_specs(cfg, params_shape, mesh_cfg, zero=False)
+        cspecs = sspec.cache_specs(cfg, cache_shape, mesh_cfg)
+        in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+                 {k: NamedSharding(mesh, v) for k, v in bspecs.items()})
+        out_sh = (NamedSharding(mesh, P(mesh_cfg.client_axes
+                                        if len(mesh_cfg.client_axes) > 1
+                                        else mesh_cfg.client_axes[0],
+                                        None, "model")),
+                  jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs))
+        return jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh)
+    return build
+
+
+def make_decode_step(cfg: ModelConfig, mesh: jax.sharding.Mesh,
+                     mesh_cfg: MeshConfig, *, shard_seq: bool = False):
+    """decode_32k / long_500k: one token against a seq_len cache."""
+    def decode(params, token, cache, pos):
+        return tmod.decode_step(params, cfg, token, cache, pos)
+
+    def build(params_shape, cache_shape):
+        pspecs = sspec.param_specs(cfg, params_shape, mesh_cfg, zero=False)
+        cspecs = sspec.cache_specs(cfg, cache_shape, mesh_cfg,
+                                   shard_seq=shard_seq)
+        caxes = mesh_cfg.client_axes
+        cspec = caxes if len(caxes) > 1 else caxes[0]
+        tok_sh = NamedSharding(mesh, P(None if shard_seq else cspec, None))
+        in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+                 tok_sh,
+                 jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs),
+                 NamedSharding(mesh, P()))
+        out_sh = (NamedSharding(mesh,
+                                P(None if shard_seq else cspec, None, "model")),
+                  jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs))
+        return jax.jit(decode, in_shardings=in_sh, out_shardings=out_sh)
+    return build

@@ -1,0 +1,70 @@
+"""Synchronous federated learning (FedAvg) — the paper's SFL baseline.
+
+Implements §II-A: each round the server broadcasts w_t, every client runs
+local SGD from w_t, uploads, and the server aggregates with the
+sample-count coefficients α_m (eq. 2/5).  Virtual time follows the §II-C
+TDMA timing model so SFL and AFL curves share the relative-time axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.scheduler import ClientSpec, sfl_round_time
+
+LocalTrainFn = Callable[[Any, int, int, int], Any]
+# (params, cid, num_steps, round_seed) -> new_params
+EvalFn = Callable[[Any], Dict[str, float]]
+
+
+@dataclasses.dataclass
+class FLHistory:
+    """Common result record for all algorithms."""
+    times: List[float] = dataclasses.field(default_factory=list)
+    iterations: List[int] = dataclasses.field(default_factory=list)
+    metrics: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+
+    def add(self, t: float, it: int, m: Dict[str, float]) -> None:
+        self.times.append(t)
+        self.iterations.append(it)
+        self.metrics.append(m)
+
+    def series(self, key: str) -> np.ndarray:
+        return np.asarray([m[key] for m in self.metrics])
+
+
+def run_fedavg(params0, fleet: Sequence[ClientSpec],
+               local_train_fn: LocalTrainFn, *,
+               rounds: int, tau_u: float, tau_d: float,
+               eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
+               local_steps_override: Optional[int] = None,
+               seed: int = 0):
+    """Classical FedAvg (paper eq. 1-2). Returns (params, FLHistory).
+
+    ``local_steps_override`` forces the same K on all clients (the paper's
+    SFL has uniform local computation); None uses each spec's K.
+    """
+    alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+    params = params0
+    hist = FLHistory()
+    t = 0.0
+    if eval_fn is not None:
+        hist.add(t, 0, eval_fn(params))
+    for rnd in range(1, rounds + 1):
+        locals_ = []
+        for c in fleet:
+            k = local_steps_override or c.local_steps
+            locals_.append(local_train_fn(params, c.cid, k,
+                                          seed * 100003 + rnd))
+        # eq. (2): w_{t+1} = Σ α_m w_t^m
+        params = agg.weighted_sum_pytrees(
+            0.0, params, list(alpha), locals_)
+        t += sfl_round_time(fleet, tau_u=tau_u, tau_d=tau_d,
+                            local_steps=local_steps_override or 1)
+        if eval_fn is not None and rnd % eval_every == 0:
+            hist.add(t, rnd, eval_fn(params))
+    return params, hist

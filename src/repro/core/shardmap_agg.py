@@ -1,0 +1,68 @@
+"""CSMAAFL aggregation with EXPLICIT collectives via ``jax.shard_map``.
+
+The fused step in ``core/distributed.py`` expresses eq. (3)/(11) through
+GSPMD constraint propagation (one weighted contraction over the client
+axis that the partitioner lowers to an all-reduce).  This module is the
+explicit twin: the client axis is program-visible inside ``shard_map`` and
+the aggregation is literally a weighted ``jax.lax.psum`` — useful when you
+want guaranteed collective placement (or to fuse the blend with the Pallas
+``weighted_agg`` kernel per shard), and as executable documentation of the
+collective the paper's server op becomes on a TPU mesh.
+
+    w_new = psum_over_clients(c_c · w_c) + c0 · w_global
+
+Each client group holds its own locally-trained replica; ``psum`` over the
+client mesh axes IS the server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig
+
+
+def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
+                            use_kernel: bool = False):
+    """Build the explicit-collective blend.
+
+    Returns ``blend(global_params, client_params, coefs)`` where
+    ``client_params`` leaves carry a leading client dim C sharded over the
+    client mesh axes, ``coefs`` is (C+1,) [c0, c_1..c_C], and the result is
+    replicated (every group receives the new global model — the trunk-level
+    broadcast of Algorithm 1's per-iteration return).
+    """
+    caxes = mesh_cfg.client_axes
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+
+    def blend_shard(g, w_local, coefs, idx):
+        """Per-shard body: g replicated, w_local (C_local, ...) this
+        group's client replicas, idx (C_local,) their global client ids."""
+        cc = coefs[1:]
+        c_local = jnp.take(cc, idx)                 # (C_local,)
+        partial = jnp.tensordot(c_local.astype(jnp.float32),
+                                w_local.astype(jnp.float32), axes=(0, 0))
+        total = jax.lax.psum(partial, caxes)        # the server op
+        return (coefs[0].astype(jnp.float32) * g.astype(jnp.float32)
+                + total).astype(g.dtype)
+
+    def blend(global_params, client_params, coefs):
+        C = jax.tree.leaves(client_params)[0].shape[0]
+        idx = jnp.arange(C, dtype=jnp.int32)
+
+        def one_leaf(g, w):
+            f = jax.shard_map(
+                functools.partial(blend_shard),
+                mesh=mesh,
+                in_specs=(P(), P(cspec), P(), P(cspec)),
+                out_specs=P(),
+                check_vma=False)
+            return f(g, w, coefs.astype(jnp.float32), idx)
+
+        return jax.tree.map(one_leaf, global_params, client_params)
+
+    return blend

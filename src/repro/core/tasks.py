@@ -1,0 +1,151 @@
+"""Task harnesses: bind a model family + dataset to the FL loops.
+
+``CNNTask`` is the paper's §IV setup (CNN on (Fashion-)MNIST-like data);
+``LMTask`` federates a (reduced) assigned transformer architecture over
+synthetic non-IID token streams — the modern deployment of the algorithm
+used by the examples and integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig, ModelConfig
+from repro.configs.paper_cnn import CNNConfig, MNIST_CNN
+from repro.data import federated as fd
+from repro.data.mnist_like import Dataset, make_dataset
+from repro.data.synthetic import TokenStream
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tmod
+
+
+# ---------------------------------------------------------------------------
+# CNN task (paper §IV)
+# ---------------------------------------------------------------------------
+class CNNTask:
+    def __init__(self, *, variant: str = "digits", iid: bool = True,
+                 num_clients: int = 100, train_n: int = 60000,
+                 test_n: int = 10000, batch_size: int = 5, lr: float = 0.01,
+                 local_batches_per_step: int = 8,
+                 cnn_cfg: Optional[CNNConfig] = None, seed: int = 0):
+        self.cfg = cnn_cfg or MNIST_CNN
+        self.lr = lr
+        self.batch_size = batch_size
+        self.local_batches = local_batches_per_step
+        ds = make_dataset(variant, train_n=train_n, test_n=test_n, seed=seed)
+        if iid:
+            parts = fd.partition_iid(ds.train_y, num_clients, seed=seed)
+        else:
+            parts = fd.partition_label(ds.train_y, num_clients,
+                                       classes_per_client=2, seed=seed)
+        self.clients = fd.make_clients(ds.train_x, ds.train_y, parts)
+        self.test_x = jnp.asarray(ds.test_x)
+        self.test_y = jnp.asarray(ds.test_y)
+
+        @jax.jit
+        def _sgd_step(params, images, labels):
+            loss, grads = jax.value_and_grad(cnn_mod.loss_fn)(
+                params, {"images": images, "labels": labels})
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, loss
+
+        self._sgd_step = _sgd_step
+
+        @jax.jit
+        def _eval(params):
+            return cnn_mod.accuracy(params, self.test_x, self.test_y)
+
+        self._eval = _eval
+
+    def init_params(self, seed: int = 0):
+        return cnn_mod.init_params(self.cfg, jax.random.PRNGKey(seed))
+
+    def num_samples(self) -> List[int]:
+        return [c.num_samples for c in self.clients]
+
+    def local_train_fn(self, params, cid: int, num_steps: int, seed: int):
+        """K "local iterations"; each = ``local_batches`` SGD minibatches
+        (so K scales client compute as in §III-C)."""
+        client = self.clients[cid]
+        batches = client.batches(self.batch_size,
+                                 num_steps * self.local_batches, seed)
+        for b in batches:
+            params, _ = self._sgd_step(params, jnp.asarray(b["images"]),
+                                       jnp.asarray(b["labels"]))
+        return params
+
+    def eval_fn(self, params) -> Dict[str, float]:
+        return {"accuracy": float(self._eval(params))}
+
+
+# ---------------------------------------------------------------------------
+# LM task (assigned architectures, reduced configs on CPU)
+# ---------------------------------------------------------------------------
+class LMTask:
+    def __init__(self, cfg: ModelConfig, *, num_clients: int = 8,
+                 batch_size: int = 4, seq_len: int = 64, lr: float = 5e-3,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.lr = lr
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.streams = [TokenStream(cfg.vocab_size, cid=c, seed=seed)
+                        for c in range(num_clients)]
+        self.eval_stream = TokenStream(cfg.vocab_size, cid=10_007, seed=seed,
+                                       topics_per_client=16)
+        self._eval_batch = self._to_model_batch(
+            self.eval_stream.sample_batch(batch_size, seq_len))
+
+        @jax.jit
+        def _sgd_step(params, batch):
+            (loss, _), grads = jax.value_and_grad(
+                tmod.loss_fn, has_aux=True)(params, cfg, batch)
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) -
+                              lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, loss
+
+        self._sgd_step = _sgd_step
+
+        @jax.jit
+        def _eval(params):
+            loss, _ = tmod.loss_fn(params, cfg, self._eval_batch)
+            return loss
+
+        self._eval = _eval
+
+    def _to_model_batch(self, b: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        B = out["tokens"].shape[0]
+        if self.cfg.num_patches:
+            out["patch_embeds"] = jnp.zeros(
+                (B, self.cfg.num_patches, self.cfg.vision_embed_dim),
+                jnp.float32)
+        if self.cfg.enc_layers:
+            out["frame_embeds"] = jnp.zeros(
+                (B, self.seq_len // self.cfg.enc_seq_divisor,
+                 self.cfg.d_model), jnp.float32)
+        return out
+
+    def init_params(self, seed: int = 0):
+        return tmod.init_params(self.cfg, jax.random.PRNGKey(seed))
+
+    def num_samples(self) -> List[int]:
+        return [1000] * len(self.streams)
+
+    def local_train_fn(self, params, cid: int, num_steps: int, seed: int):
+        for _ in range(num_steps):
+            b = self._to_model_batch(
+                self.streams[cid].sample_batch(self.batch_size, self.seq_len))
+            params, _ = self._sgd_step(params, b)
+        return params
+
+    def eval_fn(self, params) -> Dict[str, float]:
+        return {"loss": float(self._eval(params))}

@@ -1,0 +1,75 @@
+"""Batching pipeline: host-side iterator that assembles per-client fused
+batches for the distributed trainer, with simple double-buffering.
+
+The trainer consumes `(C, K, b, ...)` batches (one leading row per client
+in the trunk); this module turns per-client sources (ClientDataset /
+TokenStream / any callable) into those arrays and overlaps host assembly
+with device compute via a one-slot prefetch queue.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+BatchSource = Callable[[int, int], Dict[str, np.ndarray]]
+# (batch_rows, seq_len) -> {"tokens": (b,S), "labels": (b,S), ...}
+
+
+def assemble_trunk(sources: Sequence[BatchSource], cids: Sequence[int],
+                   *, local_steps: int, batch_rows: int, seq_len: int,
+                   extra: Optional[Dict[str, np.ndarray]] = None
+                   ) -> Dict[str, jnp.ndarray]:
+    """Build one fused (C, K, b, ...) batch for the given trunk of client
+    ids (clients may repeat within a trunk — each occurrence samples its
+    own data, matching the paper's per-upload local rounds)."""
+    per_key: Dict[str, List[np.ndarray]] = {}
+    for cid in cids:
+        steps = [sources[cid](batch_rows, seq_len)
+                 for _ in range(local_steps)]
+        for k in steps[0]:
+            per_key.setdefault(k, []).append(
+                np.stack([s[k] for s in steps]))          # (K, b, ...)
+    out = {k: jnp.asarray(np.stack(v)) for k, v in per_key.items()}
+    if extra:
+        out.update({k: jnp.asarray(v) for k, v in extra.items()})
+    return out
+
+
+class Prefetcher:
+    """One-slot background prefetch of fused batches."""
+
+    def __init__(self, make_batch: Callable[[], Dict[str, jnp.ndarray]],
+                 depth: int = 1):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._make(), timeout=0.5)
+            except queue.Full:
+                continue
+            except Exception as e:  # propagate through the queue
+                self._q.put(e)
+                return
+
+    def next(self) -> Dict[str, jnp.ndarray]:
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,382 @@
+"""Flash attention Pallas TPU kernel (forward).
+
+TPU adaptation of the flash algorithm: VMEM-tiled online softmax with
+  * grid (B, H, num_q_blocks, num_kv_blocks); the kv dim is sequential
+    ("arbitrary"), accumulators live in VMEM scratch across kv steps;
+  * GQA without materializing repeated KV: the k/v BlockSpec index maps
+    query head h -> kv head h * Hkv // H;
+  * causal + sliding-window masking by absolute positions, with fully
+    masked (q_blk, kv_blk) tiles skipped via @pl.when (on TPU this skips
+    the MXU work; in interpret mode it is exact);
+  * optional attn-logit softcap (gemma2).
+
+Block sizes default to (128, 512) — multiples of the 128-lane MXU tiling;
+the kv block bounds the live VMEM logits tile at bq*bk*4 bytes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, logit_cap: float, causal: bool, window: int,
+               bq: int, bk: int, nk: int, seq_k: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    iq = pl.program_id(2)
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # tile-level skip: causal => no k block entirely after the q block;
+    # window => no k block entirely before the window of the last q row
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window > 0:
+        # last q row attends to [q_start+bq-1-window+1, q_start+bq-1]
+        needed = jnp.logical_and(
+            needed, k_start + bk - 1 >= q_start - window + 1) \
+            if not isinstance(needed, bool) else \
+            (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bk)
+        if logit_cap > 0.0:
+            logits = logit_cap * jnp.tanh(logits / logit_cap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k                              # padded tail
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_blk = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(logits - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m_prev == NEG_INF, 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        # log-sum-exp per q row (for the backward kernel); fully-masked
+        # rows keep a harmless finite value
+        m = jnp.where(m_scr[...] == NEG_INF, 0.0, m_scr[...])
+        lse_ref[0, 0] = m + jnp.log(l)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None,
+                        logit_cap: float = 0.0,
+                        block_q: int = 128, block_k: int = 512,
+                        interpret: bool = False, return_lse: bool = False):
+    """q (B,H,Sq,D); k/v (B,Hkv,Sk,D) with H % Hkv == 0.  Returns (B,H,Sq,D)
+    (and, with ``return_lse``, the per-row log-sum-exp for the backward).
+
+    Positions are aligned suffixes: q position i corresponds to absolute
+    position i (self-attention over the same sequence).
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    pad_q = nq * bq - Sq
+    pad_k = nk * bk - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _fa_kernel, scale=scale, logit_cap=logit_cap, causal=causal,
+        window=window, bq=bq, bk=bk, nk=nk, seq_k=Sk)
+    out, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, hkv=Hkv, hq=H:
+                         (b, h * hkv // hq, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, hkv=Hkv, hq=H:
+                         (b, h * hkv // hq, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, nq * bq), jnp.float32),
+        ],
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    out = out[:, :, :Sq, :]
+    if return_lse:
+        return out, lse[:, :, :Sq]
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (flash attention VJP)
+#
+# Standard two-kernel flash backward:
+#   * dQ kernel   — grid (B, H, nq, nk): nk sequential, dq accumulates in
+#                   VMEM scratch; K/V read through the GQA index map.
+#   * dK/dV kernel— grid (B, Hkv, nk, nq): nq sequential, dk/dv accumulate
+#                   in scratch; the `rep` query heads of each KV group are
+#                   looped inside the kernel (their contributions sum).
+# Both recompute p from (q, k, lse) — no S^2 residuals.  Softcap's VJP is
+# applied analytically: d(raw) = d(s) * (1 - (s/cap)^2).
+# ---------------------------------------------------------------------------
+def _p_block(q, k, lse, q_start, k_start, *, scale, logit_cap, causal,
+             window, bq, bk, seq_k):
+    """Recompute the (bq, bk) probability block and the softcap jacobian."""
+    raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(raw / logit_cap)
+        jac = 1.0 - (s / logit_cap) ** 2
+    else:
+        s = raw
+        jac = jnp.ones_like(raw)
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    return p, jac, mask
+
+
+def _fa_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                      dq_ref, dq_scr, *, scale, logit_cap, causal, window,
+                      bq, bk, nk, seq_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    iq = pl.program_id(2)
+    q_start, k_start = iq * bq, ik * bk
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_start + bk - 1 >= q_start - window + 1) \
+            if not isinstance(needed, bool) else \
+            (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        p, jac, _ = _p_block(q, k, lse, q_start, k_start, scale=scale,
+                             logit_cap=logit_cap, causal=causal,
+                             window=window, bq=bq, bk=bk, seq_k=seq_k)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * jac          # d raw (pre-scale)
+        dq_scr[...] += scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _fa_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                       dk_ref, dv_ref, dk_scr, dv_scr, *, scale, logit_cap,
+                       causal, window, bq, bk, nq, rep, seq_k):
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    ik = pl.program_id(2)
+    q_start, k_start = iq * bq, ik * bk
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_start + bk - 1 >= q_start - window + 1) \
+            if not isinstance(needed, bool) else \
+            (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        for r in range(rep):                        # static unroll over
+            q = q_ref[0, 0, r].astype(jnp.float32)  # the GQA group
+            do = do_ref[0, 0, r].astype(jnp.float32)
+            lse = lse_ref[0, 0, r]
+            delta = delta_ref[0, 0, r]
+            p, jac, _ = _p_block(q, k, lse, q_start, k_start, scale=scale,
+                                 logit_cap=logit_cap, causal=causal,
+                                 window=window, bq=bq, bk=bk, seq_k=seq_k)
+            dv_scr[...] += jax.lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[:, None]) * jac
+            dk_scr[...] += scale * jax.lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _emit():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
+                        scale=None, logit_cap=0.0, block_q=128,
+                        block_k=512, interpret=False):
+    """Flash-attention VJP.  q/out/dout (B,H,S,D); k/v (B,Hkv,S,D);
+    lse (B,H,S).  Returns (dq (B,H,S,D), dk/dv (B,Hkv,S,D))."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    padq, padk = nq * bq - Sq, nk * bk - Sk
+    padded = lambda x, n, ax: jnp.pad(
+        x, [(0, n if a == ax else 0) for a in range(x.ndim)]) if n else x
+    qp = padded(q, padq, 2)
+    dop = padded(dout, padq, 2)
+    lsep = padded(lse, padq, 2)
+    kp = padded(k, padk, 2)
+    vp = padded(v, padk, 2)
+    # delta = rowsum(dO * O) — cheap elementwise, computed outside
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)
+    deltap = padded(delta, padq, 2)
+
+    kern_dq = functools.partial(
+        _fa_bwd_dq_kernel, scale=scale, logit_cap=logit_cap, causal=causal,
+        window=window, bq=bq, bk=bk, nk=nk, seq_k=Sk)
+    dq = pl.pallas_call(
+        kern_dq,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=Hkv, hh=H:
+                         (b, h * g // hh, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=Hkv, hh=H:
+                         (b, h * g // hh, ik, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[_vmem((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, deltap)
+
+    # group-layout views for the dk/dv kernel
+    qg = qp.reshape(B, Hkv, rep, nq * bq, D)
+    dog = dop.reshape(B, Hkv, rep, nq * bq, D)
+    lseg = lsep.reshape(B, Hkv, rep, nq * bq)
+    deltag = deltap.reshape(B, Hkv, rep, nq * bq)
+    kern_dkv = functools.partial(
+        _fa_bwd_dkv_kernel, scale=scale, logit_cap=logit_cap, causal=causal,
+        window=window, bq=bq, bk=bk, nq=nq, rep=rep, seq_k=Sk)
+    dk, dv = pl.pallas_call(
+        kern_dkv,
+        grid=(B, Hkv, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, bq, D),
+                         lambda b, g, ik, iq: (b, g, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, g, ik, iq: (b, g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, g, ik, iq: (b, g, ik, 0)),
+            pl.BlockSpec((1, 1, rep, bq, D),
+                         lambda b, g, ik, iq: (b, g, 0, iq, 0)),
+            pl.BlockSpec((1, 1, rep, bq),
+                         lambda b, g, ik, iq: (b, g, 0, iq)),
+            pl.BlockSpec((1, 1, rep, bq),
+                         lambda b, g, ik, iq: (b, g, 0, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, D), lambda b, g, ik, iq: (b, g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, g, ik, iq: (b, g, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, nk * bk, D), k.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, nk * bk, D), v.dtype),
+        ],
+        scratch_shapes=[_vmem((bk, D), jnp.float32),
+                        _vmem((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(qg, kp, vp, dog, lseg, deltag)
+    return dq[:, :, :Sq], dk[:, :, :Sk], dv[:, :, :Sk]

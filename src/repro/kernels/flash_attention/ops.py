@@ -1,0 +1,67 @@
+"""Jit'd wrapper around the flash attention kernels with a full Pallas
+custom VJP: forward emits (out, lse); backward runs the two flash backward
+kernels (dQ; dK/dV with in-kernel GQA group accumulation) — no S^2
+residuals anywhere.
+
+Public entry: ``flash_attention(q, k, v, ...)`` in model layout
+(B, S, H, D) with unrepeated KV heads — transposed internally to the
+kernels' (B, H, S, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bwd, flash_attention_fwd)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _fa(q, k, v, causal, window, scale, logit_cap, block_q, block_k,
+        interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               scale=scale, logit_cap=logit_cap,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, scale, logit_cap, block_q, block_k,
+            interpret):
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+        interpret=interpret, return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, scale, logit_cap, block_q, block_k, interpret,
+            res, g):
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window, scale=scale,
+        logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return dq, dk, dv
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, logit_cap: float = 0.0,
+                    block_q: int = 128, block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Model layout entry point: q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    out = _fa(qt, kt, vt, causal, window, scale, logit_cap, block_q,
+              block_k, interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None,
+                  logit_cap: float = 0.0) -> jnp.ndarray:
+    """q (B,H,Sq,D); k/v (B,Hkv,Sk,D).  Naive full-materialization oracle."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_cap > 0.0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the SSD scan kernel with recompute-based custom VJP
+(backward differentiates the chunked-jnp oracle, which is numerically the
+same computation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+from repro.models.mamba2 import ssd_chunked
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd(x, dt, A, B, C, chunk=128, interpret=False):
+    y, state = ssd_scan_fwd(x, dt, A, B, C, chunk=chunk,
+                            interpret=interpret)
+    return y, state
+
+
+def _fwd(x, dt, A, B, C, chunk, interpret):
+    out = ssd(x, dt, A, B, C, chunk, interpret)
+    return out, (x, dt, A, B, C)
+
+
+def _bwd(chunk, interpret, res, cts):
+    x, dt, A, B, C = res
+
+    def f(x_, dt_, A_, B_, C_):
+        return ssd_chunked(x_, dt_, A_, B_, C_, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, A, B, C)
+    return vjp(cts)
+
+
+ssd.defvjp(_fwd, _bwd)

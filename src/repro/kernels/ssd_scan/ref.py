@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: re-exports the model's
+chunked SSD (which is itself property-tested against a sequential
+recurrence) plus the exact O(L) sequential reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked  # noqa: F401  (the oracle)
+
+
+def ssd_sequential(x, dt, A, B, C):
+    """Exact sequential recurrence (slow, ground truth).
+    x (Bt,L,H,P); dt (Bt,L,H); A (H,); B/C (Bt,L,G,N)."""
+    Bt, L, H, P = x.shape
+    G, N = B.shape[-2], B.shape[-1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                 # (Bt,H,P),(Bt,H),(Bt,H,N)x2
+        dA = jnp.exp(dt_t * A[None, :])           # (Bt,H)
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t * dt_t[..., None], b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y
+
+    s0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,29 @@
+"""Jit'd pytree wrapper for the weighted aggregation kernel.
+
+``weighted_agg_tree(coef0, global_tree, coefs, clients_tree)`` applies the
+fused blend leaf-by-leaf (each leaf flattened; clients carry a leading C
+dim).  This is the data-plane op behind ``core.aggregation.
+weighted_sum_pytrees`` when running on TPU; CPU paths use the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat
+
+
+def weighted_agg_tree(coef0: float, global_tree, coefs, clients_tree, *,
+                      block_elems: int = 65536, interpret: bool = False):
+    c = jnp.concatenate([jnp.reshape(jnp.asarray(coef0, jnp.float32), (1,)),
+                         jnp.asarray(coefs, jnp.float32)])
+
+    def leaf(g, w):
+        out = weighted_agg_flat(g.reshape(-1), w.reshape(w.shape[0], -1),
+                                c, block_elems=block_elems,
+                                interpret=interpret)
+        return out.reshape(g.shape)
+
+    return jax.tree.map(leaf, global_tree, clients_tree)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the weighted aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(global_flat: jnp.ndarray, clients_flat: jnp.ndarray,
+                     coefs: jnp.ndarray) -> jnp.ndarray:
+    """out = coefs[0]*global + Σ_c coefs[1+c]*clients[c]  (f32 accumulate)."""
+    c = coefs.astype(jnp.float32)
+    acc = c[0] * global_flat.astype(jnp.float32)
+    acc = acc + jnp.tensordot(c[1:], clients_flat.astype(jnp.float32),
+                              axes=(0, 0))
+    return acc.astype(global_flat.dtype)
+
+
+def weighted_agg_tree_ref(coef0, global_tree, coefs, clients_tree):
+    """Pytree version: clients_tree leaves have leading client dim C."""
+    def leaf(g, w):
+        c = jnp.concatenate([jnp.asarray([coef0], jnp.float32),
+                             jnp.asarray(coefs, jnp.float32)])
+        return weighted_agg_ref(g.reshape(-1),
+                                w.reshape(w.shape[0], -1), c).reshape(g.shape)
+    return jax.tree.map(leaf, global_tree, clients_tree)

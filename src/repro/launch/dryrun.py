@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production meshes, prove memory fit, and record cost/collective
+numbers for the roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --all --roofline      # adds cost compiles
+
+Per pair this produces experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, collective stats, and (with --roofline) the
+L-extrapolated exact-count roofline terms.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, all_arch_ids, get_config
+from repro.configs.base import FederatedConfig, InputShape, MeshConfig, ModelConfig
+from repro.core import distributed as dist
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.models import transformer as tmod
+from repro.roofline import analysis as ra
+from repro.sharding import specs as sspec
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Pair applicability (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+def pair_status(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None = run; otherwise the skip reason recorded in EXPERIMENTS.md."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("skip: pure full-attention architecture; long_500k requires "
+                "sub-quadratic attention (DESIGN.md §4)")
+    return None
+
+
+def _mk_cfg(cfg: ModelConfig, *, scan: bool, moe_vmap: bool = False
+            ) -> ModelConfig:
+    moe = cfg.moe
+    if moe is not None and moe_vmap:
+        moe = dataclasses.replace(moe, dispatch_mode="vmap")
+    return dataclasses.replace(cfg, scan_layers=scan, moe=moe)
+
+
+def _with_layers(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    return dataclasses.replace(cfg, num_layers=n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one (cfg, shape, mesh)
+# ---------------------------------------------------------------------------
+def lower_pair(cfg: ModelConfig, shape: InputShape, mesh, mesh_cfg: MeshConfig,
+               *, attn_impl: str = "blockwise", fed: FederatedConfig = None,
+               donate: bool = False, allow_grad_accum: bool = True,
+               attn_sp_enable: bool = True):
+    """Returns (lowered, specs_dict). Raises on sharding errors."""
+    fed = fed or FederatedConfig(local_steps=1)
+    specs = inp.input_specs(cfg, shape, mesh_cfg, fed=fed)
+    params = inp.params_struct(cfg)
+    pspecs = sspec.param_specs(cfg, params, mesh_cfg,
+                               zero=(shape.kind == "train"))
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if shape.kind == "train":
+        # micro-batch large models so per-layer activation residuals and
+        # unsharded-grad transients stay within HBM (disabled for roofline
+        # exact-count compiles: lax.scan bodies are counted once)
+        if allow_grad_accum and cfg.param_count > 1.5e9 \
+                and fed.grad_accum == 1:
+            b_rows = shape.global_batch // (inp.num_clients(mesh_cfg)
+                                            * fed.local_steps)
+            for m in (4, 2):
+                if b_rows % m == 0:
+                    fed = dataclasses.replace(fed, grad_accum=m)
+                    break
+        bspecs = dist._per_client_batch_specs(cfg, mesh_cfg)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+        step = lambda p, b, c, lr: dist.csmaafl_train_step(
+            p, b, c, lr, cfg=cfg, fed=fed, mesh_cfg=mesh_cfg,
+            attn_impl=attn_impl, param_pspecs=pspecs)
+        jf = jax.jit(step,
+                     in_shardings=(psh, bsh, NamedSharding(mesh, P()),
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(psh, None))
+        with mesh:
+            lowered = jf.lower(params, specs["batches"], specs["coefs"],
+                               specs["lr"])
+        return lowered
+
+    if shape.kind == "prefill":
+        from repro.sharding.context import activation_sharding
+        bspec = sspec.batch_spec(cfg, mesh_cfg)
+        bsh = {k: NamedSharding(mesh, v) for k, v in bspec.items()
+               if k in specs["batch"]}
+        caxes = mesh_cfg.client_axes
+        cax = caxes if len(caxes) > 1 else caxes[0]
+        step = lambda p, b: tmod.prefill(p, cfg, b, attn_impl=attn_impl)
+        # cache out_shardings: without them GSPMD keeps the filled KV cache
+        # replicated over 'model' (60L x 35k x Hkv x hd won't fit)
+        total_len = shape.seq_len + (cfg.num_patches or 0)
+        cache_shape = inp.cache_struct(cfg, shape.global_batch, total_len)
+        ocspecs = sspec.cache_specs(cfg, cache_shape, mesh_cfg)
+        # last-position logits are tiny; vocab not always divisible by 16
+        out_sh = (NamedSharding(mesh, P(cax, None, None)),
+                  jax.tree.map(lambda s: NamedSharding(mesh, s), ocspecs))
+        jf = jax.jit(step, in_shardings=(psh, bsh), out_shardings=out_sh)
+        # sequence-parallel attention when heads don't divide the model
+        # axis (§Perf: this is what rescues llava/starcoder2/qwen2 prefill)
+        m = dict(zip(mesh_cfg.axes, mesh_cfg.shape))["model"]
+        attn_sp = None
+        if attn_sp_enable and cfg.num_heads % m != 0:
+            attn_sp = (P(cax, "model", None, None),
+                       P(cax, None, None, None))
+        # prefill is forward-only: SP carries save no residual memory and
+        # only buy the AR->RS/AG factor; honor the fed knob so §Perf can
+        # measure both layouts
+        carry = (P(cax, "model", None) if fed.seq_parallel_carries
+                 else None)
+        with mesh, activation_sharding(carry, attn_sp=attn_sp):
+            lowered = jf.lower(params, specs["batch"])
+        return lowered
+
+    # decode
+    shard_seq = shape.global_batch < inp.num_clients(mesh_cfg)
+    cspecs = sspec.cache_specs(cfg, specs["cache"], mesh_cfg,
+                               shard_seq=shard_seq)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    caxes = mesh_cfg.client_axes
+    cax = caxes if len(caxes) > 1 else caxes[0]
+    tok_sh = NamedSharding(mesh, P(None if shard_seq else cax, None))
+    step = lambda p, t, c, pos: tmod.decode_step(p, cfg, t, c, pos)
+    logit_sh = NamedSharding(mesh, P(None if shard_seq else cax, None, None))
+    jf = jax.jit(step, in_shardings=(psh, tok_sh, csh,
+                                     NamedSharding(mesh, P())),
+                 out_shardings=(logit_sh, csh))
+    with mesh:
+        lowered = jf.lower(params, specs["token"], specs["cache"],
+                           specs["pos"])
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost compiles (exact-count variant, single-pod)
+# ---------------------------------------------------------------------------
+def roofline_terms(cfg: ModelConfig, shape: InputShape, mesh,
+                   mesh_cfg: MeshConfig) -> Dict[str, Any]:
+    """Unrolled L=P / L=2P exact-count compiles + layer extrapolation."""
+    Pat = len(cfg.block_pattern)
+    l_small, l_big = Pat, 2 * Pat
+    chips = mesh_cfg.num_devices
+    terms = []
+    for L in (l_small, l_big):
+        c = _mk_cfg(_with_layers(cfg, L), scan=False, moe_vmap=True)
+        lowered = lower_pair(c, shape, mesh, mesh_cfg, attn_impl="naive",
+                             allow_grad_accum=False)
+        compiled = lowered.compile()
+        terms.append(ra.terms_from_compiled(compiled, chips))
+    full = ra.extrapolate_layers(terms[0], terms[1], l_small, l_big,
+                                 cfg.num_layers)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    kind = "train" if shape.kind == "train" else "infer"
+    if cfg.family == "encdec":
+        # split N between stacks: decoder params see B*S tokens, encoder
+        # params see B*S/enc_seq_divisor frames
+        import dataclasses as _dc
+        n_total = cfg.active_param_count
+        dec_only = _dc.replace(cfg, enc_layers=0)
+        n_dec = dec_only.active_param_count
+        n_enc = n_total - n_dec
+        mf = (ra.model_flops(n_dec, tokens, kind)
+              + ra.model_flops(n_enc, tokens // cfg.enc_seq_divisor, kind))
+    else:
+        mf = ra.model_flops(cfg.active_param_count, tokens, kind)
+    mf_per_chip = mf / chips
+    return {
+        "terms_small": terms[0].as_dict(),
+        "terms_big": terms[1].as_dict(),
+        "terms_full": full.as_dict(),
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / full.flops
+                               if full.flops else None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main driver
+# ---------------------------------------------------------------------------
+def run_one(arch: str, shape_name: str, mesh_name: str, *,
+            do_roofline: bool = False, save: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "timestamp": time.time(),
+    }
+    skip = pair_status(cfg, shape)
+    if skip:
+        rec["status"] = skip
+        _save(rec, save)
+        return rec
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mcfg = mesh_config(multi_pod=multi)
+    try:
+        t0 = time.time()
+        cfg_run = _mk_cfg(cfg, scan=True)
+        lowered = lower_pair(cfg_run, shape, mesh, mcfg)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        peak = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        # CPU-backend bf16->f32 legalization audit (EXPERIMENTS.md §Dry-run)
+        infl = ra.cpu_bf16_inflation_bytes(hlo_text)
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": peak,
+            "cpu_bf16_inflation_bytes": infl,
+            "peak_tpu_estimate_bytes": max(peak - infl, 0),
+            "fits_16GB": peak < 16e9,
+            "fits_16GB_tpu_estimate": (peak - infl) < 16e9,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "optimal_seconds")}
+        coll = ra.parse_collectives(hlo_text)
+        rec["collectives"] = {
+            "counts": coll.counts,
+            "bytes_by_kind": coll.bytes_by_kind,
+            "link_bytes_by_kind": coll.link_bytes_by_kind,
+        }
+        rec["status"] = "ok"
+        if do_roofline and mesh_name == "single":
+            t0 = time.time()
+            rec["roofline"] = roofline_terms(cfg, shape, mesh, mcfg)
+            rec["roofline_s"] = round(time.time() - t0, 2)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _save(rec, save)
+    return rec
+
+
+def _save(rec: Dict[str, Any], save: bool) -> None:
+    if not save:
+        return
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ([a for a in all_arch_ids() if a != "paper-cnn"]
+             if args.all or not args.arch else [args.arch])
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            for mname in meshes:
+                rec = run_one(arch, shp, mname, do_roofline=args.roofline)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    pk = rec["memory"]["peak_bytes_per_device"] / 2**30
+                    extra = (f" peak={pk:.2f}GiB lower={rec['lower_s']}s "
+                             f"compile={rec['compile_s']}s")
+                elif status.startswith("FAIL"):
+                    failures += 1
+                print(f"[{arch} × {shp} × {mname}] {status}{extra}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh_cfg, step)`` returns the abstract arguments
+that ``dryrun`` lowers against, for the three step kinds:
+
+  * train   — per-client batches (C, K, b, S) + coefs + lr
+  * prefill — request batch (B, S)
+  * decode  — one token (B, 1) + KV/SSM cache of seq_len + position
+
+The [audio]/[vlm] modality carve-out lives here: frame/patch embeddings
+are supplied as ready-made arrays of the right shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ENCDEC, FederatedConfig, InputShape,
+                                MeshConfig, ModelConfig, VLM)
+from repro.models import transformer as tmod
+
+
+def num_clients(mesh_cfg: MeshConfig) -> int:
+    n = 1
+    for ax, s in zip(mesh_cfg.axes, mesh_cfg.shape):
+        if ax != "model":
+            n *= s
+    return n
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _batch_struct(cfg: ModelConfig, lead: Tuple[int, ...], seq: int,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Token batch with modality stubs; ``lead`` prefixes (e.g. (C, K, b))."""
+    out = {"tokens": sds((*lead, seq), jnp.int32),
+           "labels": sds((*lead, seq), jnp.int32)}
+    if cfg.family == VLM:
+        # patches replace a prefix of the text positions; total consumed
+        # context = num_patches + seq text tokens
+        out["patch_embeds"] = sds((*lead, cfg.num_patches,
+                                   cfg.vision_embed_dim), dtype)
+    if cfg.family == ENCDEC:
+        out["frame_embeds"] = sds((*lead, seq // cfg.enc_seq_divisor,
+                                   cfg.d_model), dtype)
+    return out
+
+
+def params_struct(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: tmod.init_params(cfg, k, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: tmod.init_cache(cfg, batch, max_len, dtype=dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh_cfg: MeshConfig,
+                *, fed: FederatedConfig = None) -> Dict[str, Any]:
+    """Abstract inputs for the step this (cfg, shape) pair lowers."""
+    fed = fed or FederatedConfig()
+    if shape.kind == "train":
+        C = num_clients(mesh_cfg)
+        K = fed.local_steps
+        b = shape.global_batch // (C * K)
+        assert b >= 1, (shape.global_batch, C, K)
+        return {
+            "batches": _batch_struct(cfg, (C, K, b), shape.seq_len),
+            "coefs": sds((C + 1,), jnp.float32),
+            "lr": sds((), jnp.float32),
+        }
+    if shape.kind == "prefill":
+        return {"batch": _batch_struct(cfg, (shape.global_batch,),
+                                       shape.seq_len)}
+    if shape.kind == "decode":
+        B = shape.global_batch
+        return {
+            "token": sds((B, 1), jnp.int32),
+            "cache": cache_struct(cfg, B, shape.seq_len),
+            "pos": sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

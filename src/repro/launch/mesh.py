@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time — meshes are built inside
+functions only.  The dry-run sets XLA_FLAGS for 512 placeholder host
+devices *before* importing jax (see dryrun.py's first two lines).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import (MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH
+
+
+def make_mesh_from_config(mc: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        mc.shape, mc.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Tiny mesh over however many devices the host actually has (tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1,) * (len(axes) - 1) + (n,) if n > 1 else (1,) * len(axes), axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

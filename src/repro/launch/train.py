@@ -1,0 +1,152 @@
+"""Production federated trainer: control plane (scheduler + coefficients)
+driving the fused SPMD data plane (core/distributed.py).
+
+On a real cluster the mesh is the production 16x16 / 2x16x16; on this CPU
+container it runs end-to-end on the host's single device with a (1,1)
+mesh and a reduced config — the SAME code path, so this doubles as the
+integration test for the distribution layer.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2-0.5b --reduced --steps 20 --algorithm csmaafl
+
+Each fused step folds a *trunk* of scheduler-approved uploads into one
+weighted collective (DESIGN.md §3): the scheduler yields the next C
+uploads, ``fold_sequential_blends`` turns their per-iteration β_j into the
+(c0, coefs) vector, and the jitted step applies local SGD + the blend.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.configs.base import (FederatedConfig, MeshConfig, SINGLE_POD_MESH,
+                                MULTI_POD_MESH)
+from repro.core import aggregation as agg
+from repro.core import distributed as dist
+from repro.core.scheduler import AFLScheduler, make_fleet
+from repro.data.synthetic import TokenStream
+from repro.models import transformer as tmod
+from repro.sharding import specs as sspec
+
+
+def build_mesh(name: str):
+    if name == "host":
+        mc = MeshConfig((1, 1), ("data", "model"))
+    elif name == "single":
+        mc = SINGLE_POD_MESH
+    else:
+        mc = MULTI_POD_MESH
+    mesh = jax.make_mesh(mc.shape, mc.axes,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(mc.axes))
+    return mesh, mc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale variant of the arch")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--algorithm", default="csmaafl",
+                    choices=["csmaafl", "fedavg"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--gamma", type=float, default=0.4)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="simulated clients (folded per fused step)")
+    ap.add_argument("--batch", type=int, default=2, help="rows per client")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--save", default=None, help="checkpoint path")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    fed = FederatedConfig(num_clients=args.clients, algorithm=args.algorithm,
+                          gamma=args.gamma, lr=args.lr)
+    mesh, mcfg = build_mesh(args.mesh)
+
+    key = jax.random.PRNGKey(0)
+    params = tmod.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params:,} mesh={mcfg.shape} "
+          f"algorithm={args.algorithm}")
+
+    # data: one non-IID stream per client
+    streams = [TokenStream(cfg.vocab_size, cid=c, seed=0)
+               for c in range(args.clients)]
+
+    # control plane
+    fleet = make_fleet(args.clients, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[1000] * args.clients, seed=0)
+    sched = AFLScheduler(fleet, tau_u=0.05, tau_d=0.05)
+    events = sched.events(args.steps * args.clients)
+    tracker = agg.StalenessTracker(momentum=fed.mu_momentum)
+    alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+
+    # data plane
+    step_fn = dist.make_csmaafl_step(cfg, fed, mesh, mcfg, params,
+                                     donate=False)
+
+    def make_batches(cids: List[int]):
+        toks, labs = [], []
+        for cid in cids:
+            b = streams[cid].sample_batch(args.batch, args.seq)
+            toks.append(b["tokens"][None])     # (K=1, b, S)
+            labs.append(b["labels"][None])
+        out = {"tokens": jnp.asarray(np.stack(toks)),
+               "labels": jnp.asarray(np.stack(labs))}
+        if cfg.num_patches:
+            out["patch_embeds"] = jnp.zeros(
+                (len(cids), 1, args.batch, cfg.num_patches,
+                 cfg.vision_embed_dim), jnp.float32)
+        if cfg.enc_layers:
+            out["frame_embeds"] = jnp.zeros(
+                (len(cids), 1, args.batch,
+                 args.seq // cfg.enc_seq_divisor, cfg.d_model), jnp.float32)
+        return out
+
+    t0 = time.time()
+    with mesh:
+        for step in range(args.steps):
+            # gather one trunk of C uploads from the scheduler
+            trunk = [next(events) for _ in range(args.clients)]
+            if args.algorithm == "fedavg":
+                c0, coefs = 0.0, [float(alpha[e.cid]) for e in trunk]
+                s = sum(coefs)
+                coefs = [c / s for c in coefs]
+            else:
+                betas = []
+                for e in trunk:
+                    mu = tracker.update(e.staleness)
+                    one_minus = agg.staleness_coefficient(
+                        e.j, e.i, mu, fed.gamma)
+                    betas.append(1.0 - one_minus)
+                c0, coefs = agg.fold_sequential_blends(betas)
+            coef_vec = jnp.asarray([c0] + list(coefs), jnp.float32)
+            batches = make_batches([e.cid for e in trunk])
+            params, metrics = step_fn(params, batches, coef_vec,
+                                      jnp.float32(fed.lr))
+            if step % max(args.steps // 10, 1) == 0 or \
+                    step == args.steps - 1:
+                print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                      f"c0={float(metrics['coef0']):.3f} "
+                      f"t={time.time()-t0:.1f}s")
+    if args.save:
+        ckpt.save(args.save, params, step=args.steps,
+                  metadata={"arch": cfg.arch_id})
+        print("checkpoint saved to", args.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models import (attention, blocks, cnn, layers, mamba2, moe,
+                          transformer)  # noqa: F401

@@ -1,0 +1,129 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+Each optimizer is (init, update):
+    state = init(params)
+    new_params, new_state = update(params, grads, state, lr)
+
+Provided: sgd, momentum, adam, adamw; plus global-norm clipping and LR
+schedules.  The paper's clients use plain SGD (eq. 1, η = 0.01); Adam/AdamW
+are provided for the server-side optimizer extension (FedOpt-style,
+beyond-paper) and for the LLM fine-tuning examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+def sgd():
+    def init(params):
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+    return init, update
+
+
+def momentum(mu: float = 0.9, nesterov: bool = False):
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(params, grads, state, lr):
+        m = jax.tree.map(lambda m_, g: mu * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            step = jax.tree.map(lambda g, m_: g.astype(jnp.float32) + mu * m_,
+                                grads, m)
+        else:
+            step = m
+        new = jax.tree.map(
+            lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+            params, step)
+        return new, {"m": m}
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+    return init, update
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01):
+    return adam(b1, b2, eps, weight_decay)
+
+
+def get_optimizer(name: str, **kw):
+    return {"sgd": sgd, "momentum": momentum, "adam": adam,
+            "adamw": adamw}[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping & schedules
+# ---------------------------------------------------------------------------
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

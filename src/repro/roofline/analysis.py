@@ -1,0 +1,232 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips × PEAK_FLOPS)
+  memory     = HLO_bytes / (chips × HBM_BW)
+  collective = collective_bytes / (chips × LINK_BW)
+
+Sources:
+  * ``compiled.cost_analysis()`` → flops, bytes accessed.
+  * collective_bytes — NOT in cost_analysis: parsed from the compiled HLO
+    text by summing operand+output sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops (ring-traffic
+    corrected per op kind).
+
+Scan caveat (measured, see DESIGN.md §6): XLA counts a ``while`` body ONCE,
+so scanned programs under-count.  Roofline cost compiles therefore use the
+*unrolled exact-count variant* (naive attention, vmap MoE dispatch,
+unrolled layers at L=P and L=2P) and extrapolate:
+    total(L) = c(P) + (L-P)/P * (c(2P) - c(P)).
+The deployable scanned program is compiled separately for the memory-fit
+check; both are recorded.
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "tuple": 0, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_REPL_RE_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_REPL_RE_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] token in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]        # raw output-shape bytes
+    link_bytes_by_kind: Dict[str, int]   # ring-corrected traffic estimate
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_link_bytes(self) -> int:
+        return sum(self.link_bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Parse collective ops from HLO text.
+
+    Per op we take the *output* shape bytes (for all-reduce in==out; for
+    all-gather the output is the full gathered tensor; for reduce-scatter
+    the full tensor is the input — we recover it as out*group).  Ring
+    traffic per participant ≈ size*(g-1)/g for AG/RS/AR(×2), size for
+    permute, size*(g-1)/g for all-to-all.
+    """
+    counts = {k: 0 for k in _COLLECTIVES}
+    raw = {k: 0 for k in _COLLECTIVES}
+    link = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        counts[kind] += 1
+        raw[kind] += out_bytes
+        g = 1
+        mg = _REPL_RE_LIST.search(ls)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _REPL_RE_IOTA.search(ls)
+            if mi:
+                g = int(mi.group(2))   # [num_groups, group_size]<=[...]
+        if g <= 1:
+            factor_bytes = 0.0
+        elif kind == "all-reduce":
+            factor_bytes = 2.0 * out_bytes * (g - 1) / g
+        elif kind == "all-gather":
+            factor_bytes = out_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            factor_bytes = out_bytes * (g - 1)   # out is the scattered shard
+        elif kind == "all-to-all":
+            factor_bytes = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            factor_bytes = out_bytes
+        link[kind] += factor_bytes
+    return CollectiveStats(counts, raw,
+                           {k: int(v) for k, v in link.items()})
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All quantities are PER CHIP: ``cost_analysis()`` reports the
+    post-SPMD per-device module (verified empirically: partitioning a
+    matmul over 16 devices divides reported flops by 16)."""
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip bytes accessed
+    collective_link_bytes: float # per-chip link traffic estimate
+    chips: int                   # recorded for context only
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+        }
+
+
+def terms_from_compiled(compiled, chips: int,
+                        hlo_text: Optional[str] = None) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    return RooflineTerms(flops=flops, hbm_bytes=byts,
+                         collective_link_bytes=coll.total_link_bytes,
+                         chips=chips)
+
+
+def extrapolate_layers(t_small: RooflineTerms, t_big: RooflineTerms,
+                       layers_small: int, layers_big: int,
+                       layers_total: int) -> RooflineTerms:
+    """total(L) = c(P) + (L-P)/P' * (c(2P)-c(P)), P' = layers_big-small."""
+    dl = layers_big - layers_small
+    k = (layers_total - layers_small) / dl
+
+    def ext(a, b):
+        return a + k * (b - a)
+
+    return RooflineTerms(
+        flops=ext(t_small.flops, t_big.flops),
+        hbm_bytes=ext(t_small.hbm_bytes, t_big.hbm_bytes),
+        collective_link_bytes=ext(t_small.collective_link_bytes,
+                                  t_big.collective_link_bytes),
+        chips=t_small.chips)
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference forward)."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+_CONVERT_RE = re.compile(
+    r"=\s*f32\[([0-9,]+)\]\S*\s+convert\(")
+
+
+def cpu_bf16_inflation_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> int:
+    """Estimate of CPU-backend bf16->f32 legalization inflation: the CPU
+    dot/elementwise legalizer materializes f32 copies of bf16 tensors that
+    TPU (native bf16 MXU/VPU) never creates.  Sums the sizes of all large
+    f32 ``convert`` outputs; each such buffer costs 2x its bf16 source, so
+    the TPU-true peak is approximately
+        peak_adjusted = peak - sum(f32_convert_bytes) / 2 * ... (upper bound:
+    we subtract the full f32 size when the convert would not exist at all,
+    which is the common case for weight/KV stacks feeding dots).
+    Reported as an ESTIMATE in EXPERIMENTS.md, never used to claim fit on
+    its own without the accompanying buffer audit."""
+    total = 0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            total += b
+    return total

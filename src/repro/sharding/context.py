@@ -1,0 +1,69 @@
+"""Activation-sharding hints: a tiny context bridge between the launch
+layer (which knows the mesh) and the model code (which shouldn't).
+
+The distributed step builders install a PartitionSpec for the *inter-layer
+activation carry* (rank-3 (B, S, d) as seen inside the step — for the
+vmapped federated step the client dim is already mapped away).  The stack
+scan constrains its carry to it, which:
+
+  * shards the rematted per-layer residuals over the 'model' axis along
+    the sequence dim (Megatron-style sequence parallelism for storage) —
+    without this, every saved carry is replicated over the model axis and
+    the 16-chip group stores 16 copies;
+  * lets GSPMD place the all-gather (before attention/MLP) and
+    reduce-scatter (after) exactly like hand-written SP.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import PartitionSpec
+
+_ACT_SPEC: Optional[PartitionSpec] = None
+_BLOCK_SPEC: Optional[PartitionSpec] = None
+_ATTN_SP_SPECS = None   # (q_spec, kv_spec) for sequence-parallel attention
+_UNZERO_SPECS = None    # {"period": [spec pytrees], "rem": [...]}: per-layer
+                        # ZeRO-3 gather specs applied INSIDE the layer scan
+
+
+@contextlib.contextmanager
+def activation_sharding(spec: Optional[PartitionSpec],
+                        block_spec: Optional[PartitionSpec] = None,
+                        attn_sp: Optional[tuple] = None,
+                        unzero: Optional[dict] = None):
+    """``spec``: inter-layer carry layout (sequence-parallel storage).
+    ``block_spec``: layout of the *normed block input* — batch-sharded,
+    sequence/d replicated — which pins GSPMD to Megatron tensor parallelism
+    inside attention/MLP (heads/ff sharded) instead of gathering weights.
+    ``attn_sp``: (q_spec, kv_spec) rank-4 (B,S,H,D) specs forcing
+    sequence-parallel attention — used when the head count does not divide
+    the model axis (llava 56H, starcoder2 24H, qwen2 14H on a 16-wide
+    axis): queries stay sequence-sharded, K/V replicate within the group,
+    each shard computes its q-rows against all keys."""
+    global _ACT_SPEC, _BLOCK_SPEC, _ATTN_SP_SPECS, _UNZERO_SPECS
+    prev = (_ACT_SPEC, _BLOCK_SPEC, _ATTN_SP_SPECS, _UNZERO_SPECS)
+    _ACT_SPEC = spec
+    _BLOCK_SPEC = block_spec
+    _ATTN_SP_SPECS = attn_sp
+    _UNZERO_SPECS = unzero
+    try:
+        yield
+    finally:
+        _ACT_SPEC, _BLOCK_SPEC, _ATTN_SP_SPECS, _UNZERO_SPECS = prev
+
+
+def get_activation_spec() -> Optional[PartitionSpec]:
+    return _ACT_SPEC
+
+
+def get_block_spec() -> Optional[PartitionSpec]:
+    return _BLOCK_SPEC
+
+
+def get_attn_sp_specs():
+    return _ATTN_SP_SPECS
+
+
+def get_unzero_specs():
+    return _UNZERO_SPECS

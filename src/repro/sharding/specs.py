@@ -1,0 +1,274 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the client mesh.
+
+Mesh axes:
+  * ``model``            — tensor/expert parallelism *within* a client group
+  * ``data`` (+ ``pod``) — one client group per index: the FL "client" axis;
+                           also the ZeRO/FSDP storage axis for the *global*
+                           (server) copy of the parameters.
+
+Rules are computed programmatically from the parameter path + shape with
+divisibility checks (heads/experts not divisible by the model-axis size
+fall back to replication — e.g. qwen2's 14 heads on a 16-wide axis).
+
+Spec producers:
+  * ``param_specs(cfg, params, mesh_cfg, zero=...)``   — global copy
+  * ``client_param_specs(...)``                        — vmapped (C, ...) copy
+  * ``batch_specs(...)``                               — input batches
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig
+
+
+def _divisible(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _axis_size(mesh_cfg: MeshConfig, name: str) -> int:
+    for ax, sz in zip(mesh_cfg.axes, mesh_cfg.shape):
+        if ax == name:
+            return sz
+    return 1
+
+
+def _client_axes(mesh_cfg: MeshConfig) -> Tuple[str, ...]:
+    return mesh_cfg.client_axes
+
+
+def _client_size(mesh_cfg: MeshConfig) -> int:
+    n = 1
+    for ax in _client_axes(mesh_cfg):
+        n *= _axis_size(mesh_cfg, ax)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Core rule: spec for one parameter leaf
+# ---------------------------------------------------------------------------
+def leaf_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+              mesh_cfg: MeshConfig, *, zero: bool, stacked: bool) -> P:
+    """PartitionSpec for one parameter.
+
+    ``zero``: additionally shard one replicated dim over the client axes
+    (ZeRO-3 storage for the global/server copy).
+    ``stacked``: leading dim is the scan-over-layers axis (never sharded).
+    """
+    m = _axis_size(mesh_cfg, "model")
+    spec: list = [None] * len(shape)
+    core = shape[1:] if stacked else shape
+    off = 1 if stacked else 0
+
+    def set_model(rel_dim: int) -> bool:
+        if _divisible(core[rel_dim], m):
+            spec[off + rel_dim] = "model"
+            return True
+        return False
+
+    leaf = path.split("/")[-1]
+    # ---- attention ----
+    if leaf in ("wq", "wk", "wv"):            # (d, H, hd): shard heads
+        if not set_model(1):
+            set_model(0)                      # fall back: shard d_model
+    elif leaf == "wo":                        # (H, hd, d): shard heads
+        if not set_model(0):
+            set_model(2)
+    elif leaf in ("bq", "bk", "bv"):          # (H, hd)
+        set_model(0)
+    # ---- mlp ----
+    elif leaf in ("w_in", "w_gate") and len(core) == 2:   # (d, ff)
+        set_model(1)
+    elif leaf == "w_out" and len(core) == 2:              # (ff, d)
+        set_model(0)
+    # ---- moe (E, d, ff) / (E, ff, d) ----
+    elif leaf in ("w_in", "w_gate") and len(core) == 3:
+        if not set_model(0):                  # expert-parallel if E % m == 0
+            set_model(2)                      # else tensor-parallel inside
+    elif leaf == "w_out" and len(core) == 3:
+        if not set_model(0):
+            set_model(1)
+    elif leaf == "router":
+        pass                                  # tiny, replicate
+    # ---- mamba2 ----
+    elif leaf == "in_proj":                   # (d, packed-out)
+        set_model(1)                          # boundaries are shard-aligned
+    elif leaf == "out_proj":                  # (d_in, d)
+        set_model(0)
+    elif leaf in ("conv_w",):                 # (K, conv_dim)
+        set_model(1)
+    elif leaf in ("conv_b", "norm_scale"):    # (conv_dim,) / (d_in,)
+        set_model(0)
+    elif leaf in ("A_log", "D", "dt_bias"):   # (nh,)
+        set_model(0)
+    # ---- embeddings ----
+    elif leaf in ("embed", "lm_head"):        # (V, d): shard vocab
+        set_model(0)
+    elif leaf == "w" and "vis_proj" in path:  # (vis_d, d)
+        set_model(1)
+    # everything else (norm scales, biases) stays replicated over model
+
+    # ---- ZeRO: shard one remaining dim over the client axes ----
+    if zero:
+        c = _client_size(mesh_cfg)
+        caxes = _client_axes(mesh_cfg)
+        # prefer the largest unsharded core dim
+        order = sorted(range(len(core)), key=lambda i: -core[i])
+        for rel in order:
+            if spec[off + rel] is None and _divisible(core[rel], c):
+                spec[off + rel] = caxes if len(caxes) > 1 else caxes[0]
+                break
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Pytree walkers
+# ---------------------------------------------------------------------------
+def _is_stacked(path: str, cfg: ModelConfig) -> bool:
+    """Period-scan params carry a leading (n_full,) axis."""
+    return "/period/" in path or path.startswith("period/") or \
+        "/stacked/" in path or path.startswith("stacked/")
+
+
+def _walk(tree: Any, prefix: str = ""):
+    """Yield (path, leaf) with '/'-joined dict keys / list indices."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}{i}/")
+    else:
+        yield prefix[:-1], tree
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh_cfg: MeshConfig,
+                *, zero: bool = True) -> Any:
+    """Specs for the global (server) parameter copy: model-parallel +
+    optional ZeRO over client axes."""
+    flat = {p: l for p, l in _walk(params)}
+    specs = {p: leaf_spec(p, np.shape(l), cfg, mesh_cfg, zero=zero,
+                          stacked=_is_stacked(p, cfg))
+             for p, l in flat.items()}
+    return _unflatten_like(params, specs)
+
+
+def client_param_specs(cfg: ModelConfig, params: Any, mesh_cfg: MeshConfig
+                       ) -> Any:
+    """Specs for the per-client stacked copy (leading C axis over the client
+    mesh axes; inner dims model-parallel, no ZeRO)."""
+    caxes = _client_axes(mesh_cfg)
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+    flat = {p: l for p, l in _walk(params)}
+    specs = {}
+    for p, l in flat.items():
+        inner = leaf_spec(p, np.shape(l), cfg, mesh_cfg, zero=False,
+                          stacked=_is_stacked(p, cfg))
+        specs[p] = P(cspec, *inner)
+    return _unflatten_like(params, specs)
+
+
+def _unflatten_like(tree: Any, flat: Dict[str, Any], prefix: str = ""):
+    if isinstance(tree, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = type(tree)
+        return t(_unflatten_like(v, flat, f"{prefix}{i}/")
+                 for i, v in enumerate(tree))
+    return flat[prefix[:-1]]
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ModelConfig, mesh_cfg: MeshConfig, *,
+               per_client: bool = False) -> Dict[str, P]:
+    """Specs for one training batch dict.  ``per_client`` adds the leading
+    client axis used by the fused federated step ((C, b, S) tokens)."""
+    caxes = _client_axes(mesh_cfg)
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+    if per_client:
+        tok = P(cspec, None, None)
+        emb = P(cspec, None, None, None)
+    else:
+        tok = P(cspec, None)
+        emb = P(cspec, None, None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.num_patches:
+        out["patch_embeds"] = emb
+    if cfg.enc_layers:
+        out["frame_embeds"] = emb
+    return out
+
+
+def activation_spec(mesh_cfg: MeshConfig) -> P:
+    caxes = _client_axes(mesh_cfg)
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+    return P(cspec, None, None)
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, mesh_cfg: MeshConfig,
+                *, shard_seq: bool = False) -> Any:
+    """Specs for KV/SSM caches.
+
+    Default: batch dim over client axes, heads over 'model'.
+    ``shard_seq`` (long_500k, batch=1): shard the cache *sequence* dim over
+    the 'data' axis instead (flash-decode style), heads over 'model'.
+    """
+    m = _axis_size(mesh_cfg, "model")
+    caxes = _client_axes(mesh_cfg)
+    cspec = caxes if len(caxes) > 1 else caxes[0]
+
+    def spec_for(path: str, leaf: Any) -> P:
+        shape = np.shape(leaf)
+        stacked = _is_stacked(path, cfg)
+        core = shape[1:] if stacked else shape
+        off = 1 if stacked else 0
+        s: list = [None] * len(shape)
+        leafname = path.split("/")[-1]
+        if leafname in ("k", "v"):            # (B, L, Hkv, hd)
+            heads_ok = _divisible(core[2], m)
+            if shard_seq:
+                # long_500k (batch=1): flash-decode over a seq-sharded cache
+                if heads_ok:
+                    s[off + 1] = caxes if len(caxes) > 1 else caxes[0]
+                    s[off + 2] = "model"
+                else:
+                    s[off + 1] = (*caxes, "model")
+            else:
+                s[off + 0] = cspec
+                if heads_ok:
+                    s[off + 2] = "model"
+                elif _divisible(core[3], m):
+                    # shard head_dim: the in-place cache update stays local
+                    # (no resharding of the L dim), attention contracts hd
+                    # with a small partial-logit all-reduce
+                    s[off + 3] = "model"
+                else:
+                    s[off + 1] = "model"      # flash-decode within group
+        elif leafname == "slot_pos":          # (L,) int32 — replicate
+            pass
+        elif leafname == "conv":              # (B, K-1, conv_dim)
+            if not shard_seq:
+                s[off + 0] = cspec
+            if _divisible(core[2], m):
+                s[off + 2] = "model"
+        elif leafname == "ssm":               # (B, nh, hd, N)
+            if not shard_seq:
+                s[off + 0] = cspec
+            if _divisible(core[1], m):
+                s[off + 1] = "model"
+        elif leafname == "enc_out":           # (B, S_enc, d)
+            if shard_seq:
+                s[1] = "data"
+            else:
+                s[0] = cspec
+        return P(*s)
+
+    flat = {p: spec_for(p, l) for p, l in _walk(cache)}
+    return _unflatten_like(cache, flat)

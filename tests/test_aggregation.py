@@ -1,0 +1,148 @@
+"""Unit + property tests for the paper's aggregation math (eqs. 3, 5, 7-11).
+
+hypothesis is unavailable offline; ``_property`` below is a minimal
+stand-in: it sweeps many seeded random cases and reports the failing seed.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import aggregation as agg
+
+
+def _property(n_cases):
+    def deco(fn):
+        def wrapper():
+            for seed in range(n_cases):
+                try:
+                    fn(np.random.default_rng(seed))
+                except AssertionError as e:
+                    raise AssertionError(f"failing seed={seed}: {e}") from e
+        wrapper.__name__ = fn.__name__
+        return wrapper
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# eq. (5)
+# ---------------------------------------------------------------------------
+def test_sfl_alpha_normalizes():
+    a = agg.sfl_alpha([600, 600, 1200])
+    assert np.allclose(a, [0.25, 0.25, 0.5])
+    assert np.isclose(a.sum(), 1.0)
+
+
+def test_sfl_alpha_rejects_empty_client():
+    with pytest.raises(ValueError):
+        agg.sfl_alpha([100, 0, 50])
+
+
+# ---------------------------------------------------------------------------
+# eqs. (7)-(10): the triangular beta solve
+# ---------------------------------------------------------------------------
+@_property(50)
+def test_solve_betas_reproduces_alpha(rng):
+    M = int(rng.integers(2, 40))
+    alpha = rng.dirichlet(np.ones(M) * rng.uniform(0.5, 10))
+    schedule = list(rng.permutation(M))
+    betas = agg.solve_betas(alpha, schedule)
+    assert agg.verify_betas(alpha, schedule, betas, atol=1e-8)
+    # β_1 must vanish: the initial model's residual weight is 0
+    assert abs(betas[0]) < 1e-8
+    assert np.all(betas >= 0) and np.all(betas <= 1)
+
+
+@_property(20)
+def test_solve_betas_matches_sequential_blend(rng):
+    """Applying eq.(3) M times with the solved betas == SFL aggregation."""
+    M = int(rng.integers(2, 12))
+    D = 5
+    alpha = rng.dirichlet(np.ones(M) * 3)
+    schedule = list(rng.permutation(M))
+    betas = agg.solve_betas(alpha, schedule)
+    w0 = rng.normal(size=D)
+    client_models = rng.normal(size=(M, D))
+    # sequential AFL blends in schedule order
+    w = w0.copy()
+    for j in range(M):
+        w = betas[j] * w + (1 - betas[j]) * client_models[schedule[j]]
+    w_sfl = alpha @ client_models
+    assert np.allclose(w, w_sfl, atol=1e-10), np.abs(w - w_sfl).max()
+
+
+def test_solve_betas_validates_inputs():
+    with pytest.raises(ValueError):
+        agg.solve_betas(np.array([0.5, 0.5]), [0, 0])
+    with pytest.raises(ValueError):
+        agg.solve_betas(np.array([0.7, 0.7]), [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# §III-A: geometric decay of naive alpha-in-AFL (claim C2)
+# ---------------------------------------------------------------------------
+def test_effective_coefficient_decay():
+    alpha = 0.1
+    eff = agg.effective_coefficients([alpha] * 60)
+    # closed form: alpha * (1-alpha)^(J-1-j)
+    assert np.isclose(eff[0], alpha * (1 - alpha) ** 59)
+    assert np.isclose(eff[-1], alpha)
+    assert eff[0] < 1e-3 < eff[-1]          # early contribution vanished
+
+
+@_property(20)
+def test_fold_matches_sequential(rng):
+    J = int(rng.integers(1, 30))
+    betas = rng.uniform(0, 1, J)
+    c0, coefs = agg.fold_sequential_blends(betas)
+    # total mass conserved
+    assert np.isclose(c0 + coefs.sum(), 1.0)
+    # equals sequential application on scalars
+    w0 = rng.normal()
+    ws = rng.normal(size=J)
+    w = w0
+    for j in range(J):
+        w = betas[j] * w + (1 - betas[j]) * ws[j]
+    assert np.isclose(w, c0 * w0 + coefs @ ws)
+
+
+# ---------------------------------------------------------------------------
+# eq. (11): staleness coefficient
+# ---------------------------------------------------------------------------
+def test_staleness_coefficient_bounds_and_monotonicity():
+    # capped at 1
+    assert agg.staleness_coefficient(1, 0, mu=1.0, gamma=0.1) == 1.0
+    # decreases with j (the 1/j factor)
+    v10 = agg.staleness_coefficient(10, 9, mu=1.0, gamma=0.4)
+    v100 = agg.staleness_coefficient(100, 99, mu=1.0, gamma=0.4)
+    assert v100 < v10
+    # decreases with staleness j - i
+    fresh = agg.staleness_coefficient(50, 49, mu=2.0, gamma=0.4)
+    stale = agg.staleness_coefficient(50, 30, mu=2.0, gamma=0.4)
+    assert stale < fresh
+
+
+def test_staleness_tracker_moving_average():
+    t = agg.StalenessTracker(momentum=0.5)
+    assert t.update(4.0) == 4.0            # first observation seeds mu
+    assert t.update(2.0) == 3.0            # 0.5*4 + 0.5*2
+    t2 = agg.StalenessTracker(momentum=0.9)
+    t2.update(0.2)                          # clamped to >= 1
+    assert t2.mu >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# data plane
+# ---------------------------------------------------------------------------
+def test_blend_pytree_eq3():
+    g = {"w": jnp.ones((3,)), "b": [jnp.zeros((2,))]}
+    c = {"w": jnp.zeros((3,)), "b": [jnp.ones((2,))]}
+    out = agg.blend_pytree(g, c, beta=0.75)
+    assert np.allclose(out["w"], 0.75)
+    assert np.allclose(out["b"][0], 0.25)
+
+
+def test_weighted_sum_pytrees():
+    g = {"w": jnp.ones((4,))}
+    cs = [{"w": jnp.full((4,), 2.0)}, {"w": jnp.full((4,), 4.0)}]
+    out = agg.weighted_sum_pytrees(0.5, g, [0.25, 0.25], cs)
+    assert np.allclose(out["w"], 0.5 * 1 + 0.25 * 2 + 0.25 * 4)

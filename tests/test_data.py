@@ -1,0 +1,119 @@
+"""Data-pipeline tests: partitioners (paper §IV settings), procedural
+dataset determinism, token streams."""
+import numpy as np
+import pytest
+
+from repro.data import federated as fd
+from repro.data.mnist_like import make_dataset
+from repro.data.synthetic import TokenStream
+
+
+def test_mnist_like_deterministic_and_learnable_stats():
+    a = make_dataset("digits", train_n=512, test_n=128, seed=3)
+    b = make_dataset("digits", train_n=512, test_n=128, seed=3)
+    np.testing.assert_array_equal(a.train_x, b.train_x)
+    np.testing.assert_array_equal(a.train_y, b.train_y)
+    # different variants differ
+    c = make_dataset("fashion", train_n=512, test_n=128, seed=3)
+    assert not np.allclose(a.train_x, c.train_x)
+    # all 10 classes present, images in range
+    assert set(np.unique(a.train_y)) == set(range(10))
+    assert a.train_x.min() >= 0.0 and a.train_x.max() <= 1.5
+    # class templates are separable: per-class means differ
+    means = np.stack([a.train_x[a.train_y == k].mean(0) for k in range(10)])
+    d = np.linalg.norm(means.reshape(10, -1)[:, None]
+                       - means.reshape(10, -1)[None], axis=-1)
+    assert d[np.triu_indices(10, 1)].min() > 0.5
+
+
+def test_partition_iid_equal_split():
+    labels = np.arange(1000) % 10
+    parts = fd.partition_iid(labels, 10, seed=0)
+    assert sum(len(p) for p in parts) == 1000
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+    # no overlap
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == 1000
+
+
+def test_partition_label_two_classes_per_client():
+    """Paper non-IID: each client sees ~2 classes, ~600 images with 100
+    clients / 60k images."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 60000)
+    parts = fd.partition_label(labels, 100, classes_per_client=2, seed=0)
+    sizes = [len(p) for p in parts]
+    assert abs(np.mean(sizes) - 600) < 1
+    classes_per = [len(np.unique(labels[p])) for p in parts]
+    # shard boundaries can straddle one class edge: allow <= 3, mostly 2
+    assert np.mean(classes_per) <= 3.0
+    assert np.percentile(classes_per, 50) <= 2
+
+
+def test_partition_dirichlet_skew():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 10000)
+    parts = fd.partition_dirichlet(labels, 20, alpha=0.1, seed=0)
+    assert sum(len(p) for p in parts) == 10000
+    # strong skew: most clients dominated by few classes
+    fracs = []
+    for p in parts:
+        if len(p) == 0:
+            continue
+        _, counts = np.unique(labels[p], return_counts=True)
+        fracs.append(counts.max() / len(p))
+    assert np.mean(fracs) > 0.5
+
+
+def test_client_batches_reproducible():
+    ds = make_dataset("digits", train_n=256, test_n=32, seed=1)
+    parts = fd.partition_iid(ds.train_y, 4, seed=1)
+    clients = fd.make_clients(ds.train_x, ds.train_y, parts)
+    b1 = clients[2].batches(5, 3, seed=7)
+    b2 = clients[2].batches(5, 3, seed=7)
+    for x, y in zip(b1, b2):
+        np.testing.assert_array_equal(x["images"], y["images"])
+    b3 = clients[2].batches(5, 3, seed=8)
+    assert not all(np.array_equal(x["labels"], y["labels"])
+                   for x, y in zip(b1, b3))
+
+
+def test_token_stream_topic_skew():
+    s0 = TokenStream(1024, num_topics=8, topics_per_client=1, cid=0, seed=0)
+    s1 = TokenStream(1024, num_topics=8, topics_per_client=1, cid=1, seed=0)
+    b0 = s0.sample_batch(4, 256)["tokens"].ravel()
+    b1 = s1.sample_batch(4, 256)["tokens"].ravel()
+    # clients concentrate on different topic blocks
+    h0 = np.bincount(b0 // 128, minlength=8) / len(b0)
+    h1 = np.bincount(b1 // 128, minlength=8) / len(b1)
+    assert np.abs(h0 - h1).sum() > 0.3
+    assert b0.shape == (1024,)
+    labels = s0.sample_batch(2, 16)
+    np.testing.assert_array_equal(labels["tokens"][:, 1:],
+                                  labels["labels"][:, :-1])
+
+
+def test_pipeline_assemble_and_prefetch():
+    from repro.data.pipeline import Prefetcher, assemble_trunk
+    rng = np.random.default_rng(0)
+
+    def source_for(cid):
+        def src(b, s):
+            base = cid * 1000
+            return {"tokens": np.full((b, s), base, np.int32),
+                    "labels": np.full((b, s), base + 1, np.int32)}
+        return src
+
+    sources = [source_for(c) for c in range(3)]
+    batch = assemble_trunk(sources, [2, 0, 2], local_steps=2,
+                           batch_rows=4, seq_len=8)
+    assert batch["tokens"].shape == (3, 2, 4, 8)
+    assert int(batch["tokens"][0, 0, 0, 0]) == 2000
+    assert int(batch["tokens"][1, 0, 0, 0]) == 0
+    # prefetcher yields batches and shuts down cleanly
+    pf = Prefetcher(lambda: assemble_trunk(sources, [1], local_steps=1,
+                                           batch_rows=2, seq_len=4))
+    b1 = pf.next()
+    assert b1["labels"].shape == (1, 1, 2, 4)
+    pf.close()

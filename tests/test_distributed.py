@@ -1,0 +1,138 @@
+"""Tests for the fused SPMD step (core/distributed.py): the K=1 algebraic
+fast path must equal the explicit per-client computation, and the blend
+semantics must match core.aggregation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig, MeshConfig
+from repro.core import aggregation as agg
+from repro.core import distributed as dist
+from repro.models import transformer as tmod
+
+HOST_MESH = MeshConfig((1, 1), ("data", "model"))
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _setup(key, C=3, b=2, S=16):
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    params = tmod.init_params(cfg, key)
+    ks = jax.random.split(key, 2)
+    batches = {
+        "tokens": jax.random.randint(ks[0], (C, 1, b, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (C, 1, b, S), 0,
+                                     cfg.vocab_size),
+    }
+    return cfg, params, batches
+
+
+def test_k1_fast_path_equals_explicit_per_client(key):
+    """w_new must equal c0·w + Σ_c c_c·(w − lr·∇mean_c) computed naively."""
+    cfg, params, batches = _setup(key)
+    C = 3
+    lr = 1e-2
+    coefs = jnp.asarray([0.2, 0.5, 0.2, 0.1], jnp.float32)
+    fed = FederatedConfig(local_steps=1)
+    with _mesh():
+        new_params, metrics = dist.csmaafl_train_step(
+            params, batches, coefs, jnp.float32(lr), cfg=cfg, fed=fed,
+            mesh_cfg=HOST_MESH)
+    # explicit reference
+    locals_ = []
+    for c in range(C):
+        batch_c = jax.tree.map(lambda x: x[c, 0], batches)
+        (_, _), g = jax.value_and_grad(tmod.loss_fn, has_aux=True)(
+            params, cfg, batch_c)
+        locals_.append(jax.tree.map(lambda p, gr: p - lr * gr, params, g))
+    ref = agg.weighted_sum_pytrees(float(coefs[0]), params,
+                                   [float(x) for x in coefs[1:]], locals_)
+    for a, b_ in zip(jax.tree.leaves(new_params), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32), atol=2e-5)
+
+
+def test_k1_fedavg_coefs_is_plain_sgd_on_weighted_mean(key):
+    """With coefs = [0, α…] (FedAvg trunk) and equal data, the step is SGD
+    on the α-weighted mean gradient."""
+    cfg, params, batches = _setup(key, C=2)
+    coefs = jnp.asarray([0.0, 0.5, 0.5], jnp.float32)
+    fed = FederatedConfig(local_steps=1)
+    with _mesh():
+        new_params, _ = dist.csmaafl_train_step(
+            params, batches, coefs, jnp.float32(1e-2), cfg=cfg, fed=fed,
+            mesh_cfg=HOST_MESH)
+
+    def mean_loss(p):
+        l0, _ = tmod.loss_fn(p, cfg, jax.tree.map(lambda x: x[0, 0],
+                                                  batches))
+        l1, _ = tmod.loss_fn(p, cfg, jax.tree.map(lambda x: x[1, 0],
+                                                  batches))
+        return 0.5 * (l0 + l1)
+
+    g = jax.grad(mean_loss)(params)
+    ref = jax.tree.map(lambda p, gr: p - 1e-2 * gr, params, g)
+    for a, b_ in zip(jax.tree.leaves(new_params), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32), atol=2e-5)
+
+
+def test_grad_accum_invariance(key):
+    """grad_accum must not change the result (same total batch)."""
+    cfg, params, batches = _setup(key, C=2, b=4)
+    coefs = jnp.asarray([0.1, 0.6, 0.3], jnp.float32)
+    outs = []
+    for M in (1, 2, 4):
+        fed = FederatedConfig(local_steps=1, grad_accum=M)
+        with _mesh():
+            new_params, _ = dist.csmaafl_train_step(
+                params, batches, coefs, jnp.float32(1e-2), cfg=cfg,
+                fed=fed, mesh_cfg=HOST_MESH)
+        outs.append(new_params)
+    for other in outs[1:]:
+        for a, b_ in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(other)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b_, np.float32),
+                                       atol=2e-5)
+
+
+def test_k_multi_local_steps_path(key):
+    """K>1 vmap path: matches per-client sequential SGD + blend."""
+    cfg, params, _ = _setup(key)
+    C, K, b, S = 2, 2, 2, 16
+    ks = jax.random.split(key, 2)
+    batches = {
+        "tokens": jax.random.randint(ks[0], (C, K, b, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (C, K, b, S), 0,
+                                     cfg.vocab_size),
+    }
+    coefs = jnp.asarray([0.4, 0.3, 0.3], jnp.float32)
+    fed = FederatedConfig(local_steps=K)
+    lr = 1e-2
+    with _mesh():
+        new_params, _ = dist.csmaafl_train_step(
+            params, batches, coefs, jnp.float32(lr), cfg=cfg, fed=fed,
+            mesh_cfg=HOST_MESH)
+    locals_ = []
+    for c in range(C):
+        p = params
+        for k_ in range(K):
+            batch = jax.tree.map(lambda x: x[c, k_], batches)
+            (_, _), g = jax.value_and_grad(tmod.loss_fn, has_aux=True)(
+                p, cfg, batch)
+            p = jax.tree.map(lambda w, gr: w - lr * gr, p, g)
+        locals_.append(p)
+    ref = agg.weighted_sum_pytrees(0.4, params, [0.3, 0.3], locals_)
+    for a, b_ in zip(jax.tree.leaves(new_params), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32), atol=3e-5)

@@ -1,0 +1,125 @@
+"""Integration tests for the FL loops: C1 exactness, C2 decay, CSMAAFL
+convergence (paper Section III + IV claims at test scale)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.afl import run_afl
+from repro.core.scheduler import ClientSpec, make_fleet
+from repro.core.sfl import run_fedavg
+
+
+def _quadratic_task(M, D, seed=0):
+    """Deterministic toy task: client m pulls params toward target_m."""
+    rng = np.random.default_rng(seed)
+    targets = jnp.asarray(rng.normal(size=(M, D)))
+
+    def local_train(params, cid, steps, _seed):
+        p = params
+        for _ in range(steps):
+            p = p - 0.2 * (p - targets[cid])
+        return p
+    w0 = jnp.asarray(rng.normal(size=D))
+    return w0, local_train, targets
+
+
+def _fleet(M, seed=0, a=4.0):
+    return make_fleet(M, tau=1.0, hetero_a=a,
+                      samples_per_client=list(60 + 20 * np.arange(M)),
+                      adaptive=False, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# C1: baseline AFL == SFL exactly, cycle by cycle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,cycles", [(3, 1), (5, 2), (8, 3)])
+def test_baseline_afl_equals_fedavg(M, cycles):
+    w0, local_train, _ = _quadratic_task(M, 16)
+    fleet = _fleet(M)
+    w_sfl, _ = run_fedavg(w0, fleet, local_train, rounds=cycles,
+                          tau_u=0.2, tau_d=0.1)
+    res = run_afl(w0, fleet, local_train, algorithm="afl_baseline",
+                  iterations=cycles * M, tau_u=0.2, tau_d=0.1)
+    np.testing.assert_allclose(np.asarray(res.params),
+                               np.asarray(w_sfl), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# C2: naive alpha-in-AFL — early contributions decay geometrically
+# ---------------------------------------------------------------------------
+def test_afl_alpha_contribution_decay():
+    M = 4
+    w0, local_train, _ = _quadratic_task(M, 8)
+    fleet = _fleet(M)
+    res = run_afl(w0, fleet, local_train, algorithm="afl_alpha",
+                  iterations=60, tau_u=0.2, tau_d=0.1)
+    eff = agg.effective_coefficients([1 - b for b in res.betas])
+    # the first upload's weight in the final model is vanishingly small
+    assert eff[0] < 1e-2 * eff[-1]
+
+
+# ---------------------------------------------------------------------------
+# CSMAAFL behaviour (Algorithm 1)
+# ---------------------------------------------------------------------------
+def test_csmaafl_converges_toward_consensus():
+    """On the quadratic task the unique SFL fixed point is the alpha-mix of
+    targets; CSMAAFL must approach consensus too."""
+    M = 6
+    w0, local_train, targets = _quadratic_task(M, 12)
+    fleet = _fleet(M)
+    res = run_afl(w0, fleet, local_train, algorithm="csmaafl",
+                  iterations=400, tau_u=0.1, tau_d=0.1, gamma=0.4)
+    # end up inside the convex hull of targets, near their mean
+    mean_t = np.asarray(targets).mean(0)
+    d_end = np.linalg.norm(np.asarray(res.params) - mean_t)
+    d_start = np.linalg.norm(np.asarray(w0) - mean_t)
+    assert d_end < 0.35 * d_start
+
+
+def test_csmaafl_beta_evolution():
+    """eq. (11): (1-β_j) shrinks like 1/j — β_j increases toward 1."""
+    M = 5
+    w0, local_train, _ = _quadratic_task(M, 4)
+    res = run_afl(w0, _fleet(M), local_train, algorithm="csmaafl",
+                  iterations=300, tau_u=0.1, tau_d=0.1, gamma=0.4)
+    betas = np.asarray(res.betas)
+    assert betas[0] == 0.0          # j=1: min(1, mu/(γ·1·1)) = 1 for γ<1
+    assert betas[-1] > 0.95
+    # larger gamma => smaller client contribution at same j
+    res2 = run_afl(w0, _fleet(M), local_train, algorithm="csmaafl",
+                   iterations=300, tau_u=0.1, tau_d=0.1, gamma=0.8)
+    assert np.mean(1 - np.asarray(res2.betas)[50:]) < \
+        np.mean(1 - betas[50:]) + 1e-12
+
+
+def test_csmaafl_server_storage_is_constant():
+    """The server holds one global model + scalar tracker (the paper's
+    storage argument vs AsyncFedED): run_afl never stores model history."""
+    M = 4
+    w0, local_train, _ = _quadratic_task(M, 4)
+    res = run_afl(w0, _fleet(M), local_train, algorithm="csmaafl",
+                  iterations=50, tau_u=0.1, tau_d=0.1)
+    # result carries params (one model) and scalar betas only
+    assert np.asarray(res.params).shape == (4,)
+    assert len(res.betas) == 50
+
+
+# ---------------------------------------------------------------------------
+# History bookkeeping
+# ---------------------------------------------------------------------------
+def test_history_time_axis_monotone():
+    M = 4
+    w0, local_train, _ = _quadratic_task(M, 4)
+    evals = []
+
+    def eval_fn(p):
+        evals.append(1)
+        return {"metric": float(jnp.sum(p))}
+
+    res = run_afl(w0, _fleet(M), local_train, algorithm="csmaafl",
+                  iterations=40, tau_u=0.2, tau_d=0.1, eval_fn=eval_fn,
+                  eval_every=10)
+    t = res.history.times
+    assert all(a <= b for a, b in zip(t, t[1:]))
+    assert res.history.iterations == [0, 10, 20, 30, 40]

@@ -1,0 +1,77 @@
+"""Launch-layer tests: input specs, pair applicability, and (slow) one
+real dry-run lower+compile in a subprocess with 512 placeholder devices."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import FederatedConfig, MULTI_POD_MESH, SINGLE_POD_MESH
+from repro.launch import inputs as inp
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_input_specs_train_shapes():
+    cfg = get_config("yi-9b")
+    s = inp.input_specs(cfg, INPUT_SHAPES["train_4k"], SINGLE_POD_MESH,
+                        fed=FederatedConfig(local_steps=1))
+    assert s["batches"]["tokens"].shape == (16, 1, 16, 4096)
+    assert s["coefs"].shape == (17,)
+    s2 = inp.input_specs(cfg, INPUT_SHAPES["train_4k"], MULTI_POD_MESH,
+                         fed=FederatedConfig(local_steps=1))
+    assert s2["batches"]["tokens"].shape == (32, 1, 8, 4096)
+
+
+def test_input_specs_modality_stubs():
+    vlm = get_config("llava-next-34b")
+    s = inp.input_specs(vlm, INPUT_SHAPES["prefill_32k"], SINGLE_POD_MESH)
+    assert s["batch"]["patch_embeds"].shape == (32, 2304, 1152)
+    audio = get_config("seamless-m4t-large-v2")
+    s = inp.input_specs(audio, INPUT_SHAPES["train_4k"], SINGLE_POD_MESH)
+    assert s["batches"]["frame_embeds"].shape[-2:] == (1024, 1024)
+
+
+def test_input_specs_decode_cache():
+    cfg = get_config("mamba2-780m")
+    s = inp.input_specs(cfg, INPUT_SHAPES["long_500k"], SINGLE_POD_MESH)
+    assert s["token"].shape == (1, 1)
+    # SSM decode cache: conv + state, no KV
+    leaves = s["cache"]
+    assert "dec" in leaves
+    cfg2 = get_config("yi-9b")
+    s2 = inp.input_specs(cfg2, INPUT_SHAPES["decode_32k"], SINGLE_POD_MESH)
+    k = s2["cache"]["dec"]["period"][0]["k"]
+    assert k.shape == (48, 128, 32768, 4, 128)   # stacked full cache
+
+
+def test_long_500k_applicability():
+    from repro.launch.dryrun import pair_status
+    shape = INPUT_SHAPES["long_500k"]
+    runs = {a: pair_status(get_config(a), shape) is None
+            for a in ("mamba2-780m", "zamba2-7b", "gemma2-9b",
+                      "mixtral-8x7b", "starcoder2-3b", "yi-9b",
+                      "qwen2-0.5b", "llava-next-34b",
+                      "seamless-m4t-large-v2", "granite-moe-1b-a400m")}
+    assert runs["mamba2-780m"] and runs["zamba2-7b"]
+    assert runs["gemma2-9b"] and runs["mixtral-8x7b"] \
+        and runs["starcoder2-3b"]
+    assert not runs["yi-9b"] and not runs["qwen2-0.5b"]
+    assert not runs["llava-next-34b"] and not runs["granite-moe-1b-a400m"]
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_pair():
+    """A real lower+compile on the 16x16 mesh in a fresh interpreter (the
+    512-device XLA flag must be set before jax init, so: subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen2-0.5b", "--shape", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ok" in out.stdout

@@ -1,0 +1,127 @@
+"""Tests for the event-driven AFL scheduler (paper §II-C, §III-B/C)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
+                                  ClientSpec, afl_model_update_interval,
+                                  homogeneous_round_times, make_fleet,
+                                  sfl_round_time)
+
+
+def _uniform_fleet(M, tau=1.0, k=1):
+    return [ClientSpec(cid=i, tau_compute=tau, num_samples=100,
+                       local_steps=k) for i in range(M)]
+
+
+# ---------------------------------------------------------------------------
+# Channel + ordering invariants
+# ---------------------------------------------------------------------------
+def test_channel_exclusive_and_monotone():
+    fleet = make_fleet(8, tau=1.0, hetero_a=5.0,
+                       samples_per_client=[100] * 8, seed=2)
+    sched = AFLScheduler(fleet, tau_u=0.3, tau_d=0.1)
+    evs = list(sched.events(200))
+    assert len(evs) == 200
+    # one upload at a time, τ_u apart at least
+    for a, b in zip(evs, evs[1:]):
+        assert b.t_complete >= a.t_complete + 0.3 - 1e-9
+    # iterations are 1..200
+    assert [e.j for e in evs] == list(range(1, 201))
+    # staleness consistency: j - i
+    for e in evs:
+        assert e.staleness == e.j - e.i >= 1
+
+
+def test_homogeneous_round_robin_order():
+    """With identical clients the schedule must sweep all M before repeats
+    (the §III-C fairness tie-break implies round-robin here)."""
+    M = 6
+    sched = AFLScheduler(_uniform_fleet(M), tau_u=0.2, tau_d=0.1)
+    evs = list(sched.events(3 * M))
+    for cycle in range(3):
+        cids = {e.cid for e in evs[cycle * M:(cycle + 1) * M]}
+        assert cids == set(range(M))
+
+
+def test_fairness_tiebreak_prefers_older_model():
+    """Two clients finishing simultaneously: the one whose last upload was
+    earlier wins the slot."""
+    fleet = _uniform_fleet(2)
+    sched = AFLScheduler(fleet, tau_u=0.5, tau_d=0.0)
+    evs = list(sched.events(6))
+    # strict alternation
+    assert [e.cid for e in evs[:4]] == [0, 1, 0, 1] or \
+        [e.cid for e in evs[:4]] == [1, 0, 1, 0]
+
+
+def test_heterogeneous_fast_client_uploads_more():
+    fleet = [ClientSpec(0, 0.5, 100, 1), ClientSpec(1, 5.0, 100, 1)]
+    sched = AFLScheduler(fleet, tau_u=0.1, tau_d=0.1)
+    evs = list(sched.events(50))
+    counts = np.bincount([e.cid for e in evs], minlength=2)
+    assert counts[0] > 3 * counts[1]
+
+
+def test_adaptive_local_steps_equalize():
+    """§III-C: adaptive local iterations keep per-upload wall time similar,
+    so staleness stays bounded even with 10x heterogeneity."""
+    fleet = make_fleet(10, tau=1.0, hetero_a=10.0,
+                       samples_per_client=[100] * 10, seed=0, adaptive=True)
+    # adapted: slow clients fewer steps, fast more
+    times = [c.local_steps * c.tau_compute for c in fleet]
+    assert max(times) / min(times) < 2 * 10 / max(1, min(
+        c.local_steps for c in fleet))
+    sched = AFLScheduler(fleet, tau_u=0.05, tau_d=0.05)
+    evs = list(sched.events(400))
+    counts = np.bincount([e.cid for e in evs], minlength=10)
+    assert counts.min() > 0.3 * counts.mean()
+
+
+# ---------------------------------------------------------------------------
+# Baseline scheduler (§III-B)
+# ---------------------------------------------------------------------------
+def test_baseline_strict_cycles_fastest_first():
+    fleet = [ClientSpec(0, 3.0, 100, 1), ClientSpec(1, 1.0, 100, 1),
+             ClientSpec(2, 2.0, 100, 1)]
+    sched = BaselineAFLScheduler(fleet, tau_u=0.2, tau_d=0.1)
+    assert sched.cycle_order() == [1, 2, 0]
+    evs = list(sched.events(9))
+    assert [e.cid for e in evs] == [1, 2, 0] * 3
+    # requirement (c): after each cycle every client holds the cycle-end
+    # model, so staleness within cycle n+1 is bounded by M
+    for e in evs[3:]:
+        assert e.staleness <= 3
+
+
+# ---------------------------------------------------------------------------
+# §II-C timing model (claim C5)
+# ---------------------------------------------------------------------------
+def test_homogeneous_times_match_paper():
+    M, tau, tau_u, tau_d = 7, 1.0, 0.2, 0.1
+    t = homogeneous_round_times(M, tau=tau, tau_u=tau_u, tau_d=tau_d)
+    assert np.isclose(t["sfl_round"], tau_d + tau + M * tau_u)
+    assert np.isclose(t["afl_sweep"], M * tau_u + M * tau_d + tau)
+    assert np.isclose(t["afl_update_interval"], tau_u + tau_d)
+    # the paper's point: AFL refreshes the global model much more often
+    assert t["afl_update_interval"] < t["sfl_round"]
+
+
+def test_simulated_afl_matches_closed_form():
+    """The event simulator reproduces the closed-form §II-C numbers."""
+    M, tau, tau_u, tau_d = 5, 1.0, 0.2, 0.1
+    sched = AFLScheduler(_uniform_fleet(M, tau), tau_u=tau_u, tau_d=tau_d)
+    evs = list(sched.events(M + 1))
+    # global model after all M clients once: simulator time of event M
+    t_m = evs[M - 1].t_complete
+    # first client computes tau_d + tau then uploads; channel serializes
+    assert np.isclose(t_m, tau_d + tau + M * tau_u)
+    # steady state: uploads every ~tau_u when channel is the bottleneck;
+    # every tau_u + tau_d when round-trip dominates
+    gaps = np.diff([e.t_complete for e in evs])
+    assert gaps.min() >= tau_u - 1e-9
+
+
+def test_sfl_round_time_slowest_dominates():
+    fleet = [ClientSpec(0, 1.0, 100, 1), ClientSpec(1, 9.0, 100, 1)]
+    t = sfl_round_time(fleet, tau_u=0.2, tau_d=0.1)
+    assert np.isclose(t, 0.1 + 9.0 + 2 * 0.2)

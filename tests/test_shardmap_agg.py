@@ -1,0 +1,76 @@
+"""Explicit-collective (shard_map + psum) aggregation == the GSPMD path
+and the pure-pytree reference, multi-device via subprocess."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import MeshConfig
+from repro.core.shardmap_agg import shardmap_weighted_blend
+from repro.core.aggregation import weighted_sum_pytrees
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mc = MeshConfig((4, 2), ("data", "model"))
+blend = shardmap_weighted_blend(mesh, mc)
+key = jax.random.PRNGKey(0)
+C = 4
+g = {"w": jax.random.normal(key, (6, 8)), "b": jax.random.normal(key, (8,))}
+w = jax.tree.map(lambda x: jnp.stack([x * (i + 1) for i in range(C)]), g)
+coefs = jnp.asarray([0.2, 0.1, 0.3, 0.25, 0.15])
+with mesh:
+    out = jax.jit(blend)(g, w, coefs)
+ref = weighted_sum_pytrees(
+    0.2, g, [0.1, 0.3, 0.25, 0.15],
+    [jax.tree.map(lambda x: x[i], w) for i in range(C)])
+for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+# the explicit path lowers to a real psum: check collectives in the HLO
+txt = jax.jit(blend).lower(g, w, coefs).compile().as_text()
+assert "all-reduce" in txt
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_blend_multidevice_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+def test_shardmap_blend_single_device():
+    """Same math on the host's 1x1 mesh."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import MeshConfig
+    from repro.core.aggregation import weighted_sum_pytrees
+    from repro.core.shardmap_agg import shardmap_weighted_blend
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mc = MeshConfig((1, 1), ("data", "model"))
+    blend = shardmap_weighted_blend(mesh, mc)
+    key = jax.random.PRNGKey(1)
+    g = {"w": jax.random.normal(key, (5, 3))}
+    w = jax.tree.map(lambda x: jnp.stack([x, -x, 2 * x]), g)
+    coefs = jnp.asarray([0.4, 0.2, 0.2, 0.2])
+    with mesh:
+        out = blend(g, w, coefs)
+    ref = weighted_sum_pytrees(0.4, g, [0.2, 0.2, 0.2],
+                               [jax.tree.map(lambda x: x[i], w)
+                                for i in range(3)])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(ref["w"]), atol=1e-6)

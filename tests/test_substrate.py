@@ -1,0 +1,153 @@
+"""Substrate tests: optimizers, checkpointing, sharding specs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.configs.base import MeshConfig, SINGLE_POD_MESH
+from repro.models import transformer as tmod
+from repro.optim import optimizers as opt
+from repro.sharding import specs as sspec
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def _quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    params = {"w": jnp.zeros(3)}
+    return params, loss, target
+
+
+@pytest.mark.parametrize("name,steps,lr", [
+    ("sgd", 200, 0.1), ("momentum", 100, 0.05), ("adam", 300, 0.1),
+    ("adamw", 300, 0.1)])
+def test_optimizers_converge_on_quadratic(name, steps, lr):
+    params, loss, target = _quad_problem()
+    init, update = opt.get_optimizer(name)
+    state = init(params)
+    g = jax.grad(loss)
+    for _ in range(steps):
+        params, state = update(params, g(params), state, lr)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(opt.global_norm(clipped)) - 1.0) < 1e-5
+    # under the limit: unchanged
+    g2 = {"a": jnp.asarray([0.1])}
+    c2, _ = opt.clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), [0.1])
+
+
+def test_cosine_schedule_shape():
+    lr = opt.cosine_schedule(1.0, warmup=10, total=110, min_ratio=0.1)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(110)) <= 0.11
+    assert float(lr(60)) < float(lr(20))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path, key):
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = tmod.init_params(cfg, key)
+    path = os.path.join(tmp_path, "ck", "model.ckpt")
+    ckpt.save(path, params, step=42, metadata={"arch": cfg.arch_id})
+    restored = ckpt.load(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    meta = ckpt.load_metadata(path)
+    assert meta["step"] == 42
+    assert meta["metadata"]["arch"] == cfg.arch_id
+
+
+def test_checkpoint_mixed_structures(tmp_path):
+    tree = {"a": jnp.arange(5), "b": [jnp.ones((2, 2)),
+                                      {"c": jnp.asarray(3.5)}],
+            "d": (jnp.zeros(1, jnp.int32),)}
+    path = os.path.join(tmp_path, "t.ckpt")
+    ckpt.save(path, tree)
+    back = ckpt.load(path, tree)
+    assert isinstance(back["b"], list) and isinstance(back["d"], tuple)
+    np.testing.assert_array_equal(np.asarray(back["b"][0]), np.ones((2, 2)))
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+def test_param_specs_divisibility_fallbacks(key):
+    """qwen2: 14 heads and 2 kv heads don't divide 16 — those dims must be
+    replicated, while d_ff (4864 = 304*16) shards."""
+    cfg = get_config("qwen2-0.5b")
+    params = jax.eval_shape(lambda k: tmod.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = sspec.param_specs(cfg, params, SINGLE_POD_MESH, zero=False)
+    flat = {p: s for p, s in sspec._walk(specs)}
+    # attention: heads not shardable -> falls back to d_model (896 = 56*16)
+    wq = [s for p, s in flat.items() if p.endswith("attn/wq")][0]
+    assert "model" in tuple(wq) and wq[1 + 1] != "model"  # heads dim free
+    w_in = [s for p, s in flat.items()
+            if p.endswith("mlp/w_in") or p.endswith("mlp/w_gate")][0]
+    assert tuple(w_in)[-1] == "model"       # ff sharded
+    emb = flat["embed"]
+    assert tuple(emb)[0] == "model"         # vocab 151936 shards
+
+
+def test_param_specs_zero_adds_client_axis(key):
+    cfg = get_config("yi-9b")
+    params = jax.eval_shape(lambda k: tmod.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    z = sspec.param_specs(cfg, params, SINGLE_POD_MESH, zero=True)
+    nz = sspec.param_specs(cfg, params, SINGLE_POD_MESH, zero=False)
+    zf = {p: s for p, s in sspec._walk(z)}
+    nzf = {p: s for p, s in sspec._walk(nz)}
+    n_data = sum(1 for s in zf.values() if "data" in tuple(s)
+                 or ("data",) in tuple(s))
+    assert n_data > 0
+    for p, s in nzf.items():
+        assert "data" not in tuple(s), p
+
+
+def test_moe_expert_sharding_rules():
+    """granite: 32 experts shard over 16; mixtral: 8 experts fall back to
+    ff-dim sharding."""
+    for arch, expect_dim0 in (("granite-moe-1b-a400m", True),
+                              ("mixtral-8x7b", False)):
+        cfg = get_config(arch)
+        spec = sspec.leaf_spec("stack/period/0/moe/w_in",
+                               (cfg.num_layers, cfg.moe.num_experts,
+                                cfg.d_model, cfg.moe.expert_d_ff),
+                               cfg, SINGLE_POD_MESH, zero=False,
+                               stacked=True)
+        if expect_dim0:
+            assert spec[1] == "model", (arch, spec)
+        else:
+            assert spec[1] is None and spec[3] == "model", (arch, spec)
+
+
+def test_cache_specs_decode_layouts():
+    cfg = get_config("yi-9b")   # kv=4, not divisible by 16 -> hd sharded
+    cache = jax.eval_shape(lambda: tmod.init_cache(cfg, 128, 1024))
+    specs = sspec.cache_specs(cfg, cache, SINGLE_POD_MESH)
+    flat = {p: s for p, s in sspec._walk(specs)}
+    kspec = [s for p, s in flat.items() if p.endswith("/k")][0]
+    t = tuple(kspec)
+    assert t[1] == "data"            # batch over clients (stacked leading)
+    assert t[-1] == "model"          # head_dim 128 sharded
+    # long-context: sequence sharded instead
+    specs2 = sspec.cache_specs(cfg, cache, SINGLE_POD_MESH, shard_seq=True)
+    k2 = tuple([s for p, s in sspec._walk(specs2)
+                if p.endswith("/k")][0])
+    assert k2[2] == ("data", "model")
