@@ -1,0 +1,18 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench bench-agg bench-gate
+
+test:
+	python -m pytest -x -q
+
+bench:
+	python -m benchmarks.run
+
+# the aggregation-path bench (fused engine vs naive per-leaf blend)
+bench-agg:
+	python -m benchmarks.run --only aggregation
+
+# same, but fail on >1.3x slowdown vs benchmarks/baseline_aggregation.json
+bench-gate:
+	python -m benchmarks.run --only aggregation --gate

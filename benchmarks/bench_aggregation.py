@@ -1,6 +1,6 @@
-"""Aggregation-path benchmarks: β-solver scaling (eqs. 9-10) and the
-server blend op at model scale (eq. 3/11 folded), plus the §III-A
-effective-coefficient decay table."""
+"""Aggregation-path benchmarks: β-solver scaling (eqs. 9-10), the §III-A
+effective-coefficient decay table, and the fused flat-buffer engine vs
+the naive per-leaf server blend (docs/DESIGN.md §3) on the paper's CNN."""
 from __future__ import annotations
 
 import numpy as np
@@ -37,9 +37,85 @@ def bench_decay_table() -> None:
     save_result("alpha_decay", rows)
 
 
+def bench_fused_engine(trunk_k: int = 8) -> None:
+    """Fused flat-buffer engine vs the naive per-leaf blend path on the
+    paper's CNN (Section IV model, ~1.66M params).
+
+    naive  — what the runtimes did pre-engine: K sequential
+             ``blend_pytree`` tree.maps, O(leaves) dispatches per event.
+    fused  — ONE ``agg_engine`` trunk launch: fold the K betas, stream
+             the flat buffer through the Pallas kernel once (interpret
+             mode off-TPU, so CPU numbers are conservative).
+    """
+    import jax
+
+    from repro.configs.paper_cnn import MNIST_CNN
+    from repro.core.agg_engine import AggEngine
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_params(MNIST_CNN, key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    clients = [jax.tree.map(
+        lambda x, i=i: x + 0.01 * (i + 1), params) for i in range(trunk_k)]
+    betas = [0.5 + 0.45 * i / trunk_k for i in range(trunk_k)]
+
+    def naive():
+        w = params
+        for c, b in zip(clients, betas):
+            w = agg.blend_pytree(w, c, b)
+        return w
+
+    # donate=False: the bench re-blends from the same buffer every iter
+    eng = AggEngine(params, donate=False)
+    g_flat = eng.flatten(params)
+
+    def fused():
+        flat, _ = eng.blend_trunk_flat(g_flat, clients, betas)
+        return flat
+
+    def fused_single():
+        flat, _ = eng.blend_flat(g_flat, clients[0], betas[0])
+        return flat
+
+    us_naive = time_fn(naive, warmup=2, iters=10)
+    us_fused = time_fn(fused, warmup=2, iters=10)
+    us_single = time_fn(fused_single, warmup=2, iters=10)
+    speedup = us_naive / us_fused
+    ev_naive = trunk_k / (us_naive * 1e-6)
+    ev_fused = trunk_k / (us_fused * 1e-6)
+    emit(f"agg.engine.naive_blend_K{trunk_k}", us_naive,
+         f"per-leaf tree.map x{trunk_k}; {ev_naive:.0f} events/s")
+    emit(f"agg.engine.fused_trunk_K{trunk_k}", us_fused,
+         f"one fused launch ({eng.mode}); {ev_fused:.0f} events/s; "
+         f"{speedup:.1f}x vs naive")
+    emit("agg.engine.fused_single_event", us_single,
+         f"C=1 fast path ({eng.mode})")
+    payload = {
+        "model": "paper_cnn", "params": int(n), "trunk_k": trunk_k,
+        "mode": eng.mode,
+        "naive_us": us_naive, "fused_us": us_fused,
+        "fused_single_us": us_single, "speedup": speedup,
+        "naive_events_per_s": ev_naive, "fused_events_per_s": ev_fused,
+    }
+    if eng.mode != "kernel":
+        # informational: the real Pallas kernel through the interpreter
+        # (tier-1 parity runs it; the interpreter's per-launch copies make
+        # it uncompetitive for timing, hence the xla-mode default off-TPU)
+        eng_k = AggEngine(params, donate=False, interpret=True)
+        us_interp = time_fn(
+            lambda: eng_k.blend_trunk_flat(g_flat, clients, betas)[0],
+            warmup=1, iters=3)
+        emit(f"agg.engine.kernel_interpret_trunk_K{trunk_k}", us_interp,
+             "Pallas interpreter (informational)")
+        payload["kernel_interpret_us"] = us_interp
+    save_result("aggregation_fused", payload)
+
+
 def main() -> None:
     bench_beta_solver()
     bench_decay_table()
+    bench_fused_engine()
 
 
 if __name__ == "__main__":

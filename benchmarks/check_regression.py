@@ -1,0 +1,101 @@
+"""Aggregation-bench regression gate.
+
+Compares the latest ``experiments/bench/aggregation_fused.json`` (written
+by ``benchmarks/bench_aggregation.py``) against the committed baseline in
+``benchmarks/baseline_aggregation.json`` and exits nonzero when the
+fused-vs-naive speedup regresses by more than ``THRESHOLD``x (or drops
+below the 3x acceptance floor).
+
+The watched metric is the SAME-RUN ratio, not absolute microseconds:
+wall-clock medians swing ~2x with machine load on a shared CPU, while
+naive and fused are timed back-to-back in one process, so their ratio
+isolates the aggregation path.  A >1.3x drop in that ratio is the
+"someone re-introduced per-leaf dispatch" class of regression, not
+noise.  Absolute timings are printed as context only.
+
+The committed baseline is still PER-ENVIRONMENT: the ratio isolates
+load, not hardware (a different CPU's fusion win, or kernel mode on
+TPU, legitimately shifts it).  The gate refuses mismatched
+configurations (exit 2) and expects the baseline to be re-recorded when
+the benchmark host changes: `make bench-agg`, then copy
+``experiments/bench/aggregation_fused.json`` over the baseline.
+
+Usage:  python -m benchmarks.check_regression [--threshold 1.3]
+        python -m benchmarks.run --only aggregation --gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+BASELINE = os.path.join(HERE, "baseline_aggregation.json")
+LATEST = os.path.join(HERE, "..", "experiments", "bench",
+                      "aggregation_fused.json")
+THRESHOLD = 1.3
+SPEEDUP_FLOOR = 3.0          # the PR's acceptance criterion
+
+
+def check(baseline_path: str = BASELINE, latest_path: str = LATEST,
+          threshold: float = THRESHOLD) -> int:
+    if not os.path.exists(baseline_path):
+        print(f"gate: no baseline at {baseline_path} — run the bench and "
+              "commit its aggregation_fused.json as the baseline",
+              file=sys.stderr)
+        return 2
+    if not os.path.exists(latest_path):
+        print(f"gate: no bench result at {latest_path} — run "
+              "`python -m benchmarks.run --only aggregation` first",
+              file=sys.stderr)
+        return 2
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(latest_path) as f:
+        latest = json.load(f)
+    rc = 0
+    # the ratio is only comparable for the same configuration: a baseline
+    # recorded in xla mode on CPU says nothing about kernel mode on TPU
+    for key in ("mode", "trunk_k", "params", "model"):
+        if base.get(key) != latest.get(key):
+            print(f"gate: config mismatch on '{key}' (baseline "
+                  f"{base.get(key)!r} vs latest {latest.get(key)!r}) — "
+                  "re-record the baseline for this configuration",
+                  file=sys.stderr)
+            return 2
+    # context: absolute medians (load-sensitive, never gated on)
+    for key in ("naive_us", "fused_us", "fused_single_us"):
+        if key in base and key in latest:
+            print(f"gate: (context) {key}: baseline {base[key]:.1f}us -> "
+                  f"latest {latest[key]:.1f}us")
+    # gated: the same-run fused-vs-naive speedup
+    if "speedup" not in base or "speedup" not in latest:
+        print("gate: speedup missing from baseline or latest result",
+              file=sys.stderr)
+        return 2
+    b_sp, l_sp = float(base["speedup"]), float(latest["speedup"])
+    ratio = b_sp / max(l_sp, 1e-9)
+    status = "OK" if ratio <= threshold else "REGRESSION"
+    print(f"gate: speedup: baseline {b_sp:.1f}x -> latest {l_sp:.1f}x "
+          f"({ratio:.2f}x drop) {status}")
+    if ratio > threshold:
+        rc = 1
+    if l_sp < SPEEDUP_FLOOR:
+        print(f"gate: fused speedup {l_sp:.1f}x < {SPEEDUP_FLOOR:.1f}x "
+              "floor REGRESSION")
+        rc = 1
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--latest", default=LATEST)
+    args = ap.parse_args(argv)
+    return check(args.baseline, args.latest, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

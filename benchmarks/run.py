@@ -6,8 +6,14 @@ Prints ``name,us_per_call,derived`` CSV rows.
   convergence   Figs.3-5 FedAvg vs CSMAAFL, γ sweep (scaled by default;
                 ``--full`` for the paper's 100-client/60k-image setup)
   kernels       Pallas-kernel oracles micro-bench
-  aggregation   β-solver scaling + §III-A decay table
+  aggregation   β-solver scaling + §III-A decay table + fused engine vs
+                naive per-leaf blend (docs/DESIGN.md §3)
   roofline      §Roofline table from the dry-run records
+
+``--gate`` runs ``benchmarks/check_regression.py`` afterwards and fails
+the invocation on a >1.3x aggregation slowdown vs the committed baseline
+(``make bench-gate`` = ``--only aggregation --gate``; ``make bench-agg``
+runs ungated).
 """
 from __future__ import annotations
 
@@ -22,11 +28,15 @@ def main(argv=None) -> int:
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,roofline")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on aggregation-bench regression vs the "
+                         "committed baseline")
     args = ap.parse_args(argv)
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "kernels", "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
+    agg_ran = False
     for name in names:
         try:
             if name == "fig2":
@@ -41,6 +51,7 @@ def main(argv=None) -> int:
             elif name == "aggregation":
                 from benchmarks import bench_aggregation as b
                 b.main()
+                agg_ran = True
             elif name == "roofline":
                 from benchmarks import bench_roofline as b
                 b.main()
@@ -50,6 +61,16 @@ def main(argv=None) -> int:
             rc = 1
             print(f"{name},0,FAILED", file=sys.stderr)
             traceback.print_exc()
+    if args.gate:
+        # only gate on a result THIS invocation produced — a stale
+        # aggregation_fused.json from an earlier run proves nothing
+        if not agg_ran:
+            print("gate: aggregation bench did not run (or failed) in "
+                  "this invocation — nothing to gate", file=sys.stderr)
+            rc = max(rc, 2)
+        else:
+            from benchmarks import check_regression
+            rc = max(rc, check_regression.check())
     return rc
 
 

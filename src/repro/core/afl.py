@@ -22,6 +22,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.core.agg_engine import engine_for
 from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
                                   ClientSpec, UploadEvent)
 from repro.core.sfl import EvalFn, FLHistory, LocalTrainFn
@@ -43,8 +44,15 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             eval_fn: Optional[EvalFn] = None, eval_every: int = 10,
             server_opt: Optional[str] = None, server_lr: float = 1.0,
             max_staleness: Optional[int] = None,
+            use_engine: bool = True,
             seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
+
+    ``use_engine`` selects the blend data plane: True (default) routes
+    every eq.-(3) blend through the fused flat-buffer engine
+    (``core.agg_engine``, one Pallas launch per event); False keeps the
+    per-leaf ``aggregation.blend_pytree`` reference path.  Both produce
+    numerically equivalent histories (parity-tested to 1e-5).
 
     ``server_opt`` (beyond-paper, FedOpt-style): instead of the plain blend
     w ← β w + (1-β) w_m, treat Δ = (1-β)(w_m − w) as a pseudo-gradient and
@@ -76,6 +84,12 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
 
     tracker = agg.StalenessTracker(momentum=mu_momentum)
     global_params = params0
+    engine = g_flat = None
+    if use_engine and server_opt is None:
+        # the global model lives in the engine's contiguous flat buffer
+        # between events; each event is one fused kernel launch
+        engine = engine_for(params0)
+        g_flat = engine.flatten(params0)
     # every client immediately trains on the initial broadcast w_0
     client_models: Dict[int, Any] = {}
     for c in fleet:
@@ -107,8 +121,12 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
 
         # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
         if server_opt is None:
-            global_params = agg.blend_pytree(
-                global_params, client_models[ev.cid], beta)
+            if engine is not None:
+                g_flat, global_params = engine.blend_flat(
+                    g_flat, client_models[ev.cid], beta)
+            else:
+                global_params = agg.blend_pytree(
+                    global_params, client_models[ev.cid], beta)
         else:
             # beyond-paper: pseudo-gradient −Δ through a server optimizer
             import jax as _jax

@@ -1,0 +1,267 @@
+"""Fused flat-buffer aggregation engine — the server-blend data plane.
+
+Every server-side blend in the repo (the paper's eq. 3 / eq. 11 and their
+folded-trunk and FedAvg-cycle forms) routes through this module instead of
+per-leaf ``jax.tree.map`` chains.  See docs/DESIGN.md §3 for the full
+design; the short version:
+
+* the model pytree is flattened ONCE into a contiguous (n,) buffer
+  (ravel/unravel plans are cached per tree-structure, so repeated engines
+  over the same architecture share nothing but cheap metadata);
+* every blend variant is ONE jitted program: flatten(client) → fused
+  multiply-accumulate over the flat buffer → unflatten — a single
+  dispatch and a single HBM round-trip per stream, instead of O(leaves)
+  dispatches with 2 round-trips per leaf per event;
+* on TPU the MAC is the Pallas ``weighted_agg_flat2d`` launch in native
+  (8, 128) tiles (``mode="kernel"``); off-TPU it lowers to the jnp oracle
+  (``mode="xla"``) — same math, XLA-fused, because the Pallas interpreter
+  pays a full-buffer copy per launch and would bury the fusion win.
+  ``interpret=True`` forces the kernel path through the interpreter
+  (parity tests do this so the real kernel runs in tier-1 on CPU);
+* the global flat buffer is donated across steps (TPU/GPU), so the blend
+  is in-place at the XLA level;
+* storage follows the model dtype (bf16 storage + f32 accumulation in the
+  mixed-precision setup); coefficients are always f32.
+
+Blend variants:
+
+* ``blend``         — single-event eq. (3): C=1 fast-path kernel.
+* ``blend_trunk``   — K queued arrivals folded with
+  ``aggregation.fold_sequential_blends`` into ONE C=K kernel launch.
+* ``weighted_sum``  — the baseline per-cycle FedAvg reproduction
+  (eq. 2/7): w ← c0·w + Σ α_m·w_m as one C=M launch.
+
+``weighted_sum_leaves`` is the per-leaf twin used where leaves must stay
+individually sharded (the GSPMD fused step in ``core/distributed.py``) —
+there the flat concatenate would fight the partitioner, so the engine
+only centralizes the math, not the layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat2d
+
+
+def _auto_interpret() -> bool:
+    """Pallas TPU kernels run via the interpreter off-TPU (CPU tests)."""
+    return jax.default_backend() != "tpu"
+
+
+def _can_donate() -> bool:
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+class AggEngine:
+    """Flat-buffer blend engine for one model tree-structure.
+
+    ``template`` is any pytree of arrays (or ShapeDtypeStructs) with the
+    target structure; the engine records shapes/dtypes/offsets and builds
+    jitted flatten / unflatten / blend programs around them.
+
+    ``mode`` picks the MAC backend: "kernel" (Pallas launch — the default
+    on TPU, or anywhere when ``interpret=True`` is passed) or "xla" (jnp
+    oracle — the default off-TPU).  Both are the same math to float
+    rounding; parity tests pin them against each other.
+    """
+
+    def __init__(self, template, *, block_rows: Optional[int] = None,
+                 interpret: Optional[bool] = None, mode: Optional[str] = None,
+                 storage_dtype=None, donate: Optional[bool] = None):
+        leaves, treedef = jax.tree.flatten(template)
+        if not leaves:
+            raise ValueError("template pytree has no leaves")
+        self.treedef = treedef
+        self.shapes = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        self.offsets = tuple(np.cumsum((0,) + self.sizes[:-1]).tolist())
+        self.n = int(sum(self.sizes))
+        if mode is None:
+            # explicit interpret request means "run the real kernel"
+            mode = "kernel" if (interpret or not _auto_interpret()) \
+                else "xla"
+        if mode not in ("kernel", "xla"):
+            raise ValueError(f"unknown engine mode '{mode}'")
+        self.mode = mode
+        self.interpret = (_auto_interpret() if interpret is None
+                          else interpret)
+        # one whole-buffer grid step under the interpreter (it pays a
+        # full-buffer copy per step); VMEM-sized blocks on real TPUs
+        self.block_rows = (block_rows if block_rows is not None
+                           else (None if self.interpret else 512))
+        self.storage_dtype = jnp.dtype(
+            storage_dtype if storage_dtype is not None
+            else jnp.result_type(*self.dtypes))
+        donate = _can_donate() if donate is None else donate
+        kern = functools.partial(weighted_agg_flat2d,
+                                 block_rows=self.block_rows,
+                                 interpret=self.interpret)
+
+        def flatten_expr(tree):
+            ls = treedef.flatten_up_to(tree)
+            return jnp.concatenate(
+                [jnp.ravel(x).astype(self.storage_dtype) for x in ls])
+
+        def unflatten_expr(flat):
+            outs = []
+            for off, sz, sh, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes):
+                outs.append(flat[off:off + sz].reshape(sh).astype(dt))
+            return jax.tree.unflatten(treedef, outs)
+
+        def mac_xla(g_flat, client_trees, coefs):
+            """Oracle MAC: stack-free FMA chain XLA fuses into one pass
+            (the flatten concats feed the elementwise consumers, so no
+            (C, n) intermediate is ever materialized)."""
+            acc = coefs[0] * g_flat.astype(jnp.float32)
+            for i, t in enumerate(client_trees):
+                acc = acc + coefs[i + 1] * \
+                    flatten_expr(t).astype(jnp.float32)
+            return acc.astype(self.storage_dtype)
+
+        def blend_one(g_flat, client_tree, coefs):
+            if self.mode == "kernel":
+                w = flatten_expr(client_tree)[None]        # (1, n)
+                new = kern(g_flat, w, coefs)
+            else:
+                new = mac_xla(g_flat, (client_tree,), coefs)
+            return new, unflatten_expr(new)
+
+        def blend_many(g_flat, client_trees, coefs):
+            if self.mode == "kernel":
+                w = jnp.stack([flatten_expr(t)
+                               for t in client_trees])     # (C, n)
+                new = kern(g_flat, w, coefs)
+            else:
+                new = mac_xla(g_flat, client_trees, coefs)
+            return new, unflatten_expr(new)
+
+        self._flatten_expr = flatten_expr
+        self._unflatten_expr = unflatten_expr
+        self._flatten = jax.jit(flatten_expr)
+        self._unflatten = jax.jit(unflatten_expr)
+        dn = (0,) if donate else ()
+        self._blend_one = jax.jit(blend_one, donate_argnums=dn)
+        self._blend_many = jax.jit(blend_many, donate_argnums=dn)
+
+    # -- flat store ---------------------------------------------------------
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree -> contiguous (n,) storage buffer."""
+        return self._flatten(tree)
+
+    def unflatten(self, flat: jnp.ndarray):
+        """Contiguous (n,) buffer -> pytree view (leaf dtypes restored)."""
+        return self._unflatten(flat)
+
+    # -- fused blends over the flat store -----------------------------------
+    def blend_flat(self, g_flat, client_tree, beta
+                   ) -> Tuple[jnp.ndarray, Any]:
+        """Single-event eq. (3) on the flat store; returns (flat, tree)."""
+        coefs = jnp.stack([jnp.float32(beta), 1.0 - jnp.float32(beta)])
+        return self._blend_one(g_flat, client_tree, coefs)
+
+    def blend_trunk_flat(self, g_flat, client_trees: Sequence[Any],
+                         betas: Sequence[float]
+                         ) -> Tuple[jnp.ndarray, Any]:
+        """Fold K sequential eq.-(3) blends into ONE C=K kernel launch.
+
+        K is bucketed to the next power of two (padding with repeated
+        zero-coefficient clients) so a server whose drained-trunk size
+        fluctuates 1..M compiles at most log2(M) program variants instead
+        of one per distinct K — each first-seen pytree structure would
+        otherwise trace+compile while every requester waits.
+        """
+        if len(client_trees) != len(betas):
+            raise ValueError("one beta per queued client update")
+        if len(client_trees) == 1:
+            return self.blend_flat(g_flat, client_trees[0], betas[0])
+        c0, coefs = agg.fold_sequential_blends([float(b) for b in betas])
+        K = len(client_trees)
+        bucket = 1 << (K - 1).bit_length()
+        client_trees = tuple(client_trees) + \
+            (client_trees[0],) * (bucket - K)
+        coefs = np.concatenate((coefs, np.zeros(bucket - K)))
+        cvec = jnp.asarray(np.concatenate(([c0], coefs)), jnp.float32)
+        return self._blend_many(g_flat, client_trees, cvec)
+
+    def weighted_sum_flat(self, coef0, g_flat, coefs,
+                          client_trees: Sequence[Any]
+                          ) -> Tuple[jnp.ndarray, Any]:
+        """Baseline cycle (eq. 2/7): w ← c0·w + Σ c_m·w_m, one launch."""
+        cvec = jnp.concatenate([
+            jnp.reshape(jnp.asarray(coef0, jnp.float32), (1,)),
+            jnp.asarray(coefs, jnp.float32)])
+        return self._blend_many(g_flat, tuple(client_trees), cvec)
+
+    # -- pytree-in / pytree-out conveniences --------------------------------
+    def blend(self, global_tree, client_tree, beta):
+        """Drop-in for ``aggregation.blend_pytree`` through the kernel."""
+        _, tree = self.blend_flat(self.flatten(global_tree), client_tree,
+                                  beta)
+        return tree
+
+    def blend_trunk(self, global_tree, client_trees, betas):
+        _, tree = self.blend_trunk_flat(self.flatten(global_tree),
+                                        client_trees, betas)
+        return tree
+
+    def weighted_sum(self, coef0, global_tree, coefs, client_trees):
+        """Drop-in for ``aggregation.weighted_sum_pytrees``."""
+        _, tree = self.weighted_sum_flat(coef0, self.flatten(global_tree),
+                                         coefs, client_trees)
+        return tree
+
+
+# ---------------------------------------------------------------------------
+# Engine cache — one engine per (tree-structure, options)
+# ---------------------------------------------------------------------------
+_ENGINES: Dict[Any, AggEngine] = {}
+
+
+def engine_for(template, *, block_rows: Optional[int] = None,
+               interpret: Optional[bool] = None, mode: Optional[str] = None,
+               storage_dtype=None) -> AggEngine:
+    """Fetch (or build) the cached engine for ``template``'s structure."""
+    leaves, treedef = jax.tree.flatten(template)
+    key = (treedef,
+           tuple(tuple(l.shape) for l in leaves),
+           tuple(str(jnp.dtype(l.dtype)) for l in leaves),
+           block_rows, interpret, mode,
+           None if storage_dtype is None else str(jnp.dtype(storage_dtype)))
+    eng = _ENGINES.get(key)
+    if eng is None:
+        eng = AggEngine(template, block_rows=block_rows,
+                        interpret=interpret, mode=mode,
+                        storage_dtype=storage_dtype)
+        _ENGINES[key] = eng
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf twin for sharded parameter trees (GSPMD data plane)
+# ---------------------------------------------------------------------------
+def weighted_sum_leaves(coef0, global_tree, coefs, clients_stacked_tree):
+    """w ← c0·w + Σ_c c_c·w_c with a leading client dim on every leaf.
+
+    Used by the fused SPMD step (``core/distributed.py``): leaves there are
+    ZeRO/client-sharded, so they must stay separate ``tensordot``s that
+    GSPMD lowers to one weighted all-reduce each — flattening into the
+    engine's contiguous buffer would force a resharding gather.  The math
+    is the engine's, the layout is the partitioner's.
+    """
+    c0 = jnp.asarray(coef0, jnp.float32)
+    cc = jnp.asarray(coefs, jnp.float32)
+
+    def leaf(g, w):
+        acc = c0 * g.astype(jnp.float32)
+        acc = acc + jnp.tensordot(cc, w.astype(jnp.float32), axes=(0, 0))
+        return acc.astype(g.dtype)
+
+    return jax.tree.map(leaf, global_tree, clients_stacked_tree)

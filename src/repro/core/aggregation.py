@@ -2,8 +2,10 @@
 
 Everything here is control-plane: pure NumPy/Python scalar math that
 computes *coefficients*.  Applying coefficients to parameter pytrees is the
-data plane (``blend_pytree`` below / the Pallas ``weighted_agg`` kernel /
-the distributed step in ``core/distributed.py``).
+data plane: the fused flat-buffer engine in ``core/agg_engine.py`` (which
+routes through the Pallas ``weighted_agg`` kernel, docs/DESIGN.md §3), the
+distributed step in ``core/distributed.py``, and the per-leaf reference
+oracles ``blend_pytree`` / ``weighted_sum_pytrees`` below.
 
 Key results implemented:
 
@@ -57,6 +59,8 @@ def solve_betas(alpha: np.ndarray, schedule: Sequence[int]) -> np.ndarray:
     (1-β_j)·Π_{k>j} β_k, which must equal α_φ(j).  Solving backward:
       β_M     = 1 - α_φ(M)                      (eq. 9)
       β_{j}   = 1 - α_φ(j) / Π_{k>j} β_k        (generalizes eq. 10)
+    and the recurrence telescopes — Π_{k>j} β_k = Σ_{k<=j} α_φ(k) — so the
+    solution is the exact closed form β_j = 1 - α_φ(j) / Σ_{k<=j} α_φ(k).
     Σα = 1 forces β_1 = 0 → w_1's residual weight Πβ vanishes.
     """
     M = len(schedule)
@@ -64,23 +68,19 @@ def solve_betas(alpha: np.ndarray, schedule: Sequence[int]) -> np.ndarray:
         raise ValueError("schedule must be a permutation of range(M)")
     if abs(float(np.sum(alpha)) - 1.0) > 1e-9:
         raise ValueError("alpha must sum to 1")
-    betas = np.zeros(M, np.float64)
-    suffix_prod = 1.0            # Π_{k>j} β_k, built from the back
-    for j in range(M - 1, -1, -1):
-        a = float(alpha[schedule[j]])
-        if suffix_prod <= 0.0:
-            raise FloatingPointError(
-                "suffix product vanished before reaching j=0; "
-                "alpha is degenerate (some α ≥ remaining mass)")
-        b = 1.0 - a / suffix_prod
-        # analytically b >= 0 with b == 0 exactly at j = 0 (Σα = 1); at
-        # large M the suffix product underflows toward α_φ(1) and rounding
-        # can push b slightly negative — clamp within a relative tolerance
-        if b < -1e-6 * max(1.0, a / max(suffix_prod, 1e-300)):
-            raise FloatingPointError(
-                f"negative β at j={j}: schedule/α inconsistent (b={b})")
-        betas[j] = max(b, 0.0)
-        suffix_prod *= betas[j]
+    perm = np.asarray(alpha, np.float64)[list(schedule)]
+    if np.any(perm < 0):
+        raise ValueError("alpha must be nonnegative")
+    # The backward recurrence telescopes: the suffix product Π_{k>j} β_k
+    # equals the prefix sum Σ_{k<=j} α_φ(k) exactly, so the solution is
+    # closed-form — β_j = 1 - α_φ(j) / Σ_{k<=j} α_φ(k).  This is exact
+    # (the iterated product both underflows for skewed α at large M and
+    # compounds rounding multiplicatively; the prefix sum does neither)
+    # and gives β_1 = 0 identically.
+    prefix = np.cumsum(perm)
+    betas = np.ones(M, np.float64)   # zero-prefix entries are don't-cares
+    nz = prefix > 0.0
+    betas[nz] = 1.0 - perm[nz] / prefix[nz]
     return betas
 
 
@@ -165,15 +165,18 @@ def fold_sequential_blends(betas: Sequence[float]
 
 
 # ---------------------------------------------------------------------------
-# Data plane: blending parameter pytrees
+# Data plane: blending parameter pytrees (reference oracles)
+#
+# These per-leaf ``jax.tree.map`` forms are the REFERENCE implementation —
+# O(leaves) dispatches, 2 HBM round-trips per leaf per event.  Production
+# runtimes route through ``core.agg_engine.AggEngine`` (one fused Pallas
+# launch over the flat parameter buffer, docs/DESIGN.md §3); these stay as
+# the independent oracle the engine's parity tests compare against.
 # ---------------------------------------------------------------------------
 def blend_pytree(global_params, client_params, beta: float):
     """eq. (3): w ← β·w_global + (1-β)·w_client  (single client)."""
-    b = jnp.float32(beta)
-    return jax.tree.map(
-        lambda g, c: (b * g.astype(jnp.float32)
-                      + (1.0 - b) * c.astype(jnp.float32)).astype(g.dtype),
-        global_params, client_params)
+    return weighted_sum_pytrees(beta, global_params, [1.0 - beta],
+                                [client_params])
 
 
 def weighted_sum_pytrees(coef0: float, global_params,

@@ -6,11 +6,16 @@ Algorithm 1) as real concurrent code:
 
   * each client runs in its own thread: local training, then a slot
     REQUEST on the shared upload channel;
-  * the server thread APPROVES one request at a time (the paper's single
-    TDMA slot), preferring the client with the *older* model on ties
-    (§III-C fairness), blends with eq. (11) coefficients, and returns the
-    fresh global model to that client only;
-  * server state is one model + the scalar μ tracker (O(1) storage).
+  * the server thread drains the request queue and consumes the drained
+    batch WHOLE as one trunk: slot order within the trunk follows §III-C
+    fairness (older model first), each request is one global iteration
+    with its own eq. (11) coefficient, and the K sequential blends are
+    folded (``aggregation.fold_sequential_blends``) into ONE fused Pallas
+    launch through the flat-buffer engine (docs/DESIGN.md §3) — the
+    trunk-level broadcast then returns the fresh global model to every
+    client in the batch;
+  * server state is one flat model buffer + the scalar μ tracker (O(1)
+    storage).
 
 Used by `examples/` and integration tests; heterogeneity is induced with
 real ``time.sleep`` scaled by each client's τ.  This is the deployment
@@ -26,6 +31,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core import aggregation as agg
+from repro.core.agg_engine import engine_for
 from repro.core.scheduler import ClientSpec
 
 
@@ -43,7 +49,8 @@ class AsyncCSMAAFLServer:
 
     def __init__(self, params0, *, gamma: float = 0.4,
                  mu_momentum: float = 0.9,
-                 max_staleness: Optional[int] = None):
+                 max_staleness: Optional[int] = None,
+                 use_engine: bool = True):
         self.global_params = params0
         self.gamma = gamma
         self.tracker = agg.StalenessTracker(momentum=mu_momentum)
@@ -52,6 +59,10 @@ class AsyncCSMAAFLServer:
         self.requests: "queue.Queue[_SlotRequest]" = queue.Queue()
         self.last_slot: Dict[int, int] = {}
         self.betas: List[float] = []
+        self.trunk_sizes: List[int] = []
+        self._engine = engine_for(params0) if use_engine else None
+        self._flat = (self._engine.flatten(params0)
+                      if self._engine is not None else None)
         self._stop = threading.Event()
         self._lock = threading.Lock()
         self._thread = threading.Thread(target=self._serve, daemon=True)
@@ -70,8 +81,9 @@ class AsyncCSMAAFLServer:
 
     def _serve(self):
         while not self._stop.is_set():
-            # drain the queue to apply the fairness tie-break among all
-            # currently waiting requests (older model first)
+            # drain the queue; the drained batch is consumed WHOLE as one
+            # fused trunk (no requeue churn — every waiting request gets a
+            # slot this tick, ordered by §III-C fairness: older model first)
             batch: List[_SlotRequest] = []
             try:
                 batch.append(self.requests.get(timeout=0.05))
@@ -84,30 +96,40 @@ class AsyncCSMAAFLServer:
                     break
             batch.sort(key=lambda r: (self.last_slot.get(r.cid, -1),
                                       r.t_request))
-            chosen, rest = batch[0], batch[1:]
-            for r in rest:                     # others keep waiting
-                self.requests.put(r)
-            self._aggregate(chosen)
+            self._aggregate_trunk(batch)
 
-    def _aggregate(self, req: _SlotRequest):
+    def _aggregate_trunk(self, batch: List[_SlotRequest]):
         with self._lock:
-            self.j += 1
-            j = self.j
-            staleness = max(j - req.model_iter, 1)
-            if self.max_staleness is not None and \
-                    staleness > self.max_staleness:
-                one_minus_beta = 0.0
+            betas: List[float] = []
+            for req in batch:
+                self.j += 1
+                j = self.j
+                staleness = max(j - req.model_iter, 1)
+                if self.max_staleness is not None and \
+                        staleness > self.max_staleness:
+                    one_minus_beta = 0.0
+                else:
+                    mu = self.tracker.update(staleness)
+                    one_minus_beta = agg.staleness_coefficient(
+                        j, req.model_iter, mu, self.gamma)
+                betas.append(1.0 - one_minus_beta)
+                self.last_slot[req.cid] = j
+            self.betas.extend(betas)
+            self.trunk_sizes.append(len(batch))
+            # K sequential eq. (3) blends folded into ONE kernel launch:
+            # w ← (Πβ_j)·w + Σ_j (1-β_j)(Π_{k>j}β_k)·w_{c_j}
+            if self._engine is not None:
+                self._flat, self.global_params = \
+                    self._engine.blend_trunk_flat(
+                        self._flat, [r.model for r in batch], betas)
             else:
-                mu = self.tracker.update(staleness)
-                one_minus_beta = agg.staleness_coefficient(
-                    j, req.model_iter, mu, self.gamma)
-            beta = 1.0 - one_minus_beta
-            self.betas.append(beta)
-            # eq. (3): w_{j+1} = β w_j + (1-β) w_i^m
-            self.global_params = agg.blend_pytree(
-                self.global_params, req.model, beta)
-            self.last_slot[req.cid] = j
-            req.reply.put((self.global_params, j))
+                for req, beta in zip(batch, betas):
+                    self.global_params = agg.blend_pytree(
+                        self.global_params, req.model, beta)
+            # trunk-level broadcast: everyone in the batch gets w_{j_end}
+            j_end = self.j
+            for req in batch:
+                req.reply.put((self.global_params, j_end))
 
 
 def client_worker(server: AsyncCSMAAFLServer, spec: ClientSpec,
@@ -132,10 +154,12 @@ def client_worker(server: AsyncCSMAAFLServer, spec: ClientSpec,
 def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
               rounds_per_client: int, gamma: float = 0.4,
               time_scale: float = 0.005,
-              max_staleness: Optional[int] = None):
+              max_staleness: Optional[int] = None,
+              use_engine: bool = True):
     """Run the threaded fleet to completion; returns (params, server)."""
     server = AsyncCSMAAFLServer(params0, gamma=gamma,
-                                max_staleness=max_staleness).start()
+                                max_staleness=max_staleness,
+                                use_engine=use_engine).start()
     stats: Dict[int, List[int]] = {}
     threads = [threading.Thread(
         target=client_worker,

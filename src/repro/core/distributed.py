@@ -1,4 +1,4 @@
-"""Cluster-mode CSMAAFL: the fused SPMD step (DESIGN.md §3).
+"""Cluster-mode CSMAAFL: the fused SPMD step (docs/DESIGN.md §3).
 
 The control plane (``core.scheduler`` + ``core.aggregation``) decides which
 clients' updates fold into this step and computes the scalar blend
@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FederatedConfig, MeshConfig, ModelConfig
+from repro.core import agg_engine
 from repro.models import transformer as tmod
 from repro.optim import optimizers as opt
 from repro.sharding import specs as sspec
@@ -198,14 +199,11 @@ def csmaafl_train_step(global_params, batches, coefs, lr, *,
         cspecs = sspec.client_param_specs(cfg, global_params, mesh_cfg)
         local_params = jax.tree.map(jax.lax.with_sharding_constraint,
                                     local_params, cspecs)
-
-        def blend(g, locs):
-            acc = c0 * g.astype(jnp.float32)
-            acc = acc + jnp.tensordot(cc, locs.astype(jnp.float32),
-                                      axes=(0, 0))
-            return acc.astype(g.dtype)
-
-        new_global = jax.tree.map(blend, global_params, local_params)
+        # the engine's per-leaf twin: leaves stay sharded so GSPMD lowers
+        # each client contraction to one weighted all-reduce (the flat
+        # kernel layout would force a resharding gather here)
+        new_global = agg_engine.weighted_sum_leaves(
+            c0, global_params, cc, local_params)
     metrics = {"loss_per_client": losses,
                "loss": jnp.mean(losses),
                "coef0": c0,

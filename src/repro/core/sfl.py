@@ -42,14 +42,22 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
                rounds: int, tau_u: float, tau_d: float,
                eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
                local_steps_override: Optional[int] = None,
+               use_engine: bool = True,
                seed: int = 0):
     """Classical FedAvg (paper eq. 1-2). Returns (params, FLHistory).
 
     ``local_steps_override`` forces the same K on all clients (the paper's
     SFL has uniform local computation); None uses each spec's K.
+    ``use_engine`` (default True) applies eq. (2) as one fused C=M launch
+    via ``core.agg_engine``; False keeps the per-leaf reference.
     """
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
     params = params0
+    engine = g_flat = None
+    if use_engine:
+        from repro.core.agg_engine import engine_for
+        engine = engine_for(params0)
+        g_flat = engine.flatten(params0)
     hist = FLHistory()
     t = 0.0
     if eval_fn is not None:
@@ -61,8 +69,12 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
             locals_.append(local_train_fn(params, c.cid, k,
                                           seed * 100003 + rnd))
         # eq. (2): w_{t+1} = Σ α_m w_t^m
-        params = agg.weighted_sum_pytrees(
-            0.0, params, list(alpha), locals_)
+        if engine is not None:
+            g_flat, params = engine.weighted_sum_flat(
+                0.0, g_flat, list(alpha), locals_)
+        else:
+            params = agg.weighted_sum_pytrees(
+                0.0, params, list(alpha), locals_)
         t += sfl_round_time(fleet, tau_u=tau_u, tau_d=tau_d,
                             local_steps=local_steps_override or 1)
         if eval_fn is not None and rnd % eval_every == 0:

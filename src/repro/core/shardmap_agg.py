@@ -1,33 +1,50 @@
-"""CSMAAFL aggregation with EXPLICIT collectives via ``jax.shard_map``.
+"""CSMAAFL aggregation with EXPLICIT collectives via ``shard_map``.
 
 The fused step in ``core/distributed.py`` expresses eq. (3)/(11) through
 GSPMD constraint propagation (one weighted contraction over the client
 axis that the partitioner lowers to an all-reduce).  This module is the
 explicit twin: the client axis is program-visible inside ``shard_map`` and
 the aggregation is literally a weighted ``jax.lax.psum`` — useful when you
-want guaranteed collective placement (or to fuse the blend with the Pallas
-``weighted_agg`` kernel per shard), and as executable documentation of the
-collective the paper's server op becomes on a TPU mesh.
+want guaranteed collective placement, and as executable documentation of
+the collective the paper's server op becomes on a TPU mesh.
 
     w_new = psum_over_clients(c_c · w_c) + c0 · w_global
 
 Each client group holds its own locally-trained replica; ``psum`` over the
 client mesh axes IS the server.
+
+With ``use_kernel=True`` the per-shard multiply-accumulate runs through
+the Pallas ``weighted_agg`` kernel (docs/DESIGN.md §3) instead of a jnp
+``tensordot``: each shard streams its local (C_local + 1) tensors through
+VMEM exactly once in (8, 128) tiles, fusing c0·g into the launch by
+pre-dividing c0 by the client-group count (g is replicated, so the psum
+restores the full c0·g term exactly).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MeshConfig
+from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat2d
+
+# version compat: ``jax.shard_map`` (with check_vma) only exists in newer
+# JAX; the pinned container ships the experimental API (with check_rep)
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on the pinned container JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
 
 
 def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
-                            use_kernel: bool = False):
+                            use_kernel: bool = False,
+                            interpret: Optional[bool] = None):
     """Build the explicit-collective blend.
 
     Returns ``blend(global_params, client_params, coefs)`` where
@@ -35,15 +52,34 @@ def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
     client mesh axes, ``coefs`` is (C+1,) [c0, c_1..c_C], and the result is
     replicated (every group receives the new global model — the trunk-level
     broadcast of Algorithm 1's per-iteration return).
+
+    ``use_kernel`` routes the per-shard MAC through the Pallas
+    ``weighted_agg`` kernel; ``interpret`` forces/disables Pallas interpret
+    mode (default: auto — interpret off-TPU).
     """
     caxes = mesh_cfg.client_axes
     cspec = caxes if len(caxes) > 1 else caxes[0]
+    groups = int(np.prod([mesh.shape[a] for a in caxes]))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
 
     def blend_shard(g, w_local, coefs, idx):
         """Per-shard body: g replicated, w_local (C_local, ...) this
         group's client replicas, idx (C_local,) their global client ids."""
-        cc = coefs[1:]
-        c_local = jnp.take(cc, idx)                 # (C_local,)
+        c_local = jnp.take(coefs[1:], idx)          # (C_local,)
+        if use_kernel:
+            # fused per-shard launch: (c0/groups)·g + Σ_local c_c·w_c —
+            # psum over the replicated g restores the full c0·g term
+            cvec = jnp.concatenate([coefs[:1] / groups, c_local])
+            out = weighted_agg_flat2d(
+                g.astype(jnp.float32).reshape(-1),
+                w_local.astype(jnp.float32).reshape(w_local.shape[0], -1),
+                cvec, interpret=interpret,
+                # one grid step under the interpreter (per-step full-buffer
+                # copies); VMEM-sized blocks on real TPUs
+                block_rows=None if interpret else 512)
+            partial = out.reshape(g.shape)
+            return jax.lax.psum(partial, caxes).astype(g.dtype)
         partial = jnp.tensordot(c_local.astype(jnp.float32),
                                 w_local.astype(jnp.float32), axes=(0, 0))
         total = jax.lax.psum(partial, caxes)        # the server op
@@ -55,12 +91,12 @@ def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
         idx = jnp.arange(C, dtype=jnp.int32)
 
         def one_leaf(g, w):
-            f = jax.shard_map(
-                functools.partial(blend_shard),
+            f = _shard_map(
+                blend_shard,
                 mesh=mesh,
                 in_specs=(P(), P(cspec), P(), P(cspec)),
                 out_specs=P(),
-                check_vma=False)
+                **{_CHECK_KW: False})
             return f(g, w, coefs.astype(jnp.float32), idx)
 
         return jax.tree.map(one_leaf, global_params, client_params)

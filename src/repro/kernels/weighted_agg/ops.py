@@ -2,8 +2,11 @@
 
 ``weighted_agg_tree(coef0, global_tree, coefs, clients_tree)`` applies the
 fused blend leaf-by-leaf (each leaf flattened; clients carry a leading C
-dim).  This is the data-plane op behind ``core.aggregation.
-weighted_sum_pytrees`` when running on TPU; CPU paths use the jnp oracle.
+dim).  NOTE: production server blends no longer go leaf-by-leaf — they
+route through ``core.agg_engine.AggEngine``, which flattens the whole
+tree into one contiguous buffer and makes a single ``weighted_agg_flat2d``
+launch (docs/DESIGN.md §3).  This wrapper stays as the per-leaf kernel
+reference used in kernel unit tests.
 """
 from __future__ import annotations
 

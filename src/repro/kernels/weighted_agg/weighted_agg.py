@@ -1,7 +1,7 @@
 """CSMAAFL weighted model aggregation as a Pallas TPU kernel.
 
-The paper's server op (eq. 3 folded over a trunk of arrivals, DESIGN.md §3)
-is, per parameter element:
+The paper's server op (eq. 3 folded over a trunk of arrivals,
+docs/DESIGN.md §3) is, per parameter element:
 
     out = c0 * w_global + Σ_c coef_c * w_client[c]
 
@@ -11,16 +11,25 @@ so the kernel's job is to stream all C+1 tensors through VMEM exactly once
 in hardware-aligned blocks and fuse the multiply-accumulate — instead of
 the C+1 separate HBM round-trips a naive ``c0*g + Σ c*w`` chain makes.
 
-Tiling: flat parameter vectors in (8, 128)-aligned blocks of
-``block_elems`` (default 64Ki elements = 256 KiB f32 per stream); the
-client dim is NOT tiled (C is small: 16/32) — each grid step loads one
-(C, block) tile of client weights + one (block,) tile of the global.
-The mixed-precision path (bf16 weights, f32 accumulation + coefficients)
-matches the training setup.
+Two layouts:
+
+* ``weighted_agg_flat``   — historical 1D layout: flat vectors tiled in
+  ``block_elems`` chunks.  Kept for reference/back-compat.
+* ``weighted_agg_flat2d`` — production layout used by the aggregation
+  engine (``core/agg_engine.py``): the flat buffer is viewed as (rows,
+  128) so every tile is a native (sublane, lane) = (8, 128) VPU tile and
+  Mosaic never has to infer a reshape.  A dedicated C=1 kernel serves the
+  single-event blend (eq. 3 proper) without the client-dim reduction.
+
+In both, the client dim is NOT tiled (C is small: trunk sizes 8/16/32) —
+each grid step loads one (C, block) tile of client weights + one (block,)
+tile of the global.  The mixed-precision path (bf16 storage, f32
+accumulation + coefficients) matches the training setup.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +72,87 @@ def weighted_agg_flat(global_flat: jnp.ndarray, clients_flat: jnp.ndarray,
         interpret=interpret,
     )(coefs.astype(jnp.float32), g, w)
     return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# 2D (8, 128)-tiled layout — the aggregation-engine data plane
+# ---------------------------------------------------------------------------
+LANES = 128
+SUBLANES = 8
+
+
+def _agg_kernel_2d(coef_ref, g_ref, w_ref, o_ref):
+    """General trunk: o = c0·g + Σ_c c_c·w_c over one (rows, 128) tile."""
+    acc = coef_ref[0] * g_ref[...].astype(jnp.float32)     # (rows, 128)
+    w = w_ref[...].astype(jnp.float32)                     # (C, rows, 128)
+    acc = acc + jnp.sum(w * coef_ref[1:][:, None, None], axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _blend_kernel_2d(coef_ref, g_ref, w_ref, o_ref):
+    """C=1 fast path — eq. (3) proper: o = β·g + (1-β)·w, no client dim."""
+    acc = (coef_ref[0] * g_ref[...].astype(jnp.float32)
+           + coef_ref[1] * w_ref[...].astype(jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pad_to_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """(..., n) -> (..., rows, 128), zero-padding the tail."""
+    n = x.shape[-1]
+    pad = rows * LANES - n
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(*x.shape[:-1], rows, LANES)
+
+
+def weighted_agg_flat2d(global_flat: jnp.ndarray, clients_flat: jnp.ndarray,
+                        coefs: jnp.ndarray, *,
+                        block_rows: Optional[int] = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused blend over the flat buffer in native (8, 128) tiles.
+
+    global_flat (n,); clients_flat (C, n); coefs (C+1,) f32.  Returns (n,)
+    in global_flat.dtype.  ``block_rows`` rows of 128 lanes per grid step
+    (default 512 rows = 64Ki elements = 256 KiB f32 per stream); ragged n
+    is zero-padded to whole tiles.  Dispatches the C=1 kernel when the
+    trunk holds a single client.
+
+    ``block_rows=None`` covers the whole buffer in ONE grid step.  That is
+    the right call in interpret mode (the interpreter materializes full-
+    buffer slices per grid step, so a fine grid multiplies memory traffic
+    by the step count); on real TPUs keep a VMEM-sized block instead.
+    """
+    n = global_flat.shape[0]
+    C = clients_flat.shape[0]
+    rows = max(-(-n // LANES), 1)
+    if block_rows is None:
+        block_rows = -(-rows // SUBLANES) * SUBLANES
+    if block_rows % SUBLANES:
+        raise ValueError(f"block_rows must be a multiple of {SUBLANES}")
+    nb = -(-rows // block_rows)
+    if nb == 1:                      # shrink the block to the padded size
+        block_rows = -(-rows // SUBLANES) * SUBLANES
+    rows = nb * block_rows
+    g = _pad_to_rows(global_flat, rows)
+    w = _pad_to_rows(clients_flat, rows)
+    coefs = coefs.astype(jnp.float32)
+    if C == 1:
+        kernel, w_spec = _blend_kernel_2d, pl.BlockSpec(
+            (block_rows, LANES), lambda i: (i, 0))
+        w = w[0]
+    else:
+        kernel, w_spec = _agg_kernel_2d, pl.BlockSpec(
+            (C, block_rows, LANES), lambda i: (0, i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((C + 1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            w_spec,
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), global_flat.dtype),
+        interpret=interpret,
+    )(coefs, g, w)
+    return out.reshape(-1)[:n]

@@ -244,6 +244,8 @@ def run_one(arch: str, shape_name: str, mesh_name: str, *,
             "fits_16GB_tpu_estimate": (peak - infl) < 16e9,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older JAX: one dict per device
+            ca = ca[0] if ca else {}
         rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
                                 if isinstance(v, (int, float))
                                 and k in ("flops", "bytes accessed",

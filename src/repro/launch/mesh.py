@@ -13,13 +13,30 @@ import jax
 from repro.configs.base import (MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig)
 
 
+def axis_types_kwargs(n_axes: int) -> dict:
+    """Version-compat kwargs for ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` only exists in newer JAX releases; older ones
+    (and the pinned container JAX) build plain Auto meshes with no
+    ``axis_types`` argument at all.  Every mesh in the repo must be built
+    through this shim (or ``make_mesh``) so a clean checkout works on both.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with the AxisType compat shim applied."""
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -27,14 +44,11 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 
 def make_mesh_from_config(mc: MeshConfig) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        mc.shape, mc.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+    return make_mesh(mc.shape, mc.axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     """Tiny mesh over however many devices the host actually has (tests)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1,) * (len(axes) - 1) + (n,) if n > 1 else (1,) * len(axes), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(
+        (1,) * (len(axes) - 1) + (n,) if n > 1 else (1,) * len(axes), axes)

@@ -59,9 +59,8 @@ def measure(arch: str, shape_name: str, variant: str,
     if "mesh_shape" in knobs:
         from repro.configs.base import MeshConfig
         mcfg = MeshConfig(tuple(knobs["mesh_shape"]), ("data", "model"))
-        mesh = jax.make_mesh(
-            mcfg.shape, mcfg.axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh as _make_mesh
+        mesh = _make_mesh(mcfg.shape, mcfg.axes)
     else:
         mesh = make_production_mesh()
         mcfg = mesh_config()

@@ -44,9 +44,8 @@ def build_mesh(name: str):
         mc = SINGLE_POD_MESH
     else:
         mc = MULTI_POD_MESH
-    mesh = jax.make_mesh(mc.shape, mc.axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(mc.axes))
+    from repro.launch.mesh import make_mesh as _make_mesh
+    mesh = _make_mesh(mc.shape, mc.axes)
     return mesh, mc
 
 

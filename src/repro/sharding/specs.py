@@ -135,11 +135,15 @@ def _is_stacked(path: str, cfg: ModelConfig) -> bool:
 
 
 def _walk(tree: Any, prefix: str = ""):
-    """Yield (path, leaf) with '/'-joined dict keys / list indices."""
+    """Yield (path, leaf) with '/'-joined dict keys / list indices.
+
+    PartitionSpec is a tuple subclass on older JAX — it is a LEAF here,
+    never a container to recurse into.
+    """
     if isinstance(tree, dict):
         for k in sorted(tree):
             yield from _walk(tree[k], f"{prefix}{k}/")
-    elif isinstance(tree, (list, tuple)):
+    elif isinstance(tree, (list, tuple)) and not isinstance(tree, P):
         for i, v in enumerate(tree):
             yield from _walk(v, f"{prefix}{i}/")
     else:

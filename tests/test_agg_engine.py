@@ -1,0 +1,241 @@
+"""Parity tests for the fused flat-buffer aggregation engine
+(core/agg_engine.py): every blend variant must match the per-leaf
+reference oracles in core/aggregation.py to tolerance, across f32/bf16
+and ragged (non-block-multiple) sizes, with the Pallas kernel in
+interpret mode so the suite runs on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.agg_engine import (AggEngine, engine_for,
+                                   weighted_sum_leaves)
+
+
+def _tree(key, dtype, ragged=True):
+    """Mixed-shape tree; ragged=True keeps sizes off (8*128) multiples."""
+    ks = jax.random.split(key, 4)
+    shapes = [(33, 17), (5,), (2, 3, 4), (257,)] if ragged else \
+        [(8, 128), (1024,), (16, 128)]
+    leaves = [jax.random.normal(k, s, dtype) for k, s in zip(ks, shapes)]
+    return {"a": leaves[0], "b": [leaves[1], leaves[2]],
+            "c": {"d": leaves[3]}} if ragged else \
+        {"a": leaves[0], "b": [leaves[1], leaves[2]]}
+
+
+def _clients(tree, C):
+    return [jax.tree.map(lambda x, i=i: x * (0.5 * i - 1.0) + i, tree)
+            for i in range(C)]
+
+
+def _assert_trees_close(out, ref, atol):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("dtype,atol,ragged", [
+    (jnp.float32, 1e-6, True),
+    (jnp.float32, 1e-6, False),
+    (jnp.bfloat16, 2e-2, True),
+])
+def test_fused_single_event_matches_blend_pytree(key, dtype, atol, ragged):
+    tree = _tree(key, dtype, ragged)
+    client = jax.tree.map(lambda x: -0.5 * x + 1.0, tree)
+    eng = AggEngine(tree, block_rows=8, interpret=True)
+    out = eng.blend(tree, client, 0.7)
+    ref = agg.blend_pytree(tree, client, 0.7)
+    _assert_trees_close(out, ref, atol)
+    # dtype preserved leaf-by-leaf
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("dtype,atol,K", [
+    (jnp.float32, 1e-5, 8),
+    (jnp.float32, 1e-5, 5),     # non-power-of-two: bucketed with 0-coef pad
+    (jnp.bfloat16, 4e-2, 8),
+])
+def test_fused_trunk_matches_sequential_blends(key, dtype, atol, K):
+    """K queued arrivals folded into one C=K launch == K sequential
+    eq. (3) blends (the folding identity, now on real pytrees)."""
+    tree = _tree(key, dtype)
+    clients = _clients(tree, K)
+    betas = [0.9, 0.5, 0.8, 0.95, 0.7, 0.6, 0.99, 0.85][:K]
+    eng = AggEngine(tree, block_rows=8, interpret=True)
+    out = eng.blend_trunk(tree, clients, betas)
+    ref = tree
+    for c, b in zip(clients, betas):
+        ref = agg.blend_pytree(ref, c, b)
+    _assert_trees_close(out, ref, atol)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-6),
+                                        (jnp.bfloat16, 2e-2)])
+def test_baseline_cycle_matches_weighted_sum_pytrees(key, dtype, atol):
+    """The per-cycle FedAvg reproduction: one C=M launch == eq. (2)."""
+    tree = _tree(key, dtype)
+    M = 5
+    clients = _clients(tree, M)
+    alpha = agg.sfl_alpha([60, 80, 100, 120, 140])
+    eng = AggEngine(tree, block_rows=8, interpret=True)
+    out = eng.weighted_sum(0.0, tree, list(alpha), clients)
+    ref = agg.weighted_sum_pytrees(0.0, tree, list(alpha), clients)
+    _assert_trees_close(out, ref, atol)
+
+
+def test_xla_mode_matches_kernel_mode(key):
+    """The off-TPU oracle MAC ("xla") and the Pallas kernel path
+    ("kernel", interpret) are the same math — runtimes may land on either
+    depending on backend, so pin them against each other."""
+    tree = _tree(key, jnp.float32)
+    K = 4
+    clients = _clients(tree, K)
+    betas = [0.9, 0.5, 0.8, 0.7]
+    eng_x = AggEngine(tree, mode="xla")
+    eng_k = AggEngine(tree, mode="kernel", interpret=True, block_rows=8)
+    assert eng_x.mode == "xla" and eng_k.mode == "kernel"
+    _assert_trees_close(eng_x.blend_trunk(tree, clients, betas),
+                        eng_k.blend_trunk(tree, clients, betas), 1e-6)
+    _assert_trees_close(eng_x.blend(tree, clients[0], 0.35),
+                        eng_k.blend(tree, clients[0], 0.35), 1e-6)
+
+
+def test_flatten_unflatten_roundtrip(key):
+    tree = _tree(key, jnp.float32)
+    eng = AggEngine(tree, interpret=True)
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    flat = eng.flatten(tree)
+    assert flat.shape == (n,)
+    _assert_trees_close(eng.unflatten(flat), tree, 0.0)
+
+
+def test_engine_cache_shared_per_structure(key):
+    tree = _tree(key, jnp.float32)
+    assert engine_for(tree) is engine_for(
+        jax.tree.map(lambda x: x + 1, tree))
+    assert engine_for(tree) is not engine_for(tree, block_rows=8)
+
+
+def test_single_client_trunk_uses_blend_fast_path(key):
+    """A trunk of one is exactly the single-event blend (C=1 kernel)."""
+    tree = _tree(key, jnp.float32)
+    client = jax.tree.map(lambda x: 2.0 * x, tree)
+    eng = AggEngine(tree, block_rows=8, interpret=True)
+    out = eng.blend_trunk(tree, [client], [0.6])
+    ref = agg.blend_pytree(tree, client, 0.6)
+    _assert_trees_close(out, ref, 1e-6)
+
+
+def test_weighted_sum_leaves_matches_reference(key):
+    """The sharded-leaf twin (used by core/distributed.py) is the same
+    math as weighted_sum_pytrees."""
+    tree = _tree(key, jnp.float32)
+    C = 3
+    clients = _clients(tree, C)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    coefs = [0.3, 0.25, 0.25]
+    out = weighted_sum_leaves(0.2, tree, coefs, stacked)
+    ref = agg.weighted_sum_pytrees(0.2, tree, coefs, clients)
+    _assert_trees_close(out, ref, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Runtime equivalence: engine on vs off
+# ---------------------------------------------------------------------------
+def _quadratic_task(M, D, seed=0):
+    rng = np.random.default_rng(seed)
+    targets = jnp.asarray(rng.normal(size=(M, D)))
+
+    def local_train(params, cid, steps, _seed):
+        p = params
+        for _ in range(steps):
+            p = p - 0.2 * (p - targets[cid])
+        return p
+
+    w0 = jnp.asarray(rng.normal(size=D))
+    return w0, local_train
+
+
+def test_run_afl_engine_history_equivalence():
+    """run_afl(algorithm='csmaafl') histories with the engine enabled vs
+    disabled agree to atol 1e-5 (the PR's acceptance criterion)."""
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+
+    M = 5
+    w0, local_train = _quadratic_task(M, 37)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m for m in range(M)],
+                       adaptive=False, seed=0)
+
+    def eval_fn(p):
+        return {"norm": float(jnp.linalg.norm(p))}
+
+    kw = dict(algorithm="csmaafl", iterations=80, tau_u=0.1, tau_d=0.1,
+              gamma=0.4, eval_fn=eval_fn, eval_every=10)
+    res_eng = run_afl(w0, fleet, local_train, use_engine=True, **kw)
+    res_ref = run_afl(w0, fleet, local_train, use_engine=False, **kw)
+    np.testing.assert_allclose(np.asarray(res_eng.params),
+                               np.asarray(res_ref.params), atol=1e-5)
+    np.testing.assert_allclose(res_eng.betas, res_ref.betas, atol=1e-6)
+    assert res_eng.history.times == res_ref.history.times
+    np.testing.assert_allclose(res_eng.history.series("norm"),
+                               res_ref.history.series("norm"), atol=1e-5)
+
+
+def test_run_afl_baseline_engine_still_equals_fedavg():
+    """C1 exactness survives the engine data plane: baseline AFL == SFL,
+    with BOTH loops routed through fused launches."""
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.sfl import run_fedavg
+
+    M, cycles = 4, 2
+    w0, local_train = _quadratic_task(M, 16)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m for m in range(M)],
+                       adaptive=False, seed=0)
+    w_sfl, _ = run_fedavg(w0, fleet, local_train, rounds=cycles,
+                          tau_u=0.2, tau_d=0.1, use_engine=True)
+    res = run_afl(w0, fleet, local_train, algorithm="afl_baseline",
+                  iterations=cycles * M, tau_u=0.2, tau_d=0.1,
+                  use_engine=True)
+    np.testing.assert_allclose(np.asarray(res.params), np.asarray(w_sfl),
+                               atol=1e-5)
+
+
+def test_async_server_consumes_drained_batch_whole():
+    """Trunk batching: a drained batch of K requests is consumed as ONE
+    fused launch (no requeue churn), every requester gets the post-trunk
+    model, and the result equals K sequential eq. (3) blends."""
+    import queue
+
+    from repro.core.async_runtime import AsyncCSMAAFLServer, _SlotRequest
+
+    D = 23
+    rng = np.random.default_rng(3)
+    w0 = jnp.asarray(rng.normal(size=D))
+    models = [jnp.asarray(rng.normal(size=D)) for _ in range(4)]
+    server = AsyncCSMAAFLServer(w0, gamma=0.4)     # not started: drive by hand
+    replies = [queue.Queue() for _ in models]
+    batch = [_SlotRequest(cid=i, model=m, model_iter=0, t_request=float(i),
+                          reply=r)
+             for i, (m, r) in enumerate(zip(models, replies))]
+    server._aggregate_trunk(batch)
+    assert server.j == 4
+    assert server.trunk_sizes == [4]
+    assert len(server.betas) == 4
+    # reference: sequential blends with the recorded betas
+    ref = w0
+    for m, b in zip(models, server.betas):
+        ref = agg.blend_pytree(ref, m, b)
+    np.testing.assert_allclose(np.asarray(server.global_params),
+                               np.asarray(ref), atol=1e-5)
+    # trunk-level broadcast: every requester got w_{j_end} at j_end
+    for r in replies:
+        params, j = r.get_nowait()
+        assert j == 4
+        np.testing.assert_allclose(np.asarray(params),
+                                   np.asarray(server.global_params))

@@ -16,8 +16,8 @@ from repro.configs.base import MeshConfig
 from repro.core.shardmap_agg import shardmap_weighted_blend
 from repro.core.aggregation import weighted_sum_pytrees
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 mc = MeshConfig((4, 2), ("data", "model"))
 blend = shardmap_weighted_blend(mesh, mc)
 key = jax.random.PRNGKey(0)
@@ -35,6 +35,12 @@ for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
 # the explicit path lowers to a real psum: check collectives in the HLO
 txt = jax.jit(blend).lower(g, w, coefs).compile().as_text()
 assert "all-reduce" in txt
+# the Pallas per-shard path must agree with the jnp per-shard path
+blend_k = shardmap_weighted_blend(mesh, mc, use_kernel=True)
+with mesh:
+    out_k = jax.jit(blend_k)(g, w, coefs)
+for a, b in zip(jax.tree.leaves(out_k), jax.tree.leaves(ref)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 print("OK")
 """
 
@@ -59,8 +65,9 @@ def test_shardmap_blend_single_device():
     from repro.core.aggregation import weighted_sum_pytrees
     from repro.core.shardmap_agg import shardmap_weighted_blend
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     mc = MeshConfig((1, 1), ("data", "model"))
     blend = shardmap_weighted_blend(mesh, mc)
     key = jax.random.PRNGKey(1)
@@ -74,3 +81,31 @@ def test_shardmap_blend_single_device():
                                 for i in range(3)])
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(ref["w"]), atol=1e-6)
+
+
+def test_shardmap_blend_kernel_path_single_device():
+    """use_kernel=True: the per-shard Pallas launch equals the jnp path."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import MeshConfig
+    from repro.core.aggregation import weighted_sum_pytrees
+    from repro.core.shardmap_agg import shardmap_weighted_blend
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mc = MeshConfig((1, 1), ("data", "model"))
+    blend = shardmap_weighted_blend(mesh, mc, use_kernel=True,
+                                    interpret=True)
+    key = jax.random.PRNGKey(2)
+    g = {"w": jax.random.normal(key, (5, 3)),
+         "b": jax.random.normal(key, (7,))}
+    w = jax.tree.map(lambda x: jnp.stack([x, -x, 2 * x]), g)
+    coefs = jnp.asarray([0.4, 0.2, 0.2, 0.2])
+    with mesh:
+        out = blend(g, w, coefs)
+    ref = weighted_sum_pytrees(0.4, g, [0.2, 0.2, 0.2],
+                               [jax.tree.map(lambda x: x[i], w)
+                                for i in range(3)])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

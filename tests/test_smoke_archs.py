@@ -60,8 +60,8 @@ def test_reduced_train_step(arch, key):
     cfg = get_config(arch).reduced()
     fed = FederatedConfig(local_steps=1)
     params = tmod.init_params(cfg, key)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     C, K, b, S = 1, 1, 2, 32
     batch1 = _batch_for(cfg, b, S, key)
     batches = jax.tree.map(lambda x: x[None, None], batch1)  # (C,K,b,...)

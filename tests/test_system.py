@@ -21,8 +21,8 @@ HOST_MESH = MeshConfig((1, 1), ("data", "model"))
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.slow
