@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-agg bench-gate
+.PHONY: test bench bench-agg bench-client bench-gate
 
 test:
 	python -m pytest -x -q
@@ -13,6 +13,12 @@ bench:
 bench-agg:
 	python -m benchmarks.run --only aggregation
 
-# same, but fail on >1.3x slowdown vs benchmarks/baseline_aggregation.json
+# the client-plane bench (fused fleet plane vs per-minibatch run_afl)
+bench-client:
+	python -m benchmarks.run --only client_plane
+
+# both gated benches; fail on >1.3x slowdown vs benchmarks/baseline_*.json
+# (or below the acceptance floors — 3x aggregation, per-host client plane,
+# see benchmarks/check_regression.py — or client-plane parity >1e-5)
 bench-gate:
-	python -m benchmarks.run --only aggregation --gate
+	python -m benchmarks.run --only aggregation,client_plane --gate

@@ -1,0 +1,112 @@
+"""Client-plane benchmark: end-to-end ``run_afl`` events/s with the fused
+fleet plane (docs/DESIGN.md §4) vs the per-minibatch reference path, at
+M=32 clients, K=4 local iterations.
+
+plane-off — per-minibatch local SGD: O(K·local_batches) jit dispatches
+            per upload event + a per-event client-pytree flatten at blend
+            time.
+plane-on  — scanned local SGD (batches staged as index arrays, gathered
+            on device), event-window batched retrains (one vmapped
+            launch per window of distinct uploaders), the blend
+            dynamic-slicing the uploader's row out of the device-
+            resident (M, n) fleet buffer.
+
+The model is the paper-CNN *geometry* (2 conv + 2 maxpool + 2 FC on
+28x28) at a CPU-budget width (same convention as bench_convergence's
+scaled mode).  What the plane eliminates is per-step dispatch + per-op
+launch overhead; the narrow width keeps the benchmark in the regime
+where that overhead is visible at all on a small-CPU host.  NOTE the
+measured speedup is strongly host-dependent: on this repo's 2-core CPU
+container JAX dispatch is ~3us and conv compute dominates, capping the
+end-to-end win near ~2x (at full paper width the two paths are
+compute-equal by parity and the ratio approaches 1).  On dispatch-bound
+hosts (accelerators, where a dispatch costs 50-200us and convs are
+fast), the same mechanism is worth an order of magnitude — the ISSUE's
+5x target assumes that regime.  The gate therefore pins the same-run
+ratio against the committed baseline (the "someone re-introduced
+per-minibatch dispatch" signal) with a floor at the measured-host level,
+plus the plane-on/plane-off parity bound.
+
+Also records plane-on/plane-off parity on the final params (gated
+≤1e-5 by ``benchmarks/check_regression.py``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_result
+
+M = 32
+K = 4                      # local iterations per upload
+LOCAL_BATCHES = 8          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 64            # upload events per timed run
+
+
+def _run(task, fleet, p0, plane, use_plane: bool):
+    from repro.core.afl import run_afl
+    return run_afl(p0, fleet, task.local_train_fn, algorithm="csmaafl",
+                   iterations=ITERATIONS, tau_u=0.1, tau_d=0.1, gamma=0.4,
+                   client_plane=plane, use_client_plane=use_plane)
+
+
+def bench_client_plane() -> None:
+    import jax
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE, local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=0)
+    p0 = task.init_params()
+    plane = task.client_plane(fleet)
+
+    def timed(use_plane):
+        # warmup run compiles every bucket variant, then one timed run
+        # (an end-to-end run IS the median of ITERATIONS events)
+        r = _run(task, fleet, p0, plane, use_plane)
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        t0 = time.perf_counter()
+        r = _run(task, fleet, p0, plane, use_plane)
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        return time.perf_counter() - t0, r
+
+    t_off, r_off = timed(False)
+    t_on, r_on = timed(True)
+    ev_off = ITERATIONS / t_off
+    ev_on = ITERATIONS / t_on
+    speedup = t_off / t_on
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_on.params),
+                                 jax.tree.leaves(r_off.params)))
+    emit("client_plane.run_afl.per_minibatch", t_off * 1e6 / ITERATIONS,
+         f"{ev_off:.1f} events/s (K*B={K * LOCAL_BATCHES} dispatches/event)")
+    emit("client_plane.run_afl.fused_plane", t_on * 1e6 / ITERATIONS,
+         f"{ev_on:.1f} events/s; {speedup:.1f}x vs per-minibatch; "
+         f"parity {parity:.2e}")
+    save_result("client_plane", {
+        "model": "paper_cnn_cpu_budget", "M": M, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS,
+        "mode": plane.engine.mode,
+        "off_s": t_off, "on_s": t_on,
+        "events_per_s_off": ev_off, "events_per_s_on": ev_on,
+        "speedup": speedup, "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    bench_client_plane()
+
+
+if __name__ == "__main__":
+    main()

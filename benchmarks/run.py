@@ -8,12 +8,15 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernels       Pallas-kernel oracles micro-bench
   aggregation   β-solver scaling + §III-A decay table + fused engine vs
                 naive per-leaf blend (docs/DESIGN.md §3)
+  client_plane  fused fleet plane vs per-minibatch run_afl on the paper
+                CNN at M=32 (docs/DESIGN.md §4)
   roofline      §Roofline table from the dry-run records
 
-``--gate`` runs ``benchmarks/check_regression.py`` afterwards and fails
-the invocation on a >1.3x aggregation slowdown vs the committed baseline
-(``make bench-gate`` = ``--only aggregation --gate``; ``make bench-agg``
-runs ungated).
+``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
+gated benchmark THIS invocation produced and fails on a >1.3x slowdown
+vs the committed baselines (``make bench-gate`` =
+``--only aggregation,client_plane --gate``; ``make bench-agg`` /
+``make bench-client`` run ungated).
 """
 from __future__ import annotations
 
@@ -26,17 +29,18 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
-                         "aggregation,roofline")
+                         "aggregation,client_plane,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
-                    help="fail on aggregation-bench regression vs the "
-                         "committed baseline")
+                    help="fail on bench regression vs the committed "
+                         "baselines")
     args = ap.parse_args(argv)
     names = (args.only.split(",") if args.only else
-             ["fig2", "aggregation", "kernels", "convergence", "roofline"])
+             ["fig2", "aggregation", "client_plane", "kernels",
+              "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
-    agg_ran = False
+    gated_ran = set()
     for name in names:
         try:
             if name == "fig2":
@@ -51,7 +55,11 @@ def main(argv=None) -> int:
             elif name == "aggregation":
                 from benchmarks import bench_aggregation as b
                 b.main()
-                agg_ran = True
+                gated_ran.add("aggregation")
+            elif name == "client_plane":
+                from benchmarks import bench_client_plane as b
+                b.main()
+                gated_ran.add("client_plane")
             elif name == "roofline":
                 from benchmarks import bench_roofline as b
                 b.main()
@@ -62,15 +70,24 @@ def main(argv=None) -> int:
             print(f"{name},0,FAILED", file=sys.stderr)
             traceback.print_exc()
     if args.gate:
-        # only gate on a result THIS invocation produced — a stale
-        # aggregation_fused.json from an earlier run proves nothing
-        if not agg_ran:
-            print("gate: aggregation bench did not run (or failed) in "
-                  "this invocation — nothing to gate", file=sys.stderr)
+        # only gate on results THIS invocation produced — a stale JSON
+        # from an earlier run proves nothing; a REQUESTED gated bench
+        # that crashed must fail the gate, not silently escape it
+        gated_requested = {n for n in names
+                           if n in ("aggregation", "client_plane")}
+        missing = gated_requested - gated_ran
+        if missing:
+            print(f"gate: gated benchmark(s) {sorted(missing)} did not "
+                  "run (or failed) in this invocation", file=sys.stderr)
+            rc = max(rc, 2)
+        if not gated_ran:
+            print("gate: no gated benchmark ran (or all failed) in this "
+                  "invocation — nothing to gate", file=sys.stderr)
             rc = max(rc, 2)
         else:
             from benchmarks import check_regression
-            rc = max(rc, check_regression.check())
+            for g in sorted(gated_ran):
+                rc = max(rc, check_regression.check_gate(g))
     return rc
 
 

@@ -24,9 +24,12 @@ def main():
     fleet = make_fleet(10, tau=1.0, hetero_a=8.0,
                        samples_per_client=task.num_samples(), seed=0)
     p0 = task.init_params()
+    # the fused fleet plane: all 10 client models live as one (M, n)
+    # device buffer; local SGD is scanned/vmapped (docs/DESIGN.md §4)
+    plane = task.client_plane(fleet)
 
     # 2. synchronous baseline (FedAvg, paper eq. 2)
-    _, hist = run_fedavg(p0, fleet, task.local_train_fn, rounds=4,
+    _, hist = run_fedavg(p0, fleet, None, client_plane=plane, rounds=4,
                          tau_u=0.05, tau_d=0.05, eval_fn=task.eval_fn)
     print("\nFedAvg (SFL):")
     for t, m in zip(hist.times, hist.metrics):
@@ -34,7 +37,8 @@ def main():
     horizon = hist.times[-1]
 
     # 3. CSMAAFL (Algorithm 1): same virtual-time horizon
-    res = run_afl(p0, fleet, task.local_train_fn, algorithm="csmaafl",
+    res = run_afl(p0, fleet, None, client_plane=plane,
+                  algorithm="csmaafl",
                   iterations=260, tau_u=0.05, tau_d=0.05, gamma=0.4,
                   eval_fn=task.eval_fn, eval_every=40)
     print("\nCSMAAFL (gamma=0.4):")
@@ -44,7 +48,7 @@ def main():
 
     # 4. the paper's exact-equivalence baseline (§III-B): after every M
     #    uploads the global model EQUALS the FedAvg round
-    res_b = run_afl(p0, fleet, task.local_train_fn,
+    res_b = run_afl(p0, fleet, None, client_plane=plane,
                     algorithm="afl_baseline", iterations=40,
                     tau_u=0.05, tau_d=0.05, eval_fn=task.eval_fn,
                     eval_every=10)

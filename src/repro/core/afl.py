@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
@@ -37,7 +38,7 @@ class AFLResult:
 
 
 def run_afl(params0, fleet: Sequence[ClientSpec],
-            local_train_fn: LocalTrainFn, *,
+            local_train_fn: Optional[LocalTrainFn], *,
             algorithm: str,              # afl_alpha | afl_baseline | csmaafl
             iterations: int, tau_u: float, tau_d: float,
             gamma: float = 0.4, mu_momentum: float = 0.9,
@@ -45,19 +46,28 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             server_opt: Optional[str] = None, server_lr: float = 1.0,
             max_staleness: Optional[int] = None,
             use_engine: bool = True,
+            client_plane=None, use_client_plane: bool = True,
             seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
 
-    ``use_engine`` selects the blend data plane: True (default) routes
-    every eq.-(3) blend through the fused flat-buffer engine
-    (``core.agg_engine``, one Pallas launch per event); False keeps the
-    per-leaf ``aggregation.blend_pytree`` reference path.  Both produce
-    numerically equivalent histories (parity-tested to 1e-5).
+    Three data planes, most fused first (all parity-tested to 1e-5):
+
+    * ``client_plane`` (a ``core.client_plane.ClientPlane``, used when
+      ``use_client_plane=True``): the whole fleet lives as one (M, n)
+      device buffer; local SGD is one scanned launch per event and the
+      blend ``dynamic_slice``s the uploader's row — ~2 launches per
+      event total.  ``local_train_fn`` may be None in this mode.
+    * ``use_engine=True`` (default, no plane): per-event fused flat-
+      buffer blend through ``core.agg_engine``; local training stays the
+      task's per-minibatch loop.
+    * neither: the per-leaf ``aggregation.blend_pytree`` reference path.
 
     ``server_opt`` (beyond-paper, FedOpt-style): instead of the plain blend
     w ← β w + (1-β) w_m, treat Δ = (1-β)(w_m − w) as a pseudo-gradient and
     apply a server optimizer (e.g. "adam"): w ← ServerOpt(w, −Δ).  With
-    server_opt=None this reduces exactly to eq. (3).
+    server_opt=None this reduces exactly to eq. (3).  With the engine or
+    plane active, the pseudo-gradient and the optimizer state live on the
+    flat buffer (one fused delta launch, single-leaf optimizer pytree).
 
     ``max_staleness`` (beyond-paper, admission control): uploads staler
     than the bound are *dropped* — the client still receives the fresh
@@ -67,11 +77,14 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     """
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
-    opt_state = None
+    plane = client_plane if (use_client_plane and client_plane is not None) \
+        else None
+    if plane is None and local_train_fn is None:
+        raise ValueError("local_train_fn is required without a client plane")
+    s_init = s_update = None
     if server_opt is not None:
         from repro.optim import optimizers as _opt
         s_init, s_update = _opt.get_optimizer(server_opt)
-        opt_state = s_init(params0)
 
     if algorithm == "afl_baseline":
         sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
@@ -84,23 +97,66 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
 
     tracker = agg.StalenessTracker(momentum=mu_momentum)
     global_params = params0
-    engine = g_flat = None
-    if use_engine and server_opt is None:
-        # the global model lives in the engine's contiguous flat buffer
-        # between events; each event is one fused kernel launch
-        engine = engine_for(params0)
+    engine = g_flat = fleet_buf = opt_state = None
+    if plane is not None:
+        # fleet-resident mode: global model AND every client model live
+        # as flat device buffers; pytrees materialize only for eval
+        engine = plane.engine
         g_flat = engine.flatten(params0)
-    # every client immediately trains on the initial broadcast w_0
-    client_models: Dict[int, Any] = {}
-    for c in fleet:
-        client_models[c.cid] = local_train_fn(
-            params0, c.cid, c.local_steps, seed * 100003)
+        if server_opt is not None:
+            opt_state = s_init(g_flat)
+        # every client immediately trains on the initial broadcast w_0 —
+        # ONE vmapped launch over the (M, n) buffer
+        fleet_buf = plane.init_fleet(g_flat, seed * 100003)
+        global_params = None
+    else:
+        if use_engine:
+            # the global model lives in the engine's contiguous flat
+            # buffer between events; each event is one fused launch
+            engine = engine_for(params0)
+            g_flat = engine.flatten(params0)
+            if server_opt is not None:
+                opt_state = s_init(g_flat)
+        elif server_opt is not None:
+            opt_state = s_init(params0)
+        # every client immediately trains on the initial broadcast w_0
+        client_models: Dict[int, Any] = {}
+        for c in fleet:
+            client_models[c.cid] = local_train_fn(
+                params0, c.cid, c.local_steps, seed * 100003)
+
+    def cur_params():
+        return engine.unflatten(g_flat) if global_params is None \
+            else global_params
+
+    # --- event-window retrain batching (plane mode) ---------------------
+    # A client's retrain is only consumed at its NEXT upload, so retrains
+    # for a window of events with distinct uploaders are independent:
+    # buffer (cid, g-snapshot, K, seed) and flush them as ONE vmapped
+    # launch when a cid repeats (or at loop end).  Blends stay sequential
+    # (they are the cheap part); histories are bit-identical to the
+    # per-event order.
+    pending: List[tuple] = []
+    pending_cids = set()
+
+    def flush_pending():
+        nonlocal fleet_buf
+        if pending:
+            fleet_buf = plane.train_rows(fleet_buf, pending)
+            pending.clear()
+            pending_cids.clear()
+
+    def queue_retrain(cid, steps, seed_j):
+        # snapshot survives the next blend's buffer donation (TPU/GPU)
+        snap = jnp.copy(g_flat) if engine.donate else g_flat
+        pending.append((cid, snap, steps, seed_j))
+        pending_cids.add(cid)
 
     hist = FLHistory()
     events: List[UploadEvent] = []
     betas: List[float] = []
     if eval_fn is not None:
-        hist.add(0.0, 0, eval_fn(global_params))
+        hist.add(0.0, 0, eval_fn(params0))
 
     for ev in sched.events(iterations):
         events.append(ev)
@@ -120,15 +176,34 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
         betas.append(beta)
 
         # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
-        if server_opt is None:
+        if plane is not None:
+            if ev.cid in pending_cids:
+                # this uploader's pending retrain feeds this very blend
+                flush_pending()
+            if server_opt is None:
+                g_flat = engine.blend_row_flat(g_flat, fleet_buf, ev.cid,
+                                               beta)
+            else:
+                pg = engine.delta_row_flat(g_flat, fleet_buf, ev.cid,
+                                           one_minus_beta)
+                g_flat, opt_state = s_update(g_flat, pg, opt_state,
+                                             server_lr)
+        elif server_opt is None:
             if engine is not None:
                 g_flat, global_params = engine.blend_flat(
                     g_flat, client_models[ev.cid], beta)
             else:
                 global_params = agg.blend_pytree(
                     global_params, client_models[ev.cid], beta)
+        elif engine is not None:
+            # pseudo-gradient −Δ on the flat buffer (one fused launch),
+            # server optimizer over the single-leaf flat pytree
+            pg = engine.delta_flat(g_flat, client_models[ev.cid],
+                                   one_minus_beta)
+            g_flat, opt_state = s_update(g_flat, pg, opt_state, server_lr)
+            global_params = engine.unflatten(g_flat)
         else:
-            # beyond-paper: pseudo-gradient −Δ through a server optimizer
+            # per-leaf reference path for the server optimizer
             import jax as _jax
             import jax.numpy as _jnp
             pseudo_grad = _jax.tree.map(
@@ -144,15 +219,25 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             # iterations; mid-cycle, clients keep training from the cycle-
             # start model (their uploads must equal SFL's w_t^m).
             if ev.j % M == 0:
-                for c in fleet:
-                    client_models[c.cid] = local_train_fn(
-                        global_params, c.cid, c.local_steps,
-                        seed * 100003 + ev.j)
+                if plane is not None:
+                    fleet_buf = plane.train_all(g_flat,
+                                                seed * 100003 + ev.j)
+                else:
+                    for c in fleet:
+                        client_models[c.cid] = local_train_fn(
+                            global_params, c.cid, c.local_steps,
+                            seed * 100003 + ev.j)
         else:
             # §II-B: only the uploading client receives w_{j+1} (eq. 4)
-            client_models[ev.cid] = local_train_fn(
-                global_params, ev.cid, ev.local_steps, seed * 100003 + ev.j)
+            if plane is not None:
+                queue_retrain(ev.cid, ev.local_steps, seed * 100003 + ev.j)
+            else:
+                client_models[ev.cid] = local_train_fn(
+                    global_params, ev.cid, ev.local_steps,
+                    seed * 100003 + ev.j)
 
         if eval_fn is not None and ev.j % eval_every == 0:
-            hist.add(ev.t_complete, ev.j, eval_fn(global_params))
-    return AFLResult(global_params, hist, events, betas)
+            hist.add(ev.t_complete, ev.j, eval_fn(cur_params()))
+    if plane is not None:
+        flush_pending()       # leave the fleet buffer fully retrained
+    return AFLResult(cur_params(), hist, events, betas)

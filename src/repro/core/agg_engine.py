@@ -31,6 +31,20 @@ Blend variants:
 * ``weighted_sum``  — the baseline per-cycle FedAvg reproduction
   (eq. 2/7): w ← c0·w + Σ α_m·w_m as one C=M launch.
 
+Row-addressed variants (the client-plane data path, docs/DESIGN.md §4):
+when the fleet's models live as one device-resident (M, n) stacked flat
+buffer (``core.client_plane``), the uploading client's weights are a ROW
+of that buffer — no pytree exists to flatten.  ``blend_row_flat`` /
+``delta_row_flat`` ``dynamic_slice`` the row inside the jitted program,
+``blend_rows_flat`` / ``weighted_sum_rows_flat`` feed already-stacked
+(C, n) rows straight into the MAC.  These eliminate the per-event
+per-leaf ``jnp.concatenate`` re-flatten entirely.
+
+``delta_flat`` / ``delta_row_flat`` produce the FedOpt pseudo-gradient
+(1-β)(w − w_m) as one fused f32 launch — the server-optimizer path then
+runs entirely on the flat buffer (a flat array is a valid single-leaf
+pytree for ``repro.optim.optimizers``).
+
 ``weighted_sum_leaves`` is the per-leaf twin used where leaves must stay
 individually sharded (the GSPMD fused step in ``core/distributed.py``) —
 there the flat concatenate would fight the partitioner, so the engine
@@ -56,6 +70,15 @@ def _auto_interpret() -> bool:
 
 def _can_donate() -> bool:
     return jax.default_backend() in ("tpu", "gpu")
+
+
+def pow2_bucket(n: int) -> int:
+    """Next power of two ≥ n — the shared bucketing policy for trunk
+    widths, event-window widths and scan lengths (bounds compile variants
+    to log2 instead of one per distinct size)."""
+    if n <= 0:
+        raise ValueError("bucket size must be positive")
+    return 1 << (n - 1).bit_length()
 
 
 class AggEngine:
@@ -100,6 +123,7 @@ class AggEngine:
             storage_dtype if storage_dtype is not None
             else jnp.result_type(*self.dtypes))
         donate = _can_donate() if donate is None else donate
+        self.donate = donate
         kern = functools.partial(weighted_agg_flat2d,
                                  block_rows=self.block_rows,
                                  interpret=self.interpret)
@@ -143,6 +167,33 @@ class AggEngine:
                 new = mac_xla(g_flat, client_trees, coefs)
             return new, unflatten_expr(new)
 
+        def mac_rows(g_flat, rows, coefs):
+            """Rows are ALREADY flat (C, n) — no flatten, pure MAC."""
+            if self.mode == "kernel":
+                return kern(g_flat, rows, coefs)
+            acc = coefs[0] * g_flat.astype(jnp.float32)
+            acc = acc + jnp.tensordot(coefs[1:], rows.astype(jnp.float32),
+                                      axes=(0, 0))
+            return acc.astype(self.storage_dtype)
+
+        def blend_row(g_flat, fleet_buf, cid, coefs):
+            """eq. (3) against row ``cid`` of the (M, n) fleet buffer."""
+            row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)
+            if self.mode == "kernel":
+                return kern(g_flat, row, coefs)
+            acc = (coefs[0] * g_flat.astype(jnp.float32)
+                   + coefs[1] * row[0].astype(jnp.float32))
+            return acc.astype(self.storage_dtype)
+
+        def delta_row(g_flat, fleet_buf, cid, scale):
+            row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)[0]
+            return scale * (g_flat.astype(jnp.float32)
+                            - row.astype(jnp.float32))
+
+        def delta_one(g_flat, client_tree, scale):
+            return scale * (g_flat.astype(jnp.float32)
+                            - flatten_expr(client_tree).astype(jnp.float32))
+
         self._flatten_expr = flatten_expr
         self._unflatten_expr = unflatten_expr
         self._flatten = jax.jit(flatten_expr)
@@ -150,8 +201,19 @@ class AggEngine:
         dn = (0,) if donate else ()
         self._blend_one = jax.jit(blend_one, donate_argnums=dn)
         self._blend_many = jax.jit(blend_many, donate_argnums=dn)
+        self._mac_rows = jax.jit(mac_rows, donate_argnums=dn)
+        self._blend_row = jax.jit(blend_row, donate_argnums=dn)
+        self._delta_row = jax.jit(delta_row)
+        self._delta_one = jax.jit(delta_one)
 
     # -- flat store ---------------------------------------------------------
+    @property
+    def unflatten_expr(self):
+        """The traceable (non-jitted) unflatten expression — tasks close
+        over it to express loss/grad against the flat parameter vector
+        (``jax.grad`` through it yields a flat gradient directly)."""
+        return self._unflatten_expr
+
     def flatten(self, tree) -> jnp.ndarray:
         """Pytree -> contiguous (n,) storage buffer."""
         return self._flatten(tree)
@@ -184,7 +246,7 @@ class AggEngine:
             return self.blend_flat(g_flat, client_trees[0], betas[0])
         c0, coefs = agg.fold_sequential_blends([float(b) for b in betas])
         K = len(client_trees)
-        bucket = 1 << (K - 1).bit_length()
+        bucket = pow2_bucket(K)
         client_trees = tuple(client_trees) + \
             (client_trees[0],) * (bucket - K)
         coefs = np.concatenate((coefs, np.zeros(bucket - K)))
@@ -199,6 +261,53 @@ class AggEngine:
             jnp.reshape(jnp.asarray(coef0, jnp.float32), (1,)),
             jnp.asarray(coefs, jnp.float32)])
         return self._blend_many(g_flat, tuple(client_trees), cvec)
+
+    # -- row-addressed blends over a (M, n) fleet buffer --------------------
+    def blend_row_flat(self, g_flat, fleet_buf, cid, beta) -> jnp.ndarray:
+        """Single-event eq. (3) against row ``cid`` of the stacked fleet
+        buffer — the ``dynamic_slice`` happens inside the jitted program,
+        so there is no per-event flatten and no host round-trip."""
+        coefs = jnp.stack([jnp.float32(beta), 1.0 - jnp.float32(beta)])
+        return self._blend_row(g_flat, fleet_buf, jnp.int32(cid), coefs)
+
+    def blend_rows_flat(self, g_flat, rows: jnp.ndarray,
+                        betas: Sequence[float]) -> jnp.ndarray:
+        """Trunk of K sequential eq.-(3) blends where the K client models
+        are ALREADY flat rows (K, n).  Same pow2 bucketing as
+        ``blend_trunk_flat`` (zero-coefficient zero rows pad the trunk)."""
+        K = rows.shape[0]
+        if K != len(betas):
+            raise ValueError("one beta per queued row")
+        if K == 1:
+            coefs = jnp.stack([jnp.float32(betas[0]),
+                               1.0 - jnp.float32(betas[0])])
+            return self._mac_rows(g_flat, rows, coefs)
+        c0, coefs = agg.fold_sequential_blends([float(b) for b in betas])
+        bucket = pow2_bucket(K)
+        if bucket > K:
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((bucket - K, self.n), rows.dtype)])
+            coefs = np.concatenate((coefs, np.zeros(bucket - K)))
+        cvec = jnp.asarray(np.concatenate(([c0], coefs)), jnp.float32)
+        return self._mac_rows(g_flat, rows, cvec)
+
+    def weighted_sum_rows_flat(self, coef0, g_flat, coefs,
+                               rows: jnp.ndarray) -> jnp.ndarray:
+        """Baseline cycle (eq. 2/7) where the M client models are the
+        (M, n) fleet buffer itself: w ← c0·w + Σ c_m·rows[m]."""
+        cvec = jnp.concatenate([
+            jnp.reshape(jnp.asarray(coef0, jnp.float32), (1,)),
+            jnp.asarray(coefs, jnp.float32)])
+        return self._mac_rows(g_flat, rows, cvec)
+
+    # -- FedOpt pseudo-gradients on the flat buffer -------------------------
+    def delta_flat(self, g_flat, client_tree, scale) -> jnp.ndarray:
+        """(n,) f32 pseudo-gradient scale·(w − w_client), one launch."""
+        return self._delta_one(g_flat, client_tree, jnp.float32(scale))
+
+    def delta_row_flat(self, g_flat, fleet_buf, cid, scale) -> jnp.ndarray:
+        return self._delta_row(g_flat, fleet_buf, jnp.int32(cid),
+                               jnp.float32(scale))
 
     # -- pytree-in / pytree-out conveniences --------------------------------
     def blend(self, global_tree, client_tree, beta):

@@ -38,20 +38,27 @@ from repro.core.scheduler import ClientSpec
 @dataclasses.dataclass
 class _SlotRequest:
     cid: int
-    model: Any               # locally trained model w_i^m
+    model: Any               # locally trained model w_i^m (pytree, or a
+    #                          flat (n,) row in client-plane mode)
     model_iter: int          # i — global iteration the client trained from
     t_request: float
     reply: "queue.Queue"     # server puts (new_global, j) here
 
 
 class AsyncCSMAAFLServer:
-    """Algorithm 1's server loop in a thread."""
+    """Algorithm 1's server loop in a thread.
+
+    With ``client_plane`` set (docs/DESIGN.md §4), the whole protocol
+    stays FLAT: clients upload (n,) rows, the trunk blend consumes the
+    stacked (K, n) rows directly (``AggEngine.blend_rows_flat`` — no
+    per-leaf flatten concat), and replies carry the flat global buffer.
+    """
 
     def __init__(self, params0, *, gamma: float = 0.4,
                  mu_momentum: float = 0.9,
                  max_staleness: Optional[int] = None,
-                 use_engine: bool = True):
-        self.global_params = params0
+                 use_engine: bool = True,
+                 client_plane=None):
         self.gamma = gamma
         self.tracker = agg.StalenessTracker(momentum=mu_momentum)
         self.max_staleness = max_staleness
@@ -60,9 +67,14 @@ class AsyncCSMAAFLServer:
         self.last_slot: Dict[int, int] = {}
         self.betas: List[float] = []
         self.trunk_sizes: List[int] = []
-        self._engine = engine_for(params0) if use_engine else None
+        self._plane = client_plane
+        if client_plane is not None:
+            self._engine = client_plane.engine
+        else:
+            self._engine = engine_for(params0) if use_engine else None
         self._flat = (self._engine.flatten(params0)
                       if self._engine is not None else None)
+        self.global_params = None if client_plane is not None else params0
         self._stop = threading.Event()
         self._lock = threading.Lock()
         self._thread = threading.Thread(target=self._serve, daemon=True)
@@ -77,7 +89,14 @@ class AsyncCSMAAFLServer:
 
     def snapshot(self):
         with self._lock:
+            if self._plane is not None:
+                return self._engine.unflatten(self._flat), self.j
             return self.global_params, self.j
+
+    def snapshot_flat(self):
+        """Flat global buffer (client-plane mode only)."""
+        with self._lock:
+            return self._flat
 
     def _serve(self):
         while not self._stop.is_set():
@@ -118,29 +137,57 @@ class AsyncCSMAAFLServer:
             self.trunk_sizes.append(len(batch))
             # K sequential eq. (3) blends folded into ONE kernel launch:
             # w ← (Πβ_j)·w + Σ_j (1-β_j)(Π_{k>j}β_k)·w_{c_j}
-            if self._engine is not None:
+            if self._plane is not None:
+                # uploads are already flat rows: stack and MAC, no
+                # per-leaf flatten anywhere on the trunk path
+                import jax.numpy as jnp
+                rows = jnp.stack([r.model for r in batch])
+                # client threads still hold the current buffer (replies /
+                # snapshot_flat); on donating backends the blend would
+                # delete it under them — blend from a copy instead
+                src = jnp.copy(self._flat) if self._engine.donate \
+                    else self._flat
+                self._flat = self._engine.blend_rows_flat(src, rows, betas)
+                fresh = self._flat
+            elif self._engine is not None:
                 self._flat, self.global_params = \
                     self._engine.blend_trunk_flat(
                         self._flat, [r.model for r in batch], betas)
+                fresh = self.global_params
             else:
                 for req, beta in zip(batch, betas):
                     self.global_params = agg.blend_pytree(
                         self.global_params, req.model, beta)
+                fresh = self.global_params
             # trunk-level broadcast: everyone in the batch gets w_{j_end}
             j_end = self.j
             for req in batch:
-                req.reply.put((self.global_params, j_end))
+                req.reply.put((fresh, j_end))
 
 
 def client_worker(server: AsyncCSMAAFLServer, spec: ClientSpec,
-                  local_train_fn: Callable, *, rounds: int,
+                  local_train_fn: Optional[Callable], *, rounds: int,
                   time_scale: float = 0.01, params0=None,
-                  stats: Optional[Dict] = None):
-    """One client thread: train -> request slot -> receive fresh model."""
-    params, model_iter = (params0, 0) if params0 is not None \
-        else server.snapshot()
+                  stats: Optional[Dict] = None, client_plane=None):
+    """One client thread: train -> request slot -> receive fresh model.
+
+    With ``client_plane`` the thread's model state is a flat (n,) row:
+    local training is ONE scanned launch per round
+    (``ClientPlane.local_train_flat``) and uploads/downloads carry flat
+    buffers end to end."""
+    if client_plane is not None:
+        params = (client_plane.engine.flatten(params0)
+                  if params0 is not None else server.snapshot_flat())
+        model_iter = 0
+    else:
+        params, model_iter = (params0, 0) if params0 is not None \
+            else server.snapshot()
     for r in range(rounds):
-        params = local_train_fn(params, spec.cid, spec.local_steps, r)
+        if client_plane is not None:
+            params = client_plane.local_train_flat(
+                params, spec.cid, spec.local_steps, r)
+        else:
+            params = local_train_fn(params, spec.cid, spec.local_steps, r)
         time.sleep(spec.tau_compute * spec.local_steps * time_scale)
         reply: "queue.Queue" = queue.Queue()
         server.requests.put(_SlotRequest(
@@ -155,17 +202,24 @@ def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
               rounds_per_client: int, gamma: float = 0.4,
               time_scale: float = 0.005,
               max_staleness: Optional[int] = None,
-              use_engine: bool = True):
+              use_engine: bool = True,
+              client_plane=None, use_client_plane: bool = True):
     """Run the threaded fleet to completion; returns (params, server)."""
+    plane = client_plane if (use_client_plane and client_plane is not None) \
+        else None
+    if plane is None and local_train_fn is None:
+        raise ValueError("local_train_fn is required without a client plane")
     server = AsyncCSMAAFLServer(params0, gamma=gamma,
                                 max_staleness=max_staleness,
-                                use_engine=use_engine).start()
+                                use_engine=use_engine,
+                                client_plane=plane).start()
     stats: Dict[int, List[int]] = {}
     threads = [threading.Thread(
         target=client_worker,
         args=(server, spec, local_train_fn),
         kwargs=dict(rounds=rounds_per_client, time_scale=time_scale,
-                    params0=params0, stats=stats), daemon=True)
+                    params0=params0, stats=stats, client_plane=plane),
+        daemon=True)
         for spec in fleet]
     for t in threads:
         t.start()

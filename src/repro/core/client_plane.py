@@ -1,0 +1,228 @@
+"""Fused client-fleet training plane — the client-side data plane.
+
+PR 1 made every *server* blend one fused launch; the hot path then moved
+to the clients: each upload event still paid O(K·local_batches) separate
+jit dispatches for local SGD, a host→device transfer per minibatch, and
+a per-leaf re-flatten of the uploading client's pytree at blend time.
+This module removes all three (docs/DESIGN.md §4):
+
+* **Fleet buffer** — the ENTIRE fleet's models live as ONE device-
+  resident ``(M, n)`` stacked flat buffer sharing ``AggEngine``'s
+  ravel/unravel plans.  Client m's model is row m; the server blend
+  ``dynamic_slice``s the row out (``AggEngine.blend_row_flat``), so no
+  pytree is ever materialized on the event path.
+* **Scanned local SGD** — a client's K·B minibatches for one round are
+  staged as one device array up front and consumed by ``lax.scan`` over
+  the flat row: ONE dispatch per ``local_train`` call instead of one per
+  minibatch.  Tasks express the per-minibatch step against the FLAT
+  parameter vector (grad through the engine's cached unflatten
+  expression), so scan carries a single (n,) array.
+* **Vmapped rounds** — FedAvg rounds (and the baseline-AFL every-M
+  broadcast) ``vmap`` the scan across all M clients: a whole round of
+  fleet-wide local training is ONE launch over the (M, n) buffer.
+* **Pow2 bucketing** — batch counts are bucketed to the next power of
+  two (padded steps carry a ``valid=False`` mask and leave the row
+  untouched), so a fleet whose K_m varies 1..K compiles at most
+  log2(K·B) scan variants instead of one per distinct batch count.
+* **Donation** — on TPU/GPU the fleet buffer is donated across
+  ``train_row`` calls, so the row update is in-place at the XLA level.
+
+The plane is constructed by a task (``CNNTask.client_plane`` /
+``LMTask.client_plane``) from two callables:
+
+``step_fn(flat_row, batch) -> flat_row``
+    one minibatch of local SGD on the (n,) flat row.  Traced inside
+    ``lax.scan`` — must be jax-pure.
+``batch_fn(cid, num_steps, seed) -> pytree of np arrays``
+    the client's staged minibatches for one round, every leaf with
+    leading axis = number of minibatches.  Must draw the SAME batch
+    sequence as the task's per-minibatch ``local_train_fn`` so the
+    plane-on/plane-off parity holds to 1e-5.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agg_engine import AggEngine, _can_donate, pow2_bucket
+from repro.core.scheduler import ClientSpec
+
+StepFn = Callable[[jnp.ndarray, Any], jnp.ndarray]
+BatchFn = Callable[[int, int, int], Any]
+
+
+def _num_batches(batches) -> int:
+    return int(jax.tree.leaves(batches)[0].shape[0])
+
+
+def _pad_batches(batches, bucket: int):
+    """Zero-pad every leaf's leading axis to ``bucket`` steps."""
+    def pad(x):
+        x = np.asarray(x)
+        short = bucket - x.shape[0]
+        if short <= 0:
+            return x
+        return np.concatenate(
+            [x, np.zeros((short,) + x.shape[1:], x.dtype)])
+    return jax.tree.map(pad, batches)
+
+
+class ClientPlane:
+    """Device-resident (M, n) client-state matrix + fused local training.
+
+    ``engine`` fixes the flat layout (shared with the server blends);
+    ``fleet`` fixes M and each client's default K_m.  ``bucket=False``
+    disables pow2 bucketing (compile one scan variant per distinct batch
+    count — only sensible for fixed-K microbenchmarks).
+    """
+
+    def __init__(self, engine: AggEngine, fleet: Sequence[ClientSpec],
+                 step_fn: StepFn, batch_fn: BatchFn, *,
+                 bucket: bool = True, donate: Optional[bool] = None,
+                 unroll: Optional[int] = None):
+        self.engine = engine
+        self.fleet = list(fleet)
+        self.M = len(self.fleet)
+        # row m of the fleet buffer IS client m's model; a reordered or
+        # sub-sampled fleet would make the row blends address the wrong
+        # client (dynamic_slice CLAMPS out-of-range indices, silently)
+        if any(c.cid != i for i, c in enumerate(self.fleet)):
+            raise ValueError("client plane requires fleet[i].cid == i "
+                             "(rows are addressed by cid)")
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.bucket = bucket
+        donate = _can_donate() if donate is None else donate
+        if unroll is None:
+            # XLA:CPU executes while-loop bodies on a slow path (~4x on
+            # the paper CNN), so fully unroll the scan there — the pow2
+            # bucketing bounds the number of unrolled program variants.
+            # On TPU/GPU keep the rolled scan (compact programs, loop
+            # bodies run at full speed).
+            unroll = True if jax.default_backend() == "cpu" else 1
+        self.unroll = unroll
+
+        def scan_train(flat, batches, valid):
+            """Local SGD over one flat row: one program, KB fused steps."""
+            def body(w, xs):
+                b, v = xs
+                w2 = step_fn(w, b).astype(w.dtype)
+                return jnp.where(v, w2, w), None
+            out, _ = jax.lax.scan(body, flat, (batches, valid),
+                                  unroll=unroll)
+            return out
+
+        self._train_flat = jax.jit(scan_train)
+
+        def train_row(fleet_buf, g_flat, cid, batches, valid):
+            new = scan_train(g_flat, batches, valid)
+            return jax.lax.dynamic_update_slice_in_dim(
+                fleet_buf, new[None], cid, axis=0)
+
+        self._train_row = jax.jit(
+            train_row, donate_argnums=(0,) if donate else ())
+        self._train_all = jax.jit(
+            lambda g_flat, batches, valid: jax.vmap(
+                scan_train, in_axes=(None, 0, 0))(g_flat, batches, valid))
+
+        def train_rows(fleet_buf, gs, cids, batches, valid):
+            rows = jax.vmap(scan_train)(gs, batches, valid)     # (W, n)
+            return fleet_buf.at[cids].set(rows)
+
+        self._train_rows = jax.jit(
+            train_rows, donate_argnums=(0,) if donate else ())
+
+    # -- staging ------------------------------------------------------------
+    def _bucketed(self, nb: int) -> int:
+        if nb <= 0:
+            raise ValueError("a training round needs at least one batch")
+        return pow2_bucket(nb) if self.bucket else nb
+
+    def _stage_one(self, cid: int, num_steps: int, seed: int,
+                   bucket: Optional[int] = None):
+        batches = self.batch_fn(cid, num_steps, seed)
+        nb = _num_batches(batches)
+        bucket = self._bucketed(nb) if bucket is None else bucket
+        valid = np.arange(bucket) < nb
+        return _pad_batches(batches, bucket), valid
+
+    # -- fused local training -----------------------------------------------
+    def init_fleet(self, g_flat: jnp.ndarray, seed: int) -> jnp.ndarray:
+        """Every client trains from the initial broadcast w_0: one vmapped
+        launch producing the (M, n) fleet buffer."""
+        return self.train_all(g_flat, seed)
+
+    def train_all(self, g_flat: jnp.ndarray, seed: int,
+                  local_steps_override: Optional[int] = None) -> jnp.ndarray:
+        """One fleet-wide round (FedAvg round / baseline-AFL broadcast):
+        vmap the scanned local SGD across all M rows — ONE launch."""
+        staged = []
+        nbs = []
+        for c in self.fleet:
+            k = local_steps_override or c.local_steps
+            b = self.batch_fn(c.cid, k, seed)
+            staged.append(b)
+            nbs.append(_num_batches(b))
+        bucket = self._bucketed(max(nbs))
+        batches = jax.tree.map(
+            lambda *xs: np.stack(xs),
+            *[_pad_batches(b, bucket) for b in staged])
+        valid = np.arange(bucket)[None, :] < np.asarray(nbs)[:, None]
+        return self._train_all(g_flat, batches, valid)
+
+    def train_row(self, fleet_buf: jnp.ndarray, g_flat: jnp.ndarray,
+                  cid: int, num_steps: int, seed: int) -> jnp.ndarray:
+        """Client ``cid`` trains from the fresh global (eq. 4): scan over
+        its staged batches, row written back via dynamic_update_slice —
+        ONE launch per upload event."""
+        batches, valid = self._stage_one(cid, num_steps, seed)
+        return self._train_row(fleet_buf, g_flat, jnp.int32(cid),
+                               batches, valid)
+
+    def local_train_flat(self, flat: jnp.ndarray, cid: int, num_steps: int,
+                         seed: int) -> jnp.ndarray:
+        """Standalone row training (no fleet buffer) — the threaded async
+        runtime's client workers hold their own flat model."""
+        batches, valid = self._stage_one(cid, num_steps, seed)
+        return self._train_flat(flat, batches, valid)
+
+    def train_rows(self, fleet_buf: jnp.ndarray,
+                   entries: Sequence) -> jnp.ndarray:
+        """Event-window batched retrain: ``entries`` is a list of
+        ``(cid, g_flat, num_steps, seed)`` for a window of upload events
+        with DISTINCT cids.  Each client trains from the global it
+        received at its own event (the exact per-event snapshots), but
+        the W retrains run as ONE vmapped launch — valid because a
+        client's retrain is only consumed at its NEXT upload, which is
+        outside the window by construction.  Same math as W sequential
+        ``train_row`` calls; W and the batch counts are both pow2-
+        bucketed (pads duplicate entry 0, writing row cids[0] twice with
+        the identical value)."""
+        cids = [e[0] for e in entries]
+        if len(set(cids)) != len(cids):
+            raise ValueError("event-window entries must have distinct cids")
+        staged = [self.batch_fn(cid, k, seed) for cid, _, k, seed in entries]
+        nbs = [_num_batches(b) for b in staged]
+        nb_bucket = self._bucketed(max(nbs))
+        W = len(entries)
+        w_bucket = pow2_bucket(W) if self.bucket else W
+        pad = w_bucket - W
+        batches = [_pad_batches(b, nb_bucket) for b in staged]
+        batches += [batches[0]] * pad
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *batches)
+        valid = np.arange(nb_bucket)[None, :] < \
+            np.asarray(nbs + nbs[:1] * pad)[:, None]
+        cids_arr = jnp.asarray(cids + cids[:1] * pad, jnp.int32)
+        gs = jnp.stack([e[1] for e in entries]
+                       + [entries[0][1]] * pad)
+        return self._train_rows(fleet_buf, gs, cids_arr, batches, valid)
+
+    # -- conveniences ---------------------------------------------------------
+    def flatten(self, tree) -> jnp.ndarray:
+        return self.engine.flatten(tree)
+
+    def unflatten(self, flat: jnp.ndarray):
+        return self.engine.unflatten(flat)

@@ -38,11 +38,12 @@ class FLHistory:
 
 
 def run_fedavg(params0, fleet: Sequence[ClientSpec],
-               local_train_fn: LocalTrainFn, *,
+               local_train_fn: Optional[LocalTrainFn], *,
                rounds: int, tau_u: float, tau_d: float,
                eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
                local_steps_override: Optional[int] = None,
                use_engine: bool = True,
+               client_plane=None, use_client_plane: bool = True,
                seed: int = 0):
     """Classical FedAvg (paper eq. 1-2). Returns (params, FLHistory).
 
@@ -50,11 +51,25 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
     SFL has uniform local computation); None uses each spec's K.
     ``use_engine`` (default True) applies eq. (2) as one fused C=M launch
     via ``core.agg_engine``; False keeps the per-leaf reference.
+
+    ``client_plane`` (used when ``use_client_plane=True``): the fused
+    fleet plane (``core.client_plane``) — one round of M-client local
+    SGD is ONE vmapped scan launch over the (M, n) fleet buffer, and
+    eq. (2) consumes the buffer's rows directly
+    (``AggEngine.weighted_sum_rows_flat``); ``local_train_fn`` may be
+    None in this mode.  Parity with the per-minibatch path ≤1e-5.
     """
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+    plane = client_plane if (use_client_plane and client_plane is not None) \
+        else None
+    if plane is None and local_train_fn is None:
+        raise ValueError("local_train_fn is required without a client plane")
     params = params0
     engine = g_flat = None
-    if use_engine:
+    if plane is not None:
+        engine = plane.engine
+        g_flat = engine.flatten(params0)
+    elif use_engine:
         from repro.core.agg_engine import engine_for
         engine = engine_for(params0)
         g_flat = engine.flatten(params0)
@@ -63,20 +78,32 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
     if eval_fn is not None:
         hist.add(t, 0, eval_fn(params))
     for rnd in range(1, rounds + 1):
-        locals_ = []
-        for c in fleet:
-            k = local_steps_override or c.local_steps
-            locals_.append(local_train_fn(params, c.cid, k,
-                                          seed * 100003 + rnd))
-        # eq. (2): w_{t+1} = Σ α_m w_t^m
-        if engine is not None:
-            g_flat, params = engine.weighted_sum_flat(
-                0.0, g_flat, list(alpha), locals_)
+        if plane is not None:
+            # whole round of local training: one vmapped scan launch
+            fleet_buf = plane.train_all(g_flat, seed * 100003 + rnd,
+                                        local_steps_override)
+            # eq. (2) straight off the fleet buffer's rows
+            g_flat = engine.weighted_sum_rows_flat(
+                0.0, g_flat, list(alpha), fleet_buf)
         else:
-            params = agg.weighted_sum_pytrees(
-                0.0, params, list(alpha), locals_)
+            locals_ = []
+            for c in fleet:
+                k = local_steps_override or c.local_steps
+                locals_.append(local_train_fn(params, c.cid, k,
+                                              seed * 100003 + rnd))
+            # eq. (2): w_{t+1} = Σ α_m w_t^m
+            if engine is not None:
+                g_flat, params = engine.weighted_sum_flat(
+                    0.0, g_flat, list(alpha), locals_)
+            else:
+                params = agg.weighted_sum_pytrees(
+                    0.0, params, list(alpha), locals_)
         t += sfl_round_time(fleet, tau_u=tau_u, tau_d=tau_d,
                             local_steps=local_steps_override or 1)
         if eval_fn is not None and rnd % eval_every == 0:
+            if plane is not None:
+                params = engine.unflatten(g_flat)
             hist.add(t, rnd, eval_fn(params))
+    if plane is not None:
+        params = engine.unflatten(g_flat)
     return params, hist

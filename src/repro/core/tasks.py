@@ -4,6 +4,18 @@
 ``LMTask`` federates a (reduced) assigned transformer architecture over
 synthetic non-IID token streams — the modern deployment of the algorithm
 used by the examples and integration tests.
+
+Both tasks expose two local-training surfaces:
+
+* ``local_train_fn`` — the per-minibatch reference path (one jitted SGD
+  dispatch per minibatch).  The CNN variant stages the WHOLE training
+  set as device arrays at construction and gathers minibatches on device
+  by index, so even the reference path never re-uploads image tensors
+  host→device inside the training loop.
+* ``client_plane(fleet)`` — the fused fleet plane (docs/DESIGN.md §4):
+  loss/grad rewritten against the engine's FLAT parameter vector via the
+  cached unflatten expression, minibatches staged per round, local SGD
+  scanned and vmapped by ``core.client_plane.ClientPlane``.
 """
 from __future__ import annotations
 
@@ -44,13 +56,19 @@ class CNNTask:
             parts = fd.partition_label(ds.train_y, num_clients,
                                        classes_per_client=2, seed=seed)
         self.clients = fd.make_clients(ds.train_x, ds.train_y, parts)
+        # the WHOLE training set lives on device once; minibatches are
+        # gathered by index inside the jitted step (no per-minibatch
+        # host→device image upload on ANY training path)
+        self._train_x = jnp.asarray(ds.train_x)
+        self._train_y = jnp.asarray(ds.train_y)
         self.test_x = jnp.asarray(ds.test_x)
         self.test_y = jnp.asarray(ds.test_y)
 
         @jax.jit
-        def _sgd_step(params, images, labels):
-            loss, grads = jax.value_and_grad(cnn_mod.loss_fn)(
-                params, {"images": images, "labels": labels})
+        def _sgd_step(params, idx):
+            batch = {"images": self._train_x[idx],
+                     "labels": self._train_y[idx]}
+            loss, grads = jax.value_and_grad(cnn_mod.loss_fn)(params, batch)
             new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
             return new, loss
 
@@ -68,16 +86,45 @@ class CNNTask:
     def num_samples(self) -> List[int]:
         return [c.num_samples for c in self.clients]
 
+    def _global_batch_indices(self, cid: int, num_steps: int, seed: int
+                              ) -> np.ndarray:
+        """(num_batches, B) indices into the staged full training set."""
+        client = self.clients[cid]
+        local = client.batch_indices(
+            self.batch_size, num_steps * self.local_batches, seed)
+        return client.indices[local].astype(np.int32)
+
     def local_train_fn(self, params, cid: int, num_steps: int, seed: int):
         """K "local iterations"; each = ``local_batches`` SGD minibatches
-        (so K scales client compute as in §III-C)."""
-        client = self.clients[cid]
-        batches = client.batches(self.batch_size,
-                                 num_steps * self.local_batches, seed)
-        for b in batches:
-            params, _ = self._sgd_step(params, jnp.asarray(b["images"]),
-                                       jnp.asarray(b["labels"]))
+        (so K scales client compute as in §III-C).  Per-minibatch
+        reference path: one dispatch per minibatch, but only the (tiny)
+        index array crosses host→device."""
+        idx = self._global_batch_indices(cid, num_steps, seed)
+        for row in idx:
+            params, _ = self._sgd_step(params, row)
         return params
+
+    def client_plane(self, fleet, **plane_kw):
+        """Fused fleet plane: grad against the flat parameter vector via
+        the engine's cached unflatten expression; batches staged as
+        index arrays (the image gather happens on device inside scan)."""
+        from repro.core.agg_engine import engine_for
+        from repro.core.client_plane import ClientPlane
+
+        template = jax.eval_shape(
+            lambda: cnn_mod.init_params(self.cfg, jax.random.PRNGKey(0)))
+        engine = engine_for(template)
+        unflatten = engine.unflatten_expr
+        train_x, train_y, lr = self._train_x, self._train_y, self.lr
+
+        def step_fn(flat, idx):
+            batch = {"images": train_x[idx], "labels": train_y[idx]}
+            grad = jax.grad(
+                lambda f: cnn_mod.loss_fn(unflatten(f), batch))(flat)
+            return flat - lr * grad
+
+        return ClientPlane(engine, fleet, step_fn,
+                           self._global_batch_indices, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"accuracy": float(self._eval(params))}
@@ -120,10 +167,11 @@ class LMTask:
 
         self._eval = _eval
 
-    def _to_model_batch(self, b: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
-        out = {"tokens": jnp.asarray(b["tokens"]),
-               "labels": jnp.asarray(b["labels"])}
-        B = out["tokens"].shape[0]
+    def _modality_stubs(self, B: int) -> Dict[str, jnp.ndarray]:
+        """Zero stubs for the non-token modalities (single source of
+        their shapes — used by the per-minibatch path and rebuilt inside
+        the plane's jitted step so they never cross host→device)."""
+        out: Dict[str, jnp.ndarray] = {}
         if self.cfg.num_patches:
             out["patch_embeds"] = jnp.zeros(
                 (B, self.cfg.num_patches, self.cfg.vision_embed_dim),
@@ -132,6 +180,12 @@ class LMTask:
             out["frame_embeds"] = jnp.zeros(
                 (B, self.seq_len // self.cfg.enc_seq_divisor,
                  self.cfg.d_model), jnp.float32)
+        return out
+
+    def _to_model_batch(self, b: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        out.update(self._modality_stubs(out["tokens"].shape[0]))
         return out
 
     def init_params(self, seed: int = 0):
@@ -146,6 +200,42 @@ class LMTask:
                 self.streams[cid].sample_batch(self.batch_size, self.seq_len))
             params, _ = self._sgd_step(params, b)
         return params
+
+    def client_plane(self, fleet, **plane_kw):
+        """Fused fleet plane for the LM task.  Each round's token batches
+        are pre-sampled and staged as one (KB, B, S) array; the zero
+        modality stubs (patch/frame embeds) are rebuilt inside the jitted
+        step so they never cross host→device.  Streams advance exactly as
+        the per-minibatch path does (same draws per call), so plane-on
+        and plane-off consume identical token sequences."""
+        from repro.core.agg_engine import engine_for
+        from repro.core.client_plane import ClientPlane
+
+        cfg, lr, seq_len = self.cfg, self.lr, self.seq_len
+        template = jax.eval_shape(
+            lambda: tmod.init_params(cfg, jax.random.PRNGKey(0)))
+        engine = engine_for(template)
+        unflatten = engine.unflatten_expr
+
+        def step_fn(flat, batch):
+            full = dict(batch)
+            full.update(self._modality_stubs(batch["tokens"].shape[0]))
+
+            def loss_flat(f):
+                loss, _ = tmod.loss_fn(unflatten(f), cfg, full)
+                return loss
+
+            grad = jax.grad(loss_flat)(flat)
+            return (flat.astype(jnp.float32)
+                    - lr * grad.astype(jnp.float32)).astype(flat.dtype)
+
+        def batch_fn(cid, num_steps, seed):
+            bs = [self.streams[cid].sample_batch(self.batch_size, seq_len)
+                  for _ in range(num_steps)]
+            return {"tokens": np.stack([b["tokens"] for b in bs]),
+                    "labels": np.stack([b["labels"] for b in bs])}
+
+        return ClientPlane(engine, fleet, step_fn, batch_fn, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"loss": float(self._eval(params))}

@@ -59,35 +59,53 @@ def partition_dirichlet(labels: np.ndarray, num_clients: int, *,
 
 @dataclasses.dataclass
 class ClientDataset:
-    """One client's local shard with reproducible batch sampling."""
+    """One client's local shard with reproducible batch sampling.
+
+    ``images``/``labels`` are the FULL dataset arrays (shared across all
+    clients, never copied) and ``indices`` this client's sample indices
+    into them — M clients cost one dataset plus M index vectors instead
+    of a second materialized copy of the whole training set."""
     images: np.ndarray
     labels: np.ndarray
     cid: int
+    indices: np.ndarray
 
     @property
     def num_samples(self) -> int:
-        return len(self.labels)
+        return len(self.indices)
 
-    def batches(self, batch_size: int, num_batches: int, seed: int
-                ) -> List[Dict[str, np.ndarray]]:
-        """``num_batches`` minibatches sampled without replacement per epoch
-        (reshuffling across epochs), deterministic given seed."""
+    def batch_indices(self, batch_size: int, num_batches: int, seed: int
+                      ) -> np.ndarray:
+        """(num_batches, batch_size) sample indices into this shard —
+        without replacement per epoch (reshuffling across epochs),
+        deterministic given seed.  This is the single source of batch
+        order: both the per-minibatch ``batches`` path and the staged
+        client-plane path index from it, which is what makes the
+        plane-on/plane-off parity exact."""
         rng = np.random.default_rng((seed * 9176 + self.cid) % (2**63))
-        out = []
+        rows = []
         order = rng.permutation(self.num_samples)
         ptr = 0
         for _ in range(num_batches):
             if ptr + batch_size > self.num_samples:
                 order = rng.permutation(self.num_samples)
                 ptr = 0
-            take = order[ptr:ptr + batch_size]
+            rows.append(order[ptr:ptr + batch_size])
             ptr += batch_size
-            out.append({"images": self.images[take],
-                        "labels": self.labels[take]})
-        return out
+        if not rows:
+            return np.zeros((0, batch_size), np.int64)
+        return np.stack(rows)
+
+    def batches(self, batch_size: int, num_batches: int, seed: int
+                ) -> List[Dict[str, np.ndarray]]:
+        """``num_batches`` minibatches materialized from ``batch_indices``."""
+        idx = self.batch_indices(batch_size, num_batches, seed)
+        return [{"images": self.images[self.indices[take]],
+                 "labels": self.labels[self.indices[take]]}
+                for take in idx]
 
 
 def make_clients(images: np.ndarray, labels: np.ndarray,
                  partitions: Sequence[np.ndarray]) -> List[ClientDataset]:
-    return [ClientDataset(images[p], labels[p], cid)
+    return [ClientDataset(images, labels, cid, np.asarray(p))
             for cid, p in enumerate(partitions)]
