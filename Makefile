@@ -1,10 +1,22 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-agg bench-client bench-gate
+.PHONY: test lint format-check bench bench-agg bench-client \
+	bench-sharded bench-gate
 
 test:
 	python -m pytest -x -q
+
+# ruff is not baked into the repro container; CI installs it (see
+# .github/workflows/ci.yml), locally `pip install ruff` once.
+# `lint` (ruff check, pyproject [tool.ruff]) is the required gate;
+# `format-check` is advisory in CI until the tree is ruff-formatted
+# wholesale (the repo predates the formatter).
+lint:
+	ruff check .
+
+format-check:
+	ruff format --check .
 
 bench:
 	python -m benchmarks.run
@@ -17,8 +29,16 @@ bench-agg:
 bench-client:
 	python -m benchmarks.run --only client_plane
 
-# both gated benches; fail on >1.3x slowdown vs benchmarks/baseline_*.json
-# (or below the acceptance floors — 3x aggregation, per-host client plane,
-# see benchmarks/check_regression.py — or client-plane parity >1e-5)
+# the sharded-plane bench (fleet-mesh plane vs single-device plane on 8
+# simulated devices; re-execs itself to set the device count)
+bench-sharded:
+	python -m benchmarks.run --only sharded_plane
+
+# all gated benches; fail on >1.3x slowdown vs benchmarks/baseline_*.json
+# (or below the acceptance floors / parity >1e-5 — see
+# benchmarks/check_regression.py; baselines are keyed by hostname, so an
+# unknown host warns instead of false-failing).  Writes
+# experiments/bench/gate_report.json for CI consumption.
 bench-gate:
-	python -m benchmarks.run --only aggregation,client_plane --gate
+	python -m benchmarks.run \
+		--only aggregation,client_plane,sharded_plane --gate --seed 0

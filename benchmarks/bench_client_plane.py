@@ -36,7 +36,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, save_result
+from benchmarks.common import bench_seed, emit, save_result
 
 M = 32
 K = 4                      # local iterations per upload
@@ -59,13 +59,14 @@ def bench_client_plane() -> None:
     from repro.core.scheduler import make_fleet
     from repro.core.tasks import CNNTask
 
+    seed = bench_seed()
     cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
     task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
                    batch_size=BATCH_SIZE, local_batches_per_step=LOCAL_BATCHES,
-                   cnn_cfg=cnn_cfg)
+                   cnn_cfg=cnn_cfg, seed=seed)
     fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
                        samples_per_client=task.num_samples(),
-                       adaptive=False, base_local_steps=K, seed=0)
+                       adaptive=False, base_local_steps=K, seed=seed)
     p0 = task.init_params()
     plane = task.client_plane(fleet)
 
@@ -96,7 +97,7 @@ def bench_client_plane() -> None:
     save_result("client_plane", {
         "model": "paper_cnn_cpu_budget", "M": M, "K": K,
         "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
-        "iterations": ITERATIONS,
+        "iterations": ITERATIONS, "seed": seed,
         "mode": plane.engine.mode,
         "off_s": t_off, "on_s": t_on,
         "events_per_s_off": ev_off, "events_per_s_on": ev_on,

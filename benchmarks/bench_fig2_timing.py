@@ -11,9 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, save_result
-from repro.core.scheduler import (AFLScheduler, ClientSpec,
-                                  homogeneous_round_times, make_fleet,
-                                  sfl_round_time)
+from repro.core.scheduler import (AFLScheduler, homogeneous_round_times,
+                                  make_fleet, sfl_round_time)
 
 
 def run(M: int = 100, tau: float = 1.0, tau_u: float = 0.05,

@@ -1,0 +1,117 @@
+"""Sharded-fleet-plane benchmark: end-to-end ``run_afl`` events/s with the
+(M, n) fleet buffer sharded over a simulated 8-device ``fleet`` mesh
+(docs/DESIGN.md §6) vs the single-device PR-2 plane, at M=64.
+
+The device count locks at jax init, so this bench RE-EXECS itself into a
+child process with ``--xla_force_host_platform_device_count=8`` before
+importing jax — ``benchmarks/run.py`` (and the regression gate) can then
+include it in any invocation regardless of the parent's device topology.
+
+What the gate watches on this host: the sharded plane must stay within
+the recorded ratio of the single-device plane AND match it to ≤1e-5.
+On a 2-core CPU container with 8 *simulated* devices there is no real
+parallel hardware — all shards time-share the same cores and the
+shard_map adds partitioning overhead, so the honest same-run ratio here
+is ~1x and the floor guards the "sharding started gathering the fleet /
+recompiling per event" failure mode, not a speedup.  On a real multi-
+chip mesh the same program trains M/D rows per chip concurrently —
+re-record the baseline (and raise the floor) there.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+DEVICES = 8
+M = 64
+K = 2                      # local iterations per upload
+LOCAL_BATCHES = 4          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 64            # upload events per timed run
+_CHILD_ENV = "REPRO_SHARDED_BENCH_CHILD"
+
+
+def _bench_child() -> None:
+    import jax
+    import numpy as np
+
+    from benchmarks.common import bench_seed, emit, save_result
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    seed = bench_seed()
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE,
+                   local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=seed)
+    p0 = task.init_params()
+    planes = {"single": task.client_plane(fleet),
+              "sharded": task.client_plane(fleet, sharded=True)}
+
+    def timed(plane):
+        def run():
+            return run_afl(p0, fleet, None, algorithm="csmaafl",
+                           iterations=ITERATIONS, tau_u=0.1, tau_d=0.1,
+                           gamma=0.4, client_plane=plane, seed=seed)
+        r = run()                                   # warmup + compile
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        t0 = time.perf_counter()
+        r = run()
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        return time.perf_counter() - t0, r
+
+    t_single, r_single = timed(planes["single"])
+    t_sharded, r_sharded = timed(planes["sharded"])
+    speedup = t_single / t_sharded
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_sharded.params),
+                                 jax.tree.leaves(r_single.params)))
+    emit("sharded_plane.run_afl.single_device",
+         t_single * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_single:.1f} events/s")
+    emit("sharded_plane.run_afl.fleet_mesh",
+         t_sharded * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_sharded:.1f} events/s on "
+         f"{len(jax.devices())} simulated devices; {speedup:.2f}x vs "
+         f"single-device; parity {parity:.2e}")
+    save_result("sharded_plane", {
+        "model": "paper_cnn_cpu_budget", "M": M, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS, "devices": len(jax.devices()),
+        "seed": seed,
+        "mode": planes["sharded"].engine.mode,
+        "single_s": t_single, "sharded_s": t_sharded,
+        "events_per_s_single": ITERATIONS / t_single,
+        "events_per_s_sharded": ITERATIONS / t_sharded,
+        "speedup": speedup, "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    if os.environ.get(_CHILD_ENV):
+        _bench_child()
+        return
+    env = dict(os.environ)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={DEVICES}").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sharded_plane"],
+        env=env, cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded-plane bench child exited {proc.returncode}")
+
+
+if __name__ == "__main__":
+    main()

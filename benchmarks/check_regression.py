@@ -1,33 +1,42 @@
-"""Bench regression gates (aggregation engine + client plane).
+"""Bench regression gates (aggregation engine + client plane + sharded
+plane) — CI-friendly.
 
 Compares the latest results under ``experiments/bench/`` (written by
-``benchmarks/bench_aggregation.py`` / ``bench_client_plane.py``) against
-the committed baselines in ``benchmarks/baseline_*.json`` and exits
-nonzero when a gated speedup regresses by more than ``THRESHOLD``x or
-drops below its acceptance floor.
+``benchmarks/bench_aggregation.py`` / ``bench_client_plane.py`` /
+``bench_sharded_plane.py``) against the committed baselines in
+``benchmarks/baseline_*.json`` and exits nonzero when a gated speedup
+regresses by more than ``THRESHOLD``x, drops below its acceptance floor,
+or a recorded parity exceeds its bound.
 
 The watched metrics are SAME-RUN ratios, not absolute microseconds:
 wall-clock medians swing ~2x with machine load on a shared CPU, while the
 two variants of each gate are timed back-to-back in one process, so their
 ratio isolates the code path.  A >1.3x drop in a ratio is the "someone
-re-introduced per-leaf/per-minibatch dispatch" class of regression, not
-noise.  Absolute timings are printed as context only.
+re-introduced per-leaf/per-minibatch dispatch" (or "sharding started
+gathering the fleet") class of regression, not noise.
 
-Gates:
+The ratios are still PER-ENVIRONMENT, so baselines and floors are keyed
+by HOSTNAME: a baseline recorded on this repo's container says nothing
+about a fresh CI runner.  When the current host doesn't match the
+baseline's ``host`` field the gate WARNS and reports ``skipped-unknown-
+host`` instead of false-failing — re-record the baseline on the new host
+(run the bench, copy ``experiments/bench/*.json`` over the baseline) to
+arm it there.
 
-* ``aggregation``  — fused flat-buffer engine vs naive per-leaf blend
-  (floor 3x, PR 1's acceptance criterion).
-* ``client_plane`` — fused fleet plane vs per-minibatch run_afl
-  (floor 5x + parity ≤1e-5, PR 2's acceptance criterion).
+Exit codes (distinct so CI can tell the failure classes apart):
 
-The committed baselines are still PER-ENVIRONMENT: the ratio isolates
-load, not hardware.  Each gate refuses mismatched configurations (exit 2)
-and expects its baseline to be re-recorded when the benchmark host
-changes: run the bench, then copy the ``experiments/bench/*.json`` over
-the baseline.
+* 0 — every requested gate passed (or was skipped for an unknown host)
+* 1 — at least one REGRESSION (speedup drop / floor / parity)
+* 2 — invocation or config error (unknown gate, config-key mismatch)
+* 3 — missing baseline or missing bench result
+
+Every run also writes a machine-readable ``gate_report.json`` (default
+``experiments/bench/gate_report.json``, override with ``--report``) with
+per-gate speedup, floor, parity, and pass/fail status.
 
 Usage:  python -m benchmarks.check_regression [--threshold 1.3]
-                                              [--which aggregation,client_plane]
+            [--which aggregation,client_plane,sharded_plane]
+            [--report path/to/gate_report.json]
         python -m benchmarks.run --only aggregation,client_plane --gate
 """
 from __future__ import annotations
@@ -35,11 +44,18 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import socket
 import sys
 
 HERE = os.path.dirname(__file__)
 LATEST_DIR = os.path.join(HERE, "..", "experiments", "bench")
 THRESHOLD = 1.3
+DEFAULT_REPORT = os.path.join(LATEST_DIR, "gate_report.json")
+
+EXIT_OK = 0
+EXIT_REGRESSION = 1
+EXIT_USAGE = 2
+EXIT_MISSING = 3
 
 GATES = {
     "aggregation": {
@@ -54,7 +70,7 @@ GATES = {
         "baseline": os.path.join(HERE, "baseline_client_plane.json"),
         "latest": os.path.join(LATEST_DIR, "client_plane.json"),
         "config_keys": ("mode", "model", "M", "K", "local_batches",
-                        "iterations"),
+                        "iterations", "seed"),
         "context_keys": ("off_s", "on_s", "events_per_s_on"),
         # the floor is the "plane-on degenerated to per-minibatch" signal
         # for THIS host: the repo's 2-core CPU container is conv-compute-
@@ -67,81 +83,150 @@ GATES = {
         "parity_bound": 1e-5,
         "rerun_hint": "python -m benchmarks.run --only client_plane",
     },
+    "sharded_plane": {
+        "baseline": os.path.join(HERE, "baseline_sharded_plane.json"),
+        "latest": os.path.join(LATEST_DIR, "sharded_plane.json"),
+        "config_keys": ("mode", "model", "M", "K", "local_batches",
+                        "iterations", "devices", "seed"),
+        "context_keys": ("single_s", "sharded_s", "events_per_s_sharded"),
+        # 8 SIMULATED devices time-share this container's 2 cores, so the
+        # honest sharded/single ratio here is ~1x; the floor guards the
+        # "sharding started gathering the fleet / recompiling per event"
+        # collapse, not a speedup.  Re-floor on a real multi-chip mesh.
+        "floor": 0.5,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "rerun_hint": "python -m benchmarks.run --only sharded_plane",
+    },
 }
 
 
-def check_gate(name: str, threshold: float = THRESHOLD) -> int:
+def check_gate(name: str, threshold: float = THRESHOLD):
+    """Returns (exit_code, record) for one gate; record feeds the
+    machine-readable gate report."""
     g = GATES[name]
+    rec = {"gate": name, "floor": g["floor"],
+           "parity_bound": g.get("parity_bound"),
+           "threshold": threshold, "host": socket.gethostname()}
+
+    def fail(code, status, msg):
+        print(f"gate[{name}]: {msg}", file=sys.stderr)
+        rec["status"] = status
+        return code, rec
+
     if not os.path.exists(g["baseline"]):
-        print(f"gate[{name}]: no baseline at {g['baseline']} — run the "
-              "bench and commit its result as the baseline",
-              file=sys.stderr)
-        return 2
+        return fail(EXIT_MISSING, "missing-baseline",
+                    f"no baseline at {g['baseline']} — run the bench and "
+                    "commit its result as the baseline")
     if not os.path.exists(g["latest"]):
-        print(f"gate[{name}]: no bench result at {g['latest']} — run "
-              f"`{g['rerun_hint']}` first", file=sys.stderr)
-        return 2
+        return fail(EXIT_MISSING, "missing-latest",
+                    f"no bench result at {g['latest']} — run "
+                    f"`{g['rerun_hint']}` first")
     with open(g["baseline"]) as f:
         base = json.load(f)
     with open(g["latest"]) as f:
         latest = json.load(f)
-    rc = 0
+    rec["baseline_host"] = base.get("host")
+
+    # hostname keying: ratios (and their floors) are per-environment, so
+    # an unrecorded host must warn, not false-fail (CI runners churn)
+    host = socket.gethostname()
+    if base.get("host") is not None and base["host"] != host:
+        print(f"gate[{name}]: WARNING baseline was recorded on host "
+              f"{base['host']!r} but this is {host!r} — skipping the gate "
+              "(re-record the baseline on this host to arm it)",
+              file=sys.stderr)
+        rec["status"] = "skipped-unknown-host"
+        return EXIT_OK, rec
+
     # the ratio is only comparable for the same configuration: a baseline
     # recorded in xla mode on CPU says nothing about kernel mode on TPU
     for key in g["config_keys"]:
         if base.get(key) != latest.get(key):
-            print(f"gate[{name}]: config mismatch on '{key}' (baseline "
-                  f"{base.get(key)!r} vs latest {latest.get(key)!r}) — "
-                  "re-record the baseline for this configuration",
-                  file=sys.stderr)
-            return 2
+            return fail(EXIT_USAGE, "config-mismatch",
+                        f"config mismatch on '{key}' (baseline "
+                        f"{base.get(key)!r} vs latest {latest.get(key)!r})"
+                        " — re-record the baseline for this configuration")
     # context: absolute medians (load-sensitive, never gated on)
+    rec["context"] = {}
     for key in g["context_keys"]:
         if key in base and key in latest:
+            rec["context"][key] = {"baseline": base[key],
+                                   "latest": latest[key]}
             print(f"gate[{name}]: (context) {key}: baseline "
                   f"{base[key]:.6g} -> latest {latest[key]:.6g}")
     # gated: the same-run speedup
     if "speedup" not in base or "speedup" not in latest:
-        print(f"gate[{name}]: speedup missing from baseline or latest",
-              file=sys.stderr)
-        return 2
+        return fail(EXIT_USAGE, "config-mismatch",
+                    "speedup missing from baseline or latest")
+    rc = EXIT_OK
     b_sp, l_sp = float(base["speedup"]), float(latest["speedup"])
     ratio = b_sp / max(l_sp, 1e-9)
+    rec.update(baseline_speedup=b_sp, speedup=l_sp, drop_ratio=ratio)
     status = "OK" if ratio <= threshold else "REGRESSION"
     print(f"gate[{name}]: speedup: baseline {b_sp:.1f}x -> latest "
           f"{l_sp:.1f}x ({ratio:.2f}x drop) {status}")
     if ratio > threshold:
-        rc = 1
+        rc = EXIT_REGRESSION
     if l_sp < g["floor"]:
         print(f"gate[{name}]: speedup {l_sp:.1f}x < {g['floor']:.1f}x "
               "floor REGRESSION")
-        rc = 1
+        rc = EXIT_REGRESSION
     # gated: numerical parity of the two variants (where recorded)
     pk = g.get("parity_key")
     if pk is not None and pk in latest:
         parity = float(latest[pk])
         bound = g["parity_bound"]
         ok = parity <= bound
+        rec["parity"] = parity
         print(f"gate[{name}]: parity: {parity:.2e} "
               f"(bound {bound:.0e}) {'OK' if ok else 'REGRESSION'}")
         if not ok:
-            rc = 1
-    return rc
+            rc = EXIT_REGRESSION
+    rec["status"] = "pass" if rc == EXIT_OK else "regression"
+    return rc, rec
+
+
+def combine_codes(codes) -> int:
+    """Regression dominates, then usage errors, then missing artifacts."""
+    for code in (EXIT_REGRESSION, EXIT_USAGE, EXIT_MISSING):
+        if code in codes:
+            return code
+    return EXIT_OK
+
+
+def write_report(path: str, records, rc: int, threshold: float) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    report = {"host": socket.gethostname(), "threshold": threshold,
+              "exit_code": rc,
+              "gates": {r["gate"]: r for r in records}}
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"gate: report written to {path}")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=THRESHOLD)
-    ap.add_argument("--which", default="aggregation,client_plane",
+    ap.add_argument("--which",
+                    default="aggregation,client_plane,sharded_plane",
                     help="comma list of gates: " + ",".join(GATES))
+    ap.add_argument("--report", default=DEFAULT_REPORT,
+                    help="machine-readable per-gate report path "
+                         "('' disables)")
     args = ap.parse_args(argv)
-    rc = 0
+    codes, records = [], []
     for name in args.which.split(","):
         name = name.strip()
         if name not in GATES:
             print(f"gate: unknown gate '{name}'", file=sys.stderr)
-            return 2
-        rc = max(rc, check_gate(name, args.threshold))
+            return EXIT_USAGE
+        rc, rec = check_gate(name, args.threshold)
+        codes.append(rc)
+        records.append(rec)
+    rc = combine_codes(codes)
+    if args.report:
+        write_report(args.report, records, rc, args.threshold)
     return rc
 
 

@@ -3,14 +3,22 @@ from __future__ import annotations
 
 import json
 import os
+import socket
 import time
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict
 
 import jax
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench")
+
+
+def bench_seed(default: int = 0) -> int:
+    """The run-to-run-deterministic bench seed.  ``benchmarks.run --seed``
+    exports it as ``REPRO_BENCH_SEED`` so every bench (including ones that
+    re-exec themselves in a subprocess) draws the same fleets/batches."""
+    return int(os.environ.get("REPRO_BENCH_SEED", default))
 
 
 def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 10
@@ -33,6 +41,9 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def save_result(name: str, payload: Dict[str, Any]) -> str:
+    # baselines/floors are keyed by host (check_regression.py): an
+    # unknown CI host then warns instead of false-failing the gates
+    payload.setdefault("host", socket.gethostname())
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:

@@ -2,45 +2,77 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  fig2          §II-C / Fig.2 completion-time comparison (SFL vs AFL)
-  convergence   Figs.3-5 FedAvg vs CSMAAFL, γ sweep (scaled by default;
-                ``--full`` for the paper's 100-client/60k-image setup)
-  kernels       Pallas-kernel oracles micro-bench
-  aggregation   β-solver scaling + §III-A decay table + fused engine vs
-                naive per-leaf blend (docs/DESIGN.md §3)
-  client_plane  fused fleet plane vs per-minibatch run_afl on the paper
-                CNN at M=32 (docs/DESIGN.md §4)
-  roofline      §Roofline table from the dry-run records
+  fig2           §II-C / Fig.2 completion-time comparison (SFL vs AFL)
+  convergence    Figs.3-5 FedAvg vs CSMAAFL, γ sweep (scaled by default;
+                 ``--full`` for the paper's 100-client/60k-image setup)
+  kernels        Pallas-kernel oracles micro-bench
+  aggregation    β-solver scaling + §III-A decay table + fused engine vs
+                 naive per-leaf blend (docs/DESIGN.md §3)
+  client_plane   fused fleet plane vs per-minibatch run_afl on the paper
+                 CNN at M=32 (docs/DESIGN.md §4)
+  sharded_plane  fleet-mesh-sharded plane vs single-device plane at M=64
+                 on 8 simulated devices (docs/DESIGN.md §6; re-execs
+                 itself into a child process to set the device count)
+  roofline       §Roofline table from the dry-run records
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
 gated benchmark THIS invocation produced and fails on a >1.3x slowdown
 vs the committed baselines (``make bench-gate`` =
-``--only aggregation,client_plane --gate``; ``make bench-agg`` /
-``make bench-client`` run ungated).
+``--only aggregation,client_plane,sharded_plane --gate``; ``make
+bench-agg`` / ``make bench-client`` / ``make bench-sharded`` run
+ungated).  Gate results also land in ``experiments/bench/
+gate_report.json`` (machine-readable, one record per gate).
+
+CI-friendliness: ``--seed N`` pins every bench's fleet/batch draws
+(exported as ``REPRO_BENCH_SEED`` so subprocess benches see it too) and
+``--json PATH`` writes one combined JSON with every bench result this
+invocation produced plus the exit code — reproducible run-to-run, no
+interactive stdout parsing needed.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+GATED = ("aggregation", "client_plane", "sharded_plane")
+# bench name -> result file written via benchmarks.common.save_result
+RESULT_FILES = {
+    "aggregation": "aggregation_fused.json",
+    "client_plane": "client_plane.json",
+    "sharded_plane": "sharded_plane.json",
+}
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
-                         "aggregation,client_plane,roofline")
+                         "aggregation,client_plane,sharded_plane,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
                          "baselines")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="pin the bench seed (REPRO_BENCH_SEED) for "
+                         "reproducible CI runs")
+    ap.add_argument("--json", default=None, dest="json_path",
+                    help="write every produced bench result + exit code "
+                         "to this JSON file")
     args = ap.parse_args(argv)
+    if args.seed is not None:
+        # env, not a function argument: subprocess benches (sharded_plane)
+        # and lazily-imported bench modules all read the same knob
+        os.environ["REPRO_BENCH_SEED"] = str(args.seed)
     names = (args.only.split(",") if args.only else
-             ["fig2", "aggregation", "client_plane", "kernels",
-              "convergence", "roofline"])
+             ["fig2", "aggregation", "client_plane", "sharded_plane",
+              "kernels", "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
-    gated_ran = set()
+    ran = set()
+    failed = []
     for name in names:
         try:
             if name == "fig2":
@@ -55,26 +87,31 @@ def main(argv=None) -> int:
             elif name == "aggregation":
                 from benchmarks import bench_aggregation as b
                 b.main()
-                gated_ran.add("aggregation")
             elif name == "client_plane":
                 from benchmarks import bench_client_plane as b
                 b.main()
-                gated_ran.add("client_plane")
+            elif name == "sharded_plane":
+                from benchmarks import bench_sharded_plane as b
+                b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b
                 b.main()
             else:
                 print(f"{name},0,unknown-benchmark", file=sys.stderr)
+                continue
+            ran.add(name)
         except Exception:  # noqa: BLE001
             rc = 1
+            failed.append(name)
             print(f"{name},0,FAILED", file=sys.stderr)
             traceback.print_exc()
+    gate_records = []
     if args.gate:
         # only gate on results THIS invocation produced — a stale JSON
         # from an earlier run proves nothing; a REQUESTED gated bench
         # that crashed must fail the gate, not silently escape it
-        gated_requested = {n for n in names
-                           if n in ("aggregation", "client_plane")}
+        gated_requested = {n for n in names if n in GATED}
+        gated_ran = gated_requested & ran
         missing = gated_requested - gated_ran
         if missing:
             print(f"gate: gated benchmark(s) {sorted(missing)} did not "
@@ -86,8 +123,34 @@ def main(argv=None) -> int:
             rc = max(rc, 2)
         else:
             from benchmarks import check_regression
+            codes = []
             for g in sorted(gated_ran):
-                rc = max(rc, check_regression.check_gate(g))
+                code, rec = check_regression.check_gate(g)
+                codes.append(code)
+                gate_records.append(rec)
+            gate_rc = check_regression.combine_codes(codes)
+            check_regression.write_report(
+                check_regression.DEFAULT_REPORT, gate_records, gate_rc,
+                check_regression.THRESHOLD)
+            rc = max(rc, gate_rc)
+    if args.json_path:
+        results = {}
+        for name in ran:
+            fn = RESULT_FILES.get(name)
+            if fn is None:
+                continue
+            path = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "bench", fn)
+            if os.path.exists(path):
+                with open(path) as f:
+                    results[name] = json.load(f)
+        payload = {"seed": args.seed, "ran": sorted(ran),
+                   "failed": failed, "exit_code": rc,
+                   "results": results,
+                   "gates": {r["gate"]: r for r in gate_records}}
+        with open(args.json_path, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        print(f"bench: results written to {args.json_path}")
     return rc
 
 

@@ -15,7 +15,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 
 from repro.core.afl import run_afl
 from repro.core.scheduler import make_fleet

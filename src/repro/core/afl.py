@@ -17,10 +17,9 @@ the paper's storage argument against AsyncFedED.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.agg_engine import engine_for
@@ -56,7 +55,11 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
       ``use_client_plane=True``): the whole fleet lives as one (M, n)
       device buffer; local SGD is one scanned launch per event and the
       blend ``dynamic_slice``s the uploader's row — ~2 launches per
-      event total.  ``local_train_fn`` may be None in this mode.
+      event total.  ``local_train_fn`` may be None in this mode.  A
+      ``ShardedClientPlane`` runs the same loop with the buffer
+      row-partitioned across a ``fleet`` device mesh (DESIGN.md §6) —
+      this code path is identical; the plane and its shard-aware engine
+      hide the placement.
     * ``use_engine=True`` (default, no plane): per-event fused flat-
       buffer blend through ``core.agg_engine``; local training stays the
       task's per-minibatch loop.
@@ -133,9 +136,13 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     # A client's retrain is only consumed at its NEXT upload, so retrains
     # for a window of events with distinct uploaders are independent:
     # buffer (cid, g-snapshot, K, seed) and flush them as ONE vmapped
-    # launch when a cid repeats (or at loop end).  Blends stay sequential
-    # (they are the cheap part); histories are bit-identical to the
-    # per-event order.
+    # launch when a cid repeats, when the window hits the plane's
+    # ``window_cap`` (bounds the per-event g-snapshot memory on M≥1000
+    # fleets), or at loop end.  A sharded plane additionally groups the
+    # flushed window by owning shard so every shard retrains its own
+    # slice concurrently (DESIGN.md §6).  Blends stay sequential (they
+    # are the cheap part); histories are bit-identical to the per-event
+    # order.
     pending: List[tuple] = []
     pending_cids = set()
 
@@ -151,6 +158,9 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
         snap = jnp.copy(g_flat) if engine.donate else g_flat
         pending.append((cid, snap, steps, seed_j))
         pending_cids.add(cid)
+        cap = getattr(plane, "window_cap", None)
+        if cap is not None and len(pending) >= cap:
+            flush_pending()
 
     hist = FLHistory()
     events: List[UploadEvent] = []

@@ -53,7 +53,7 @@ only centralizes the math, not the layout.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -326,6 +326,150 @@ class AggEngine:
         _, tree = self.weighted_sum_flat(coef0, self.flatten(global_tree),
                                          coefs, client_trees)
         return tree
+
+
+# ---------------------------------------------------------------------------
+# Shard-aware row addressing over a fleet-sharded buffer (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+class ShardedRowEngine:
+    """Row-addressed blends against a ``fleet``-sharded (M_pad, n) buffer.
+
+    Wraps a base :class:`AggEngine` (which fixes the flat layout and the
+    plain/replicated blends) and reimplements ONLY the row-addressed
+    variants as ``shard_map`` programs over ``layout`` (a
+    ``sharding.specs.FleetLayout``): the global flat model is replicated,
+    the fleet buffer is row-partitioned, and a global row index resolves
+    to (shard, local-row) *inside* the program — the owning shard
+    contributes its row through a ``psum``, so the fleet is never
+    gathered.  Everything not listed here delegates to the base engine
+    (``flatten``/``unflatten``, the pytree blends, the replicated-rows
+    trunk blend the async runtime uses).
+
+    With the base engine in ``kernel`` mode the fleet-wide weighted sum
+    runs the Pallas MAC per shard (c0 pre-divided by D so the psum over
+    the replicated global restores it — same trick as
+    ``core.shardmap_agg``); the single-row blends stay jnp (a C=1 MAC
+    after the psum is one fused elementwise op either way).
+    """
+
+    def __init__(self, engine: AggEngine, mesh, layout):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import shard_map_compat
+        from repro.sharding.specs import FLEET_AXIS, fleet_buffer_spec
+
+        self.base = engine
+        self.mesh = mesh
+        self.layout = layout
+        ax = FLEET_AXIS
+        D = layout.D
+        m_loc = layout.rows_per_shard
+        buf_spec = fleet_buffer_spec()
+        storage = engine.storage_dtype
+        kern = functools.partial(weighted_agg_flat2d,
+                                 block_rows=engine.block_rows,
+                                 interpret=engine.interpret)
+        use_kernel = engine.mode == "kernel"
+
+        def owned_row(local, cid):
+            """psum-gather row ``cid`` (f32) from its owning shard."""
+            shard = cid // m_loc
+            row = jax.lax.dynamic_slice_in_dim(
+                local, cid - shard * m_loc, 1, axis=0)[0]
+            mine = jax.lax.axis_index(ax) == shard
+            return jax.lax.psum(
+                jnp.where(mine, row.astype(jnp.float32), 0.0), ax)
+
+        def blend_row_shard(g, local, cid, coefs):
+            row = owned_row(local, cid)
+            if use_kernel:
+                return kern(g, row.astype(storage)[None], coefs)
+            acc = (coefs[0] * g.astype(jnp.float32) + coefs[1] * row)
+            return acc.astype(storage)
+
+        def delta_row_shard(g, local, cid, scale):
+            return scale * (g.astype(jnp.float32) - owned_row(local, cid))
+
+        def weighted_sum_shard(g, local, c0, c_local):
+            if use_kernel:
+                cvec = jnp.concatenate([c0[None] / D, c_local])
+                partial = kern(g, local, cvec)
+                return jax.lax.psum(
+                    partial.astype(jnp.float32), ax).astype(storage)
+            partial = jnp.tensordot(c_local, local.astype(jnp.float32),
+                                    axes=(0, 0))
+            total = jax.lax.psum(partial, ax)
+            return (c0 * g.astype(jnp.float32) + total).astype(storage)
+
+        def blend_rows_shard(g, local, c0, coefs, cids):
+            """Folded trunk over fleet rows: each shard contributes the
+            coefficient-weighted rows it owns."""
+            shard = cids // m_loc
+            rows = local[cids - shard * m_loc]            # (K, n) gather
+            mask = (jax.lax.axis_index(ax) == shard).astype(jnp.float32)
+            partial = jnp.tensordot(coefs * mask, rows.astype(jnp.float32),
+                                    axes=(0, 0))
+            total = jax.lax.psum(partial, ax)
+            return (c0 * g.astype(jnp.float32) + total).astype(storage)
+
+        sm = functools.partial(shard_map_compat, mesh=mesh)
+        # NO donation here: every program returns a replicated (n,) global,
+        # which can never alias the sharded (M_pad, n) buffer, and callers
+        # (run_fedavg's next train_all, the parity oracles) keep reading
+        # the buffer after the blend
+        self._blend_row = jax.jit(sm(
+            blend_row_shard, in_specs=(P(), buf_spec, P(), P()),
+            out_specs=P()))
+        self._delta_row = jax.jit(sm(
+            delta_row_shard, in_specs=(P(), buf_spec, P(), P()),
+            out_specs=P()))
+        self._weighted_sum = jax.jit(sm(
+            weighted_sum_shard, in_specs=(P(), buf_spec, P(), P(ax)),
+            out_specs=P()))
+        self._blend_rows = jax.jit(sm(
+            blend_rows_shard, in_specs=(P(), buf_spec, P(), P(), P()),
+            out_specs=P()))
+
+    # anything not shard-aware (flatten/unflatten, pytree blends, the
+    # replicated-rows trunk the async runtime feeds) is the base engine's
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    def blend_row_flat(self, g_flat, fleet_buf, cid, beta) -> jnp.ndarray:
+        coefs = jnp.stack([jnp.float32(beta), 1.0 - jnp.float32(beta)])
+        return self._blend_row(g_flat, fleet_buf, jnp.int32(cid), coefs)
+
+    def delta_row_flat(self, g_flat, fleet_buf, cid, scale) -> jnp.ndarray:
+        return self._delta_row(g_flat, fleet_buf, jnp.int32(cid),
+                               jnp.float32(scale))
+
+    def weighted_sum_rows_flat(self, coef0, g_flat, coefs,
+                               rows: jnp.ndarray) -> jnp.ndarray:
+        """Fleet-wide eq. (2/7) where ``rows`` IS the sharded (M_pad, n)
+        buffer; ``coefs`` has one entry per REAL client and is zero-padded
+        to M_pad here (padded rows never contribute)."""
+        coefs = np.asarray(coefs, np.float32)
+        pad = self.layout.M_pad - coefs.shape[0]
+        if pad:
+            coefs = np.concatenate([coefs, np.zeros(pad, np.float32)])
+        return self._weighted_sum(g_flat, rows, jnp.float32(coef0),
+                                  jnp.asarray(coefs))
+
+    def blend_rows_fleet(self, g_flat, fleet_buf, cids: Sequence[int],
+                         betas: Sequence[float]) -> jnp.ndarray:
+        """Trunk of K sequential eq.-(3) blends whose K client models are
+        rows of the sharded fleet buffer (addressed by global cid); K is
+        pow2-bucketed with zero-coefficient repeats of cids[0]."""
+        if len(cids) != len(betas):
+            raise ValueError("one beta per queued row")
+        c0, coefs = agg.fold_sequential_blends([float(b) for b in betas])
+        bucket = pow2_bucket(len(cids))
+        pad = bucket - len(cids)
+        coefs = np.concatenate((coefs, np.zeros(pad))).astype(np.float32)
+        cids = np.concatenate((np.asarray(cids, np.int32),
+                               np.full(pad, cids[0], np.int32)))
+        return self._blend_rows(g_flat, fleet_buf, jnp.float32(c0),
+                                jnp.asarray(coefs), jnp.asarray(cids))
 
 
 # ---------------------------------------------------------------------------

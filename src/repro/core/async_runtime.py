@@ -52,6 +52,10 @@ class AsyncCSMAAFLServer:
     stays FLAT: clients upload (n,) rows, the trunk blend consumes the
     stacked (K, n) rows directly (``AggEngine.blend_rows_flat`` — no
     per-leaf flatten concat), and replies carry the flat global buffer.
+    A ``ShardedClientPlane`` works too: threaded clients hold their own
+    replicated rows (they model remote edge devices, not mesh shards),
+    so the trunk blend delegates to the base engine's replicated-rows
+    path — only the simulator loops shard the fleet buffer itself.
     """
 
     def __init__(self, params0, *, gamma: float = 0.4,

@@ -95,7 +95,13 @@ class ClientPlane:
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.bucket = bucket
+        # cap on the AFL event-window length before a forced retrain
+        # flush (None = only flush on uploader repeat); large fleets set
+        # this to bound the pending g-snapshot memory (one (n,) buffer
+        # per queued event)
+        self.window_cap: Optional[int] = None
         donate = _can_donate() if donate is None else donate
+        self.donate = donate
         if unroll is None:
             # XLA:CPU executes while-loop bodies on a slow path (~4x on
             # the paper CNN), so fully unroll the scan there — the pow2
@@ -115,6 +121,7 @@ class ClientPlane:
                                   unroll=unroll)
             return out
 
+        self._scan_train = scan_train          # subclasses re-map this
         self._train_flat = jax.jit(scan_train)
 
         def train_row(fleet_buf, g_flat, cid, batches, valid):
@@ -155,10 +162,10 @@ class ClientPlane:
         launch producing the (M, n) fleet buffer."""
         return self.train_all(g_flat, seed)
 
-    def train_all(self, g_flat: jnp.ndarray, seed: int,
-                  local_steps_override: Optional[int] = None) -> jnp.ndarray:
-        """One fleet-wide round (FedAvg round / baseline-AFL broadcast):
-        vmap the scanned local SGD across all M rows — ONE launch."""
+    def _stage_fleet(self, seed: int,
+                     local_steps_override: Optional[int] = None):
+        """Stage one round of batches for the WHOLE fleet: stacked
+        (M, bucket, ...) leaves + the (M, bucket) step-valid mask."""
         staged = []
         nbs = []
         for c in self.fleet:
@@ -171,6 +178,13 @@ class ClientPlane:
             lambda *xs: np.stack(xs),
             *[_pad_batches(b, bucket) for b in staged])
         valid = np.arange(bucket)[None, :] < np.asarray(nbs)[:, None]
+        return batches, valid
+
+    def train_all(self, g_flat: jnp.ndarray, seed: int,
+                  local_steps_override: Optional[int] = None) -> jnp.ndarray:
+        """One fleet-wide round (FedAvg round / baseline-AFL broadcast):
+        vmap the scanned local SGD across all M rows — ONE launch."""
+        batches, valid = self._stage_fleet(seed, local_steps_override)
         return self._train_all(g_flat, batches, valid)
 
     def train_row(self, fleet_buf: jnp.ndarray, g_flat: jnp.ndarray,
@@ -226,3 +240,198 @@ class ClientPlane:
 
     def unflatten(self, flat: jnp.ndarray):
         return self.engine.unflatten(flat)
+
+
+class ShardedClientPlane(ClientPlane):
+    """Fleet plane sharded over a ``("fleet",)`` device mesh (DESIGN.md §6).
+
+    The (M, n) client-state matrix is block-partitioned by row over the
+    mesh's ``fleet`` axis (client ``cid`` -> shard ``cid // rows_per_shard``,
+    padded up to ``M_pad`` so every shard holds an equal block); the global
+    flat model stays replicated.  All fleet-touching programs run inside
+    ``shard_map``:
+
+    * ``train_all`` vmaps the scanned local SGD over each shard's OWN row
+      block (per-shard batch stacks arrive pre-partitioned on the leading
+      axis) — fleet-wide rounds scale with M/D;
+    * ``train_rows`` batches an event window's retrains PER SHARD: the
+      window is grouped by owning shard on the host, each shard's list is
+      padded to the bucketed per-shard maximum (pads duplicate the
+      shard's first entry, or no-op-rewrite row 0 on shards with no
+      events, so duplicate scatters always carry identical values), and
+      one launch retrains every shard's slice concurrently;
+    * ``train_row`` runs the single-event scan on every shard (SPMD) and
+      masks the row write to the owner;
+    * the blends go through :class:`~repro.core.agg_engine.ShardedRowEngine`
+      (``self.engine``), which resolves global row indices to
+      (shard, local-row) inside the program and psum-gathers ONLY the
+      addressed row — the fleet buffer itself is never gathered.
+
+    ``mesh`` defaults to ``repro.launch.mesh.make_fleet_mesh()`` (every
+    host device).  With one device this degrades exactly to the base
+    plane's math (parity-tested), so the same code path serves laptop and
+    pod.
+    """
+
+    def __init__(self, engine: AggEngine, fleet: Sequence[ClientSpec],
+                 step_fn: StepFn, batch_fn: BatchFn, *, mesh=None,
+                 window_cap: Optional[int] = None, **plane_kw):
+        super().__init__(engine, fleet, step_fn, batch_fn, **plane_kw)
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.agg_engine import ShardedRowEngine
+        from repro.launch.mesh import make_fleet_mesh, shard_map_compat
+        from repro.sharding import specs as sspec
+
+        self.mesh = make_fleet_mesh() if mesh is None else mesh
+        D = self.mesh.shape[sspec.FLEET_AXIS]
+        self.layout = sspec.FleetLayout(self.M, D)
+        # self.engine becomes the shard-aware wrapper; runtimes address
+        # rows through it without knowing the buffer is distributed
+        self.engine = ShardedRowEngine(engine, self.mesh, self.layout)
+        self._ax = sspec.FLEET_AXIS
+        self._P = P
+        self._sspec = sspec
+        self._shard_map = shard_map_compat
+        self._prog_cache = {}
+        self.window_cap = window_cap
+
+    # -- shard_map program builders (cached per batch-tree structure) -------
+    def _program(self, name, treedef, builder):
+        key = (name, treedef)
+        prog = self._prog_cache.get(key)
+        if prog is None:
+            prog = builder()
+            self._prog_cache[key] = prog
+        return prog
+
+    def compiled_variants(self) -> int:
+        """Total TRACED program variants across the plane's jitted
+        shard_map programs (one per distinct bucketed shape), the honest
+        'no recompile-per-event' signal — the _prog_cache key count only
+        reflects batch-tree structures, not per-shape retraces."""
+        total = 0
+        for prog in self._prog_cache.values():
+            size = getattr(prog, "_cache_size", None)
+            total += int(size()) if callable(size) else 1
+        return total
+
+    def _sharded_train_all(self, batches):
+        P, ax, scan_train = self._P, self._ax, self._scan_train
+
+        def body(g, b, v):
+            return jax.vmap(scan_train, in_axes=(None, 0, 0))(g, b, v)
+
+        specs = (P(), self._sspec.fleet_batch_specs(batches),
+                 P(ax, None))
+        f = self._shard_map(body, mesh=self.mesh, in_specs=specs,
+                            out_specs=self._sspec.fleet_buffer_spec())
+        return jax.jit(f)
+
+    def _sharded_train_row(self, batches):
+        P, ax, scan_train = self._P, self._ax, self._scan_train
+        m_loc = self.layout.rows_per_shard
+
+        def body(buf, g, cid, b, v):
+            new = scan_train(g, b, v)          # every shard computes (SPMD)
+            shard = cid // m_loc
+            lrow = cid - shard * m_loc
+            cur = jax.lax.dynamic_slice_in_dim(buf, lrow, 1, axis=0)
+            row = jnp.where(jax.lax.axis_index(ax) == shard,
+                            new[None].astype(buf.dtype), cur)
+            return jax.lax.dynamic_update_slice_in_dim(buf, row, lrow,
+                                                       axis=0)
+
+        specs = (self._sspec.fleet_buffer_spec(), P(), P(),
+                 jax.tree.map(lambda _: P(), batches), P())
+        f = self._shard_map(body, mesh=self.mesh, in_specs=specs,
+                            out_specs=self._sspec.fleet_buffer_spec())
+        return jax.jit(f, donate_argnums=(0,) if self.donate else ())
+
+    def _sharded_train_rows(self, batches):
+        P, ax, scan_train = self._P, self._ax, self._scan_train
+
+        def body(buf, gs, lcids, wvalid, b, v):
+            rows = jax.vmap(scan_train)(gs, b, v)          # (W_b, n)
+            cur = buf[lcids]
+            out = jnp.where(wvalid[:, None], rows.astype(buf.dtype), cur)
+            # duplicate lcids (pads) always scatter identical values, so
+            # the undefined duplicate-write order cannot corrupt a row
+            return buf.at[lcids].set(out)
+
+        specs = (self._sspec.fleet_buffer_spec(), P(ax, None), P(ax),
+                 P(ax), self._sspec.fleet_batch_specs(batches), P(ax, None))
+        f = self._shard_map(body, mesh=self.mesh, in_specs=specs,
+                            out_specs=self._sspec.fleet_buffer_spec())
+        return jax.jit(f, donate_argnums=(0,) if self.donate else ())
+
+    # -- fused local training (sharded) -------------------------------------
+    def train_all(self, g_flat: jnp.ndarray, seed: int,
+                  local_steps_override: Optional[int] = None) -> jnp.ndarray:
+        """One fleet-wide round, each shard training its own M/D rows
+        concurrently.  Rows padded up to M_pad carry an all-False step
+        mask (they come back as copies of the global) and zero
+        coefficients in every blend."""
+        batches, valid = self._stage_fleet(seed, local_steps_override)
+        pad = self.layout.M_pad - self.M
+        if pad:
+            batches = jax.tree.map(
+                lambda x: np.concatenate(
+                    [x, np.repeat(x[:1], pad, axis=0)]), batches)
+            valid = np.concatenate(
+                [valid, np.zeros((pad,) + valid.shape[1:], bool)])
+        prog = self._program("train_all", jax.tree.structure(batches),
+                             lambda: self._sharded_train_all(batches))
+        return prog(g_flat, batches, valid)
+
+    def train_row(self, fleet_buf: jnp.ndarray, g_flat: jnp.ndarray,
+                  cid: int, num_steps: int, seed: int) -> jnp.ndarray:
+        batches, valid = self._stage_one(cid, num_steps, seed)
+        prog = self._program("train_row", jax.tree.structure(batches),
+                             lambda: self._sharded_train_row(batches))
+        return prog(fleet_buf, g_flat, jnp.int32(cid), batches, valid)
+
+    def train_rows(self, fleet_buf: jnp.ndarray,
+                   entries: Sequence) -> jnp.ndarray:
+        """Event-window batched retrain, grouped by owning shard: one
+        launch trains every shard's slice of the window concurrently.
+        Same contract as the base plane (distinct cids; per-event global
+        snapshots), same math to ≤1e-5."""
+        cids = [e[0] for e in entries]
+        if len(set(cids)) != len(cids):
+            raise ValueError("event-window entries must have distinct cids")
+        D = self.layout.D
+        per_shard: list = [[] for _ in range(D)]
+        for e in entries:
+            per_shard[self.layout.shard_of(e[0])].append(e)
+        staged = {e[0]: self.batch_fn(e[0], e[2], e[3]) for e in entries}
+        nbs = {cid: _num_batches(b) for cid, b in staged.items()}
+        nb_bucket = self._bucketed(max(nbs.values()))
+        W = max(len(p) for p in per_shard)
+        w_bucket = pow2_bucket(W) if self.bucket else W
+
+        gs, lcids, wvalid, batch_list, svalid = [], [], [], [], []
+        for s in range(D):
+            es = per_shard[s]
+            # pads duplicate the shard's first entry (identical trained
+            # row -> identical duplicate writes); an event-less shard
+            # no-op-rewrites its row 0 (wvalid False -> writes back the
+            # current value, again identical across duplicates)
+            slots = (es + es[:1] * (w_bucket - len(es))) if es \
+                else [entries[0]] * w_bucket
+            for k, (cid, g_snap, _steps, _seed) in enumerate(slots):
+                live = bool(es)
+                lcids.append(self.layout.local_row(cid) if live else 0)
+                wvalid.append(live)
+                gs.append(g_snap)
+                b = staged[cid]
+                batch_list.append(_pad_batches(b, nb_bucket))
+                nb = nbs[cid]
+                svalid.append((np.arange(nb_bucket) < nb) if live
+                              else np.zeros(nb_bucket, bool))
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *batch_list)
+        prog = self._program("train_rows", jax.tree.structure(batches),
+                             lambda: self._sharded_train_rows(batches))
+        return prog(fleet_buf, jnp.stack(gs),
+                    np.asarray(lcids, np.int32), np.asarray(wvalid),
+                    batches, np.stack(svalid))

@@ -22,9 +22,7 @@ shapes, and ``make_sfl_step`` (FedAvg on-cluster) as the paper's baseline.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +31,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import FederatedConfig, MeshConfig, ModelConfig
 from repro.core import agg_engine
 from repro.models import transformer as tmod
-from repro.optim import optimizers as opt
 from repro.sharding import specs as sspec
 
 

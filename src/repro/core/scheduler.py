@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -176,7 +176,6 @@ class BaselineAFLScheduler:
     def events(self, max_iterations: int) -> Iterator[UploadEvent]:
         tau_u, tau_d = self.tau_u, self.tau_d
         order = self.cycle_order()
-        M = len(self.fleet)
         model_iter = {c.cid: 0 for c in self.fleet}
         t = 0.0
         j = 0

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.core import aggregation as agg
@@ -58,6 +57,10 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
     eq. (2) consumes the buffer's rows directly
     (``AggEngine.weighted_sum_rows_flat``); ``local_train_fn`` may be
     None in this mode.  Parity with the per-minibatch path ≤1e-5.
+    With a ``ShardedClientPlane`` the round trains each mesh shard's
+    M/D rows concurrently and eq. (2) becomes a per-shard partial MAC +
+    psum (the shard-aware engine zero-pads α for the padded rows) —
+    same call sites, DESIGN.md §6.
     """
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
     plane = client_plane if (use_client_plane and client_plane is not None) \

@@ -22,7 +22,7 @@ restores the full c0·g term exactly).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,15 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MeshConfig
 from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat2d
-
-# version compat: ``jax.shard_map`` (with check_vma) only exists in newer
-# JAX; the pinned container ships the experimental API (with check_rep)
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _CHECK_KW = "check_vma"
-else:  # pragma: no cover - exercised on the pinned container JAX
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _CHECK_KW = "check_rep"
+from repro.launch.mesh import shard_map_compat
 
 
 def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
@@ -91,12 +83,11 @@ def shardmap_weighted_blend(mesh, mesh_cfg: MeshConfig, *,
         idx = jnp.arange(C, dtype=jnp.int32)
 
         def one_leaf(g, w):
-            f = _shard_map(
+            f = shard_map_compat(
                 blend_shard,
                 mesh=mesh,
                 in_specs=(P(), P(cspec), P(), P(cspec)),
-                out_specs=P(),
-                **{_CHECK_KW: False})
+                out_specs=P())
             return f(g, w, coefs.astype(jnp.float32), idx)
 
         return jax.tree.map(one_leaf, global_params, client_params)

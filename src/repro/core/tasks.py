@@ -19,18 +19,16 @@ Both tasks expose two local-training surfaces:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FederatedConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.configs.paper_cnn import CNNConfig, MNIST_CNN
 from repro.data import federated as fd
-from repro.data.mnist_like import Dataset, make_dataset
+from repro.data.mnist_like import make_dataset
 from repro.data.synthetic import TokenStream
 from repro.models import cnn as cnn_mod
 from repro.models import transformer as tmod
@@ -104,12 +102,13 @@ class CNNTask:
             params, _ = self._sgd_step(params, row)
         return params
 
-    def client_plane(self, fleet, **plane_kw):
+    def client_plane(self, fleet, *, sharded: bool = False, **plane_kw):
         """Fused fleet plane: grad against the flat parameter vector via
         the engine's cached unflatten expression; batches staged as
-        index arrays (the image gather happens on device inside scan)."""
+        index arrays (the image gather happens on device inside scan).
+        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6)."""
         from repro.core.agg_engine import engine_for
-        from repro.core.client_plane import ClientPlane
+        from repro.core.client_plane import ClientPlane, ShardedClientPlane
 
         template = jax.eval_shape(
             lambda: cnn_mod.init_params(self.cfg, jax.random.PRNGKey(0)))
@@ -123,8 +122,9 @@ class CNNTask:
                 lambda f: cnn_mod.loss_fn(unflatten(f), batch))(flat)
             return flat - lr * grad
 
-        return ClientPlane(engine, fleet, step_fn,
-                           self._global_batch_indices, **plane_kw)
+        cls = ShardedClientPlane if sharded else ClientPlane
+        return cls(engine, fleet, step_fn,
+                   self._global_batch_indices, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"accuracy": float(self._eval(params))}
@@ -201,15 +201,16 @@ class LMTask:
             params, _ = self._sgd_step(params, b)
         return params
 
-    def client_plane(self, fleet, **plane_kw):
+    def client_plane(self, fleet, *, sharded: bool = False, **plane_kw):
         """Fused fleet plane for the LM task.  Each round's token batches
         are pre-sampled and staged as one (KB, B, S) array; the zero
         modality stubs (patch/frame embeds) are rebuilt inside the jitted
         step so they never cross host→device.  Streams advance exactly as
         the per-minibatch path does (same draws per call), so plane-on
-        and plane-off consume identical token sequences."""
+        and plane-off consume identical token sequences.
+        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6)."""
         from repro.core.agg_engine import engine_for
-        from repro.core.client_plane import ClientPlane
+        from repro.core.client_plane import ClientPlane, ShardedClientPlane
 
         cfg, lr, seq_len = self.cfg, self.lr, self.seq_len
         template = jax.eval_shape(
@@ -235,7 +236,8 @@ class LMTask:
             return {"tokens": np.stack([b["tokens"] for b in bs]),
                     "labels": np.stack([b["labels"] for b in bs])}
 
-        return ClientPlane(engine, fleet, step_fn, batch_fn, **plane_kw)
+        cls = ShardedClientPlane if sharded else ClientPlane
+        return cls(engine, fleet, step_fn, batch_fn, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"loss": float(self._eval(params))}

@@ -14,7 +14,6 @@ Two variants mirror the paper's two datasets:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
 
 import numpy as np
 

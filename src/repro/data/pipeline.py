@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np

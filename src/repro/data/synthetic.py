@@ -8,7 +8,7 @@ given (seed, cid).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

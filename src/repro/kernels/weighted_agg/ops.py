@@ -10,7 +10,6 @@ reference used in kernel unit tests.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,6 @@ accumulation + coefficients) matches the training setup.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -40,7 +39,6 @@ def _agg_kernel(coef_ref, g_ref, w_ref, o_ref):
     c0 = coef_ref[0]
     acc = c0 * g_ref[...].astype(jnp.float32)          # (blk,)
     # clients dim is small and static: unrolled FMA chain over C
-    C = w_ref.shape[0]
     w = w_ref[...].astype(jnp.float32)                 # (C, blk)
     coefs = coef_ref[1:]                               # (C,)
     acc = acc + jnp.sum(w * coefs[:, None], axis=0)

@@ -1,0 +1,268 @@
+import os
+import sys
+
+
+def _early_devices() -> int:
+    """Parse --devices BEFORE importing jax (device count locks at init)."""
+    for i, a in enumerate(sys.argv):
+        if a == "--devices" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+_n = _early_devices()
+if _n:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}").strip()
+# The block above MUST run before any other import (jax locks the device
+# count at first init).  Do not move it.
+
+"""Sharded-fleet-plane self-check (DESIGN.md §6).
+
+Validates the ShardedClientPlane against the single-device plane on THIS
+process's devices — run it with ``--devices 8`` to simulate an 8-device
+CPU mesh (the flag must be first-parsed, hence the header above):
+
+  PYTHONPATH=src python -m repro.launch.fleet_check --devices 8 --M 64
+
+Checks (all gated at 1e-5):
+  * global-row -> (shard, local-row) addressing: the sharded engine's
+    row blends equal the base engine's against the gathered buffer;
+  * run_afl / run_fedavg parity, sharded vs single-device plane, on the
+    paper CNN at f32 and a flat toy fleet at bf16;
+  * an M not divisible by the device count (padded rows masked out);
+  * optional ``--smoke-M 1000``: a large-fleet run stays finite and
+    compiles O(log) program variants, not one per event.
+
+Used by ``tests/test_sharded_plane.py`` (as a subprocess, so tier-1 can
+exercise 8 simulated devices without forcing them on the whole suite)
+and by CI's bench-gate smoke job.  Exits nonzero on any failure and
+writes a JSON report with every measured parity.
+"""
+import argparse
+import json
+import time
+
+
+def _maxdiff(a, b):
+    import jax
+    import numpy as np
+
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def check_addressing(report: dict) -> None:
+    """Sharded row blends == base-engine blends on the gathered buffer."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import aggregation as agg
+    from repro.core.agg_engine import AggEngine
+    from repro.core.client_plane import ShardedClientPlane
+    from repro.core.scheduler import make_fleet
+
+    M, n = 11, 193          # prime-ish: always ragged on multi-device
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[50 + 10 * m for m in range(M)],
+                       adaptive=True, max_steps=3, seed=1)
+    eng = AggEngine(w0)
+
+    def batch_fn(cid, steps, seed):
+        r = np.random.default_rng((seed * 131 + cid) % (2 ** 31))
+        return r.normal(size=(steps, n)).astype(np.float32)
+
+    plane = ShardedClientPlane(eng, fleet, lambda f, t: f - 0.2 * (f - t),
+                               batch_fn)
+    lay = plane.layout
+    g = eng.flatten(w0)
+    buf = plane.init_fleet(g, seed=5)
+    host_buf = np.asarray(buf, np.float32)
+    diffs = []
+    for cid in range(M):
+        # the layout oracle
+        assert lay.shard_of(cid) == cid // lay.rows_per_shard
+        assert lay.local_row(cid) == cid % lay.rows_per_shard
+        out = plane.engine.blend_row_flat(g, buf, cid, 0.7)
+        ref = agg.blend_pytree(w0, jnp.asarray(host_buf[cid]), 0.7)
+        diffs.append(_maxdiff(out, ref))
+        pg = plane.engine.delta_row_flat(g, buf, cid, 0.3)
+        pref = 0.3 * (np.asarray(g, np.float32) - host_buf[cid])
+        diffs.append(_maxdiff(pg, pref))
+    # fleet-wide weighted sum: padded rows must not contribute
+    alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+    out = plane.engine.weighted_sum_rows_flat(0.1, g, list(alpha), buf)
+    ref = agg.weighted_sum_pytrees(0.1, w0, list(alpha),
+                                   [jnp.asarray(host_buf[m])
+                                    for m in range(M)])
+    diffs.append(_maxdiff(out, ref))
+    # folded trunk addressed by global cids
+    cids, betas = [0, M // 2, M - 1], [0.9, 0.6, 0.8]
+    out = plane.engine.blend_rows_fleet(g, buf, cids, betas)
+    ref = w0
+    for cid, b in zip(cids, betas):
+        ref = agg.blend_pytree(ref, jnp.asarray(host_buf[cid]), b)
+    diffs.append(_maxdiff(out, ref))
+    report["addressing_max_diff"] = max(diffs)
+    report["ragged_M"] = M
+    report["rows_per_shard"] = lay.rows_per_shard
+    report["M_pad"] = lay.M_pad
+
+
+def check_cnn_f32(report: dict, M: int, iterations: int) -> None:
+    """run_afl + run_fedavg on the paper CNN, sharded vs base plane."""
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.sfl import run_fedavg
+    from repro.core.tasks import CNNTask
+
+    task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=128,
+                   batch_size=1, local_batches_per_step=4,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=2, seed=0)
+    p0 = task.init_params()
+    base = task.client_plane(fleet)
+    sharded = task.client_plane(fleet, sharded=True)
+    kw = dict(algorithm="csmaafl", iterations=iterations,
+              tau_u=0.1, tau_d=0.1, gamma=0.4)
+    r_base = run_afl(p0, fleet, None, client_plane=base, **kw)
+    r_shard = run_afl(p0, fleet, None, client_plane=sharded, **kw)
+    report["afl_f32_parity"] = _maxdiff(r_shard.params, r_base.params)
+    w_base, _ = run_fedavg(p0, fleet, None, client_plane=base, rounds=2,
+                           tau_u=0.1, tau_d=0.1)
+    w_shard, _ = run_fedavg(p0, fleet, None, client_plane=sharded, rounds=2,
+                            tau_u=0.1, tau_d=0.1)
+    report["fedavg_f32_parity"] = _maxdiff(w_shard, w_base)
+
+
+def check_toy_bf16(report: dict) -> None:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.afl import run_afl
+    from repro.core.agg_engine import AggEngine
+    from repro.core.client_plane import ClientPlane, ShardedClientPlane
+    from repro.core.scheduler import make_fleet
+
+    M, n = 13, 97
+    rng = np.random.default_rng(3)
+    w0 = jnp.asarray(rng.normal(size=n), jnp.bfloat16)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m for m in range(M)],
+                       adaptive=True, max_steps=3, seed=2)
+    eng = AggEngine(w0, storage_dtype=jnp.bfloat16)
+
+    def batch_fn(cid, steps, seed):
+        r = np.random.default_rng((seed * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(steps, n)), jnp.bfloat16)
+
+    def step(flat, t):
+        return (flat.astype(jnp.float32)
+                - 0.25 * (flat.astype(jnp.float32) - t.astype(jnp.float32))
+                ).astype(jnp.bfloat16)
+
+    kw = dict(algorithm="csmaafl", iterations=3 * M, tau_u=0.1, tau_d=0.1,
+              gamma=0.4)
+    r_base = run_afl(w0, fleet, None,
+                     client_plane=ClientPlane(eng, fleet, step, batch_fn),
+                     **kw)
+    r_shard = run_afl(w0, fleet, None,
+                      client_plane=ShardedClientPlane(eng, fleet, step,
+                                                      batch_fn), **kw)
+    report["afl_bf16_parity"] = _maxdiff(r_shard.params, r_base.params)
+
+
+def check_smoke(report: dict, M: int) -> None:
+    """Large-fleet smoke: finite result, bounded program-variant count."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.afl import run_afl
+    from repro.core.agg_engine import AggEngine
+    from repro.core.client_plane import ShardedClientPlane
+    from repro.core.scheduler import make_fleet
+
+    n = 4096
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[50 + m % 100 for m in range(M)],
+                       adaptive=True, max_steps=3, seed=3)
+
+    def batch_fn(cid, steps, seed):
+        r = np.random.default_rng((seed * 131 + cid) % (2 ** 31))
+        return r.normal(size=(steps, n)).astype(np.float32)
+
+    plane = ShardedClientPlane(AggEngine(w0), fleet,
+                               lambda f, t: f - 0.1 * (f - t), batch_fn,
+                               window_cap=256)
+    t0 = time.time()
+    r = run_afl(w0, fleet, None, client_plane=plane, algorithm="csmaafl",
+                iterations=300, tau_u=0.1, tau_d=0.1, gamma=0.4)
+    jax.block_until_ready(r.params)
+    report["smoke_M"] = M
+    report["smoke_seconds"] = time.time() - t0
+    report["smoke_finite"] = bool(np.isfinite(np.asarray(r.params)).all())
+    report["smoke_program_variants"] = plane.compiled_variants()
+
+
+def main(argv=None) -> int:
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulated host devices (must be the literal "
+                         "flag; parsed before jax import)")
+    ap.add_argument("--M", type=int, default=64)
+    ap.add_argument("--iterations", type=int, default=48)
+    ap.add_argument("--smoke-M", type=int, default=0, dest="smoke_m",
+                    help="also smoke-run a toy fleet this large (0: skip)")
+    ap.add_argument("--json", default=None, help="write the report here")
+    args = ap.parse_args(argv)
+
+    report: dict = {"devices": len(jax.devices()),
+                    "backend": jax.default_backend(), "M": args.M}
+    if args.devices and report["devices"] != args.devices:
+        print(f"fleet_check: requested {args.devices} devices but jax has "
+              f"{report['devices']} (flag parsed too late?)",
+              file=sys.stderr)
+        return 2
+    check_addressing(report)
+    check_cnn_f32(report, args.M, args.iterations)
+    check_toy_bf16(report)
+    if args.smoke_m:
+        check_smoke(report, args.smoke_m)
+
+    bound = 1e-5
+    failures = [k for k in ("addressing_max_diff", "afl_f32_parity",
+                            "fedavg_f32_parity", "afl_bf16_parity")
+                if report[k] > bound]
+    if args.smoke_m:
+        if not report["smoke_finite"]:
+            failures.append("smoke_finite")
+        # train_all + a handful of bucketed train_rows widths, never
+        # one program per event
+        if report["smoke_program_variants"] > 12:
+            failures.append("smoke_program_variants")
+    report["failures"] = failures
+    report["ok"] = not failures
+    out = json.dumps(report, indent=1, default=float)
+    print(out)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(out)
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,6 @@ are supplied as ready-made arrays of the right shape.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Tuple
 
 import jax

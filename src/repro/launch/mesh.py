@@ -11,6 +11,24 @@ from typing import Optional
 import jax
 
 from repro.configs.base import (MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig)
+from repro.sharding.specs import FLEET_AXIS
+
+# version compat: ``jax.shard_map`` (with check_vma) only exists in newer
+# JAX; the pinned container ships the experimental API (with check_rep).
+# Every shard_map in the repo must go through ``shard_map_compat`` (or pass
+# the kwarg name explicitly) so a clean checkout works on both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    SHARD_MAP_CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on the pinned container JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+    SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` with the check_rep/check_vma kwarg-name shim applied."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{SHARD_MAP_CHECK_KW: check})
 
 
 def axis_types_kwargs(n_axes: int) -> dict:
@@ -52,3 +70,15 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     n = len(jax.devices())
     return make_mesh(
         (1,) * (len(axes) - 1) + (n,) if n > 1 else (1,) * len(axes), axes)
+
+
+def make_fleet_mesh(num_devices: Optional[int] = None) -> jax.sharding.Mesh:
+    """1-D ``("fleet",)`` mesh for the sharded client plane (DESIGN.md §6).
+
+    Fleet rows are embarrassingly parallel, so the plane only ever needs a
+    single axis; ``num_devices=None`` takes every device the host has
+    (CI simulates 8 with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    set before the first jax import).
+    """
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return make_mesh((n,), (FLEET_AXIS,))

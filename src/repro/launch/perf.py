@@ -15,7 +15,6 @@ import json
 import time
 from typing import Any, Dict
 
-import jax
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import FederatedConfig

@@ -13,11 +13,18 @@ Each fused step folds a *trunk* of scheduler-approved uploads into one
 weighted collective (DESIGN.md §3): the scheduler yields the next C
 uploads, ``fold_sequential_blends`` turns their per-iteration β_j into the
 (c0, coefs) vector, and the jitted step applies local SGD + the blend.
+
+``--data-plane fleet`` instead rides the client fleet plane (DESIGN.md
+§4/§6): the whole fleet's models live as one (M, n) flat buffer sharded
+over a ``fleet`` device mesh, local SGD is the scanned/vmapped plane and
+every blend is row-addressed — the event loop is ``core.afl.run_afl``.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2-0.5b --reduced --steps 40 --data-plane fleet
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import List
 
@@ -34,7 +41,6 @@ from repro.core import distributed as dist
 from repro.core.scheduler import AFLScheduler, make_fleet
 from repro.data.synthetic import TokenStream
 from repro.models import transformer as tmod
-from repro.sharding import specs as sspec
 
 
 def build_mesh(name: str):
@@ -49,6 +55,46 @@ def build_mesh(name: str):
     return mesh, mc
 
 
+def run_fleet_plane(cfg, args, params) -> None:
+    """ROADMAP follow-up: the trunked trainer rides the (sharded) fleet
+    plane.  LMTask supplies the flat-row step; the plane shards the
+    (M, n) fleet buffer over every host device (``make_fleet_mesh``) and
+    the AFL event loop / FedAvg rounds run through the row-addressed
+    engine — on one device this is exactly the PR-2 plane."""
+    from repro.core.afl import run_afl
+    from repro.core.sfl import run_fedavg
+    from repro.core.tasks import LMTask
+
+    task = LMTask(cfg, num_clients=args.clients, batch_size=args.batch,
+                  seq_len=args.seq, lr=args.lr)
+    fleet = make_fleet(args.clients, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[1000] * args.clients, seed=0)
+    plane = task.client_plane(fleet, sharded=True,
+                              window_cap=args.window_cap)
+    print(f"fleet plane: M={plane.M} shards={plane.layout.D} "
+          f"rows/shard={plane.layout.rows_per_shard} n={plane.engine.n:,}")
+    t0 = time.time()
+    every = max(args.steps // 10, 1)
+    if args.algorithm == "fedavg":
+        final, hist = run_fedavg(
+            params, fleet, None, rounds=args.steps, tau_u=0.05, tau_d=0.05,
+            eval_fn=task.eval_fn, eval_every=every, client_plane=plane)
+    else:
+        res = run_afl(
+            params, fleet, None, algorithm="csmaafl",
+            iterations=args.steps, tau_u=0.05, tau_d=0.05,
+            gamma=args.gamma, eval_fn=task.eval_fn, eval_every=every,
+            client_plane=plane)
+        final, hist = res.params, res.history
+    for it, m in zip(hist.iterations, hist.metrics):
+        print(f"iter {it:4d} loss={m['loss']:.4f}")
+    print(f"{args.steps} events in {time.time()-t0:.1f}s")
+    if args.save:
+        ckpt.save(args.save, final, step=args.steps,
+                  metadata={"arch": cfg.arch_id, "data_plane": "fleet"})
+        print("checkpoint saved to", args.save)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -58,6 +104,17 @@ def main(argv=None) -> None:
                     choices=["host", "single", "multi"])
     ap.add_argument("--algorithm", default="csmaafl",
                     choices=["csmaafl", "fedavg"])
+    ap.add_argument("--data-plane", default="spmd", dest="data_plane",
+                    choices=["spmd", "fleet"],
+                    help="spmd: fused GSPMD trunk step over the data/model "
+                         "mesh; fleet: the (sharded) client fleet plane — "
+                         "one row per client over the 'fleet' axis "
+                         "(DESIGN.md §4/§6)")
+    ap.add_argument("--window-cap", type=int, default=None,
+                    dest="window_cap",
+                    help="fleet plane: max AFL event-window length before "
+                         "a forced retrain flush (bounds snapshot memory "
+                         "on M>=1000 fleets)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--clients", type=int, default=4,
@@ -71,6 +128,22 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+
+    if args.data_plane == "fleet":
+        # the fleet plane builds its own 1-D mesh over ALL host devices
+        # (make_fleet_mesh); --mesh names a GSPMD data/model topology and
+        # would be silently ignored here — refuse instead
+        if args.mesh != "host":
+            ap.error("--data-plane fleet shards over every host device "
+                     "(a 1-D 'fleet' mesh); --mesh single/multi only "
+                     "applies to --data-plane spmd")
+        params = tmod.init_params(cfg, jax.random.PRNGKey(0))
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        print(f"arch={cfg.arch_id} params={n_params:,} "
+              f"algorithm={args.algorithm} data_plane=fleet")
+        run_fleet_plane(cfg, args, params)
+        return
+
     fed = FederatedConfig(num_clients=args.clients, algorithm=args.algorithm,
                           gamma=args.gamma, lr=args.lr)
     mesh, mcfg = build_mesh(args.mesh)
@@ -79,7 +152,7 @@ def main(argv=None) -> None:
     params = tmod.init_params(cfg, key)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.arch_id} params={n_params:,} mesh={mcfg.shape} "
-          f"algorithm={args.algorithm}")
+          f"algorithm={args.algorithm} data_plane={args.data_plane}")
 
     # data: one non-IID stream per client
     streams = [TokenStream(cfg.vocab_size, cid=c, seed=0)

@@ -24,7 +24,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AttentionConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope, dense_init, softcap
 
 Params = Dict[str, Any]
@@ -307,7 +307,6 @@ def decode_attention(params: Params, x: jnp.ndarray, cache: Params,
                      ) -> Tuple[jnp.ndarray, Params]:
     """One-token decode.  x: (B, 1, d); pos: scalar int32 (current absolute
     position).  Returns (out (B,1,d), new_cache)."""
-    B = x.shape[0]
     positions = jnp.full((1,), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(params, x, cfg, positions)
     L = cache["k"].shape[1]

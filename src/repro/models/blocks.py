@@ -12,13 +12,12 @@ so decode scans carry the cache through the same period body.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, MAMBA, ModelConfig
+from repro.configs.base import ATTN_LOCAL, MAMBA, ModelConfig
 from repro.models import attention as attn
 from repro.models import mamba2, moe
 from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init

@@ -7,7 +7,7 @@ whole parameter pytrees as the unit of aggregation) trivially composable.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -187,7 +187,6 @@ def conv1d_decode_step(conv_state: jnp.ndarray, x_t: jnp.ndarray,
 def _split_in_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
     s = cfg.ssm
     d_in = cfg.d_inner
-    nh = cfg.ssm_heads
     gn = s.n_groups * s.d_state
     z, x, Bm, Cm, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)

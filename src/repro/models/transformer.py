@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ENCDEC, MAMBA, ModelConfig, VLM
+from repro.configs.base import ENCDEC, ModelConfig, VLM
 from repro.models import attention as attn_mod
 from repro.models import blocks as blk
 from repro.models.layers import (cross_entropy, dense_init, embed_init,

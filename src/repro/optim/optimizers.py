@@ -11,8 +11,7 @@ beyond-paper) and for the LLM fine-tuning examples.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

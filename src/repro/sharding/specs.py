@@ -5,6 +5,10 @@ Mesh axes:
   * ``data`` (+ ``pod``) — one client group per index: the FL "client" axis;
                            also the ZeRO/FSDP storage axis for the *global*
                            (server) copy of the parameters.
+  * ``fleet``            — the sharded client plane's row axis: the (M, n)
+                           fleet buffer is row-partitioned over it while the
+                           global flat model stays replicated (DESIGN.md §6;
+                           producers under "Fleet-axis specs" below).
 
 Rules are computed programmatically from the parameter path + shape with
 divisibility checks (heads/experts not divisible by the model-axis size
@@ -17,7 +21,8 @@ Spec producers:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+import dataclasses
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -276,3 +281,55 @@ def cache_specs(cfg: ModelConfig, cache: Any, mesh_cfg: MeshConfig,
 
     flat = {p: spec_for(p, l) for p, l in _walk(cache)}
     return _unflatten_like(cache, flat)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-axis specs (sharded client plane, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+FLEET_AXIS = "fleet"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetLayout:
+    """Row placement of an M-client fleet over a D-way ``fleet`` axis.
+
+    Rows are block-partitioned: client ``cid`` lives at shard
+    ``cid // rows_per_shard``, local row ``cid % rows_per_shard``.  M is
+    padded up to ``M_pad = rows_per_shard * D`` so every shard holds the
+    same block; padded rows are never addressed by a blend (all real cids
+    are < M) and carry zero coefficients in fleet-wide weighted sums.
+    """
+    M: int
+    D: int
+
+    @property
+    def rows_per_shard(self) -> int:
+        return -(-self.M // self.D)
+
+    @property
+    def M_pad(self) -> int:
+        return self.rows_per_shard * self.D
+
+    def shard_of(self, cid: int) -> int:
+        return cid // self.rows_per_shard
+
+    def local_row(self, cid: int) -> int:
+        return cid % self.rows_per_shard
+
+
+def fleet_buffer_spec() -> P:
+    """The (M_pad, n) fleet buffer: rows over ``fleet``, columns local."""
+    return P(FLEET_AXIS, None)
+
+
+def fleet_stacked_spec(ndim: int) -> P:
+    """Leading-axis-over-``fleet`` spec for an ndim-rank staged array
+    (per-shard batch stacks, per-shard coefficient vectors, ...)."""
+    return P(FLEET_AXIS, *([None] * (ndim - 1)))
+
+
+def fleet_batch_specs(batches: Any) -> Any:
+    """Full-rank specs for a staged batch pytree whose every leaf carries
+    the fleet-sharded leading axis (shard_map in_specs must name every
+    dim explicitly, unlike jit shardings)."""
+    return jax.tree.map(lambda x: fleet_stacked_spec(np.ndim(x)), batches)

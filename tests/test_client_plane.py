@@ -9,7 +9,6 @@ docs/DESIGN.md §4) and its row-addressed engine blends:
 * the engine's row-addressed blends equal the per-leaf oracles;
 * the threaded async runtime works end-to-end on flat rows.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Data-pipeline tests: partitioners (paper §IV settings), procedural
 dataset determinism, token streams."""
 import numpy as np
-import pytest
 
 from repro.data import federated as fd
 from repro.data.mnist_like import make_dataset
@@ -96,7 +95,6 @@ def test_token_stream_topic_skew():
 
 def test_pipeline_assemble_and_prefetch():
     from repro.data.pipeline import Prefetcher, assemble_trunk
-    rng = np.random.default_rng(0)
 
     def source_for(cid):
         def src(b, s):

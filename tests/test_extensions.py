@@ -1,9 +1,7 @@
 """Beyond-paper extensions: FedOpt-style server optimizer on the CSMAAFL
 pseudo-gradient, Dirichlet partitioning ablation hooks."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.afl import run_afl
 from repro.core.scheduler import make_fleet

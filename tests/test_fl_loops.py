@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import aggregation as agg
 from repro.core.afl import run_afl
-from repro.core.scheduler import ClientSpec, make_fleet
+from repro.core.scheduler import make_fleet
 from repro.core.sfl import run_fedavg
 
 

@@ -1,11 +1,9 @@
 """Launch-layer tests: input specs, pair applicability, and (slow) one
 real dry-run lower+compile in a subprocess with 512 placeholder devices."""
-import json
 import os
 import subprocess
 import sys
 
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config

@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.configs.paper_cnn import MNIST_CNN
@@ -22,7 +21,6 @@ from repro.models.layers import (apply_rope, cross_entropy, rmsnorm,
 # attention
 # ---------------------------------------------------------------------------
 def test_blockwise_matches_naive(key):
-    cfg = get_config("qwen2-0.5b").reduced()
     B, S = 2, 96
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, S, 4, 32))

@@ -1,6 +1,5 @@
 """Tests for the event-driven AFL scheduler (paper §II-C, §III-B/C)."""
 import numpy as np
-import pytest
 
 from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
                                   ClientSpec, afl_model_update_interval,

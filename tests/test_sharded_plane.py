@@ -1,0 +1,244 @@
+"""Tests for the sharded fleet plane (core/client_plane.ShardedClientPlane,
+core/agg_engine.ShardedRowEngine, docs/DESIGN.md §6):
+
+* the FleetLayout global-row -> (shard, local-row) addressing oracles;
+* sharded-plane runs match the single-device plane ≤1e-5 (f32 CNN and
+  bf16 toy) — in-process on however many devices the test host has, and
+  on 8 SIMULATED devices via a ``repro.launch.fleet_check`` subprocess
+  (the device count locks at jax init, so tier-1 itself stays on the
+  host's real topology);
+* an M not divisible by the device count: padded rows are masked out of
+  every blend;
+* the shard-aware row blends equal the base-engine oracles, including
+  kernel mode under the Pallas interpreter;
+* the AFL event-window cap forces flushes without changing the history.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.afl import run_afl
+from repro.core.agg_engine import AggEngine, ShardedRowEngine
+from repro.core.client_plane import ClientPlane, ShardedClientPlane
+from repro.core.scheduler import make_fleet
+from repro.core.sfl import run_fedavg
+from repro.launch.mesh import make_fleet_mesh
+from repro.sharding.specs import FleetLayout
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Layout addressing oracles (pure host math)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,D", [(64, 8), (1000, 8), (10, 8), (7, 1),
+                                 (8, 8)])
+def test_fleet_layout_addressing(M, D):
+    lay = FleetLayout(M, D)
+    assert lay.M_pad % D == 0
+    assert lay.M_pad >= M
+    assert lay.M_pad - M < D                     # at most D-1 padded rows
+    seen = set()
+    for cid in range(M):
+        s, r = lay.shard_of(cid), lay.local_row(cid)
+        assert 0 <= s < D
+        assert 0 <= r < lay.rows_per_shard
+        # block partition: the flat (shard, local) order IS cid order
+        assert s * lay.rows_per_shard + r == cid
+        seen.add((s, r))
+    assert len(seen) == M                        # injective
+
+
+# ---------------------------------------------------------------------------
+# Toy fleet fixtures
+# ---------------------------------------------------------------------------
+def _toy(M, n, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    w0 = jnp.asarray(rng.normal(size=n), dtype)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m for m in range(M)],
+                       adaptive=True, max_steps=3, seed=2)
+
+    def batch_fn(cid, steps, seed_):
+        r = np.random.default_rng((seed_ * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(steps, n)), dtype)
+
+    def step(flat, t):
+        return (flat.astype(jnp.float32)
+                - 0.25 * (flat.astype(jnp.float32) - t.astype(jnp.float32))
+                ).astype(dtype)
+
+    return w0, fleet, step, batch_fn
+
+
+# ---------------------------------------------------------------------------
+# Sharded plane == single-device plane (on the host's real devices)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sharded_plane_matches_base(dtype):
+    M, n = 6, 113
+    w0, fleet, step, batch_fn = _toy(M, n, dtype)
+    eng = AggEngine(w0, storage_dtype=dtype)
+    base = ClientPlane(eng, fleet, step, batch_fn)
+    sharded = ShardedClientPlane(eng, fleet, step, batch_fn)
+    kw = dict(algorithm="csmaafl", iterations=4 * M, tau_u=0.1, tau_d=0.1,
+              gamma=0.4)
+    r_base = run_afl(w0, fleet, None, client_plane=base, **kw)
+    r_shard = run_afl(w0, fleet, None, client_plane=sharded, **kw)
+    assert _maxdiff(r_shard.params, r_base.params) <= 1e-5
+    np.testing.assert_allclose(r_shard.betas, r_base.betas, atol=1e-6)
+    p_base, _ = run_fedavg(w0, fleet, None, client_plane=base, rounds=3,
+                           tau_u=0.1, tau_d=0.1)
+    p_shard, _ = run_fedavg(w0, fleet, None, client_plane=sharded, rounds=3,
+                            tau_u=0.1, tau_d=0.1)
+    assert _maxdiff(p_shard, p_base) <= 1e-5
+
+
+def test_window_cap_forces_flushes_without_changing_history():
+    M, n = 5, 67
+    w0, fleet, step, batch_fn = _toy(M, n)
+    eng = AggEngine(w0)
+    free = ShardedClientPlane(eng, fleet, step, batch_fn)
+    capped = ShardedClientPlane(eng, fleet, step, batch_fn, window_cap=2)
+    assert capped.window_cap == 2
+    kw = dict(algorithm="csmaafl", iterations=3 * M, tau_u=0.1, tau_d=0.1,
+              gamma=0.4)
+    r_free = run_afl(w0, fleet, None, client_plane=free, **kw)
+    r_capped = run_afl(w0, fleet, None, client_plane=capped, **kw)
+    assert _maxdiff(r_capped.params, r_free.params) <= 1e-5
+
+
+def test_sharded_train_row_updates_only_target_row():
+    M, n = 5, 43
+    w0, fleet, step, batch_fn = _toy(M, n)
+    plane = ShardedClientPlane(AggEngine(w0), fleet, step, batch_fn)
+    g = plane.flatten(w0)
+    buf = plane.init_fleet(g, seed=11)
+    assert buf.shape == (plane.layout.M_pad, plane.engine.n)
+    before = np.asarray(buf, np.float32)
+    buf2 = np.asarray(plane.train_row(buf, g, 2, 1, seed=12), np.float32)
+    for m in range(plane.layout.M_pad):
+        assert np.allclose(buf2[m], before[m]) == (m != 2)
+
+
+# ---------------------------------------------------------------------------
+# Shard-aware row blends == base-engine oracles
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sharded_buf():
+    M, n = 5, 301
+    w0, fleet, step, batch_fn = _toy(M, n, seed=4)
+    plane = ShardedClientPlane(AggEngine(w0), fleet, step, batch_fn)
+    g = plane.engine.flatten(w0)
+    buf = plane.init_fleet(g, seed=5)
+    return plane, w0, g, buf, np.asarray(buf, np.float32)
+
+
+def test_sharded_blend_row_matches_oracle(sharded_buf):
+    plane, w0, g, buf, host = sharded_buf
+    for cid in range(plane.M):
+        out = plane.engine.blend_row_flat(g, buf, cid, 0.7)
+        ref = agg.blend_pytree(w0, jnp.asarray(host[cid]), 0.7)
+        assert _maxdiff(out, ref) <= 1e-5
+
+
+def test_sharded_weighted_sum_pads_alpha(sharded_buf):
+    plane, w0, g, buf, host = sharded_buf
+    alpha = agg.sfl_alpha([60 + 20 * m for m in range(plane.M)])
+    out = plane.engine.weighted_sum_rows_flat(0.1, g, list(alpha), buf)
+    ref = agg.weighted_sum_pytrees(
+        0.1, w0, list(alpha), [jnp.asarray(host[m])
+                               for m in range(plane.M)])
+    assert _maxdiff(out, ref) <= 1e-5
+
+
+def test_sharded_delta_row_matches_oracle(sharded_buf):
+    plane, w0, g, buf, host = sharded_buf
+    pg = plane.engine.delta_row_flat(g, buf, 3, 0.4)
+    ref = 0.4 * (np.asarray(g, np.float32) - host[3])
+    np.testing.assert_allclose(np.asarray(pg), ref, atol=1e-5)
+
+
+def test_sharded_blend_rows_fleet_matches_sequential(sharded_buf):
+    plane, w0, g, buf, host = sharded_buf
+    cids, betas = [0, 2, 4], [0.9, 0.6, 0.8]   # non-pow2 K: bucketing
+    out = plane.engine.blend_rows_fleet(g, buf, cids, betas)
+    ref = w0
+    for cid, b in zip(cids, betas):
+        ref = agg.blend_pytree(ref, jnp.asarray(host[cid]), b)
+    assert _maxdiff(out, ref) <= 1e-5
+
+
+def test_sharded_engine_delegates_to_base(sharded_buf):
+    plane = sharded_buf[0]
+    eng = plane.engine
+    assert isinstance(eng, ShardedRowEngine)
+    assert eng.n == eng.base.n
+    assert eng.mode == eng.base.mode
+    # replicated-rows trunk (the async runtime's upload path) is the
+    # base engine's program, untouched by sharding
+    assert eng.blend_rows_flat.__self__ is eng.base
+
+
+def test_sharded_kernel_mode_interpret():
+    """Kernel-mode sharded blends (Pallas MAC per shard) match the jnp
+    oracle through the interpreter, so the TPU path runs in tier-1."""
+    n, M = 300, 4
+    w0, fleet, step, batch_fn = _toy(M, n, seed=6)
+    eng_k = AggEngine(w0, interpret=True)          # mode="kernel"
+    assert eng_k.mode == "kernel"
+    mesh = make_fleet_mesh()
+    lay = FleetLayout(M, mesh.shape["fleet"])
+    pad = lay.M_pad - M
+    rows = np.random.default_rng(7).normal(size=(M, eng_k.n)) \
+        .astype(np.float32)
+    buf = jnp.asarray(np.concatenate([rows, np.zeros((pad, eng_k.n),
+                                                     np.float32)]))
+    sharded = ShardedRowEngine(eng_k, mesh, lay)
+    g = eng_k.flatten(w0)
+    out = sharded.blend_row_flat(g, buf, 2, 0.6)
+    ref = agg.blend_pytree(w0, jnp.asarray(rows[2]), 0.6)
+    assert _maxdiff(out, ref) <= 1e-5
+    alpha = agg.sfl_alpha([60, 80, 100, 120])
+    out = sharded.weighted_sum_rows_flat(0.0, g, list(alpha), buf)
+    ref = agg.weighted_sum_pytrees(0.0, w0, list(alpha),
+                                   [jnp.asarray(r) for r in rows])
+    assert _maxdiff(out, ref) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# 8 simulated devices: the acceptance-criteria configuration
+# ---------------------------------------------------------------------------
+def test_sharded_plane_8dev_subprocess():
+    """M=64 CNN f32 + bf16 toy + ragged-M parity on 8 SIMULATED CPU
+    devices (``--xla_force_host_platform_device_count=8``), run in a
+    subprocess because the device count locks at jax init.  This is the
+    ISSUE's acceptance configuration; CI re-runs it with --smoke-M 1000."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    env.pop("XLA_FLAGS", None)                   # fleet_check sets it
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fleet_check",
+         "--devices", "8", "--M", "64", "--iterations", "48"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["devices"] == 8
+    assert report["afl_f32_parity"] <= 1e-5
+    assert report["afl_bf16_parity"] <= 1e-5
+    assert report["fedavg_f32_parity"] <= 1e-5
+    assert report["addressing_max_diff"] <= 1e-5
+    assert report["M_pad"] > report["ragged_M"]  # padding really exercised

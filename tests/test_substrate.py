@@ -8,7 +8,7 @@ import pytest
 
 from repro.checkpoint import ckpt
 from repro.configs import get_config
-from repro.configs.base import MeshConfig, SINGLE_POD_MESH
+from repro.configs.base import SINGLE_POD_MESH
 from repro.models import transformer as tmod
 from repro.optim import optimizers as opt
 from repro.sharding import specs as sspec
