@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test lint format-check bench bench-agg bench-client \
-	bench-sharded bench-gate
+	bench-sharded bench-compiled bench-gate
 
 test:
 	python -m pytest -x -q
@@ -34,6 +34,11 @@ bench-client:
 bench-sharded:
 	python -m benchmarks.run --only sharded_plane
 
+# the compiled-loop bench (whole-run event-trace compiler vs the
+# per-window fleet plane loop, DESIGN.md §7)
+bench-compiled:
+	python -m benchmarks.run --only compiled_loop
+
 # all gated benches; fail on >1.3x slowdown vs benchmarks/baseline_*.json
 # (or below the acceptance floors / parity >1e-5 — see
 # benchmarks/check_regression.py; baselines are keyed by hostname, so an
@@ -41,4 +46,5 @@ bench-sharded:
 # experiments/bench/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane --gate --seed 0
+		--only aggregation,client_plane,sharded_plane,compiled_loop \
+		--gate --seed 0

@@ -1,0 +1,114 @@
+"""Compiled-loop benchmark: end-to-end ``run_afl`` events/s with the
+whole-run event-trace compiler (docs/DESIGN.md §7) vs the per-window
+fleet-plane loop (§4), at M=64 clients.
+
+window   — the PR-2/3 loop: the scheduler generator walks on the host,
+           every event dispatches a row-blend launch, every
+           uploader-repeat flushes a vmapped retrain window; O(E +
+           windows) jitted dispatches + the per-event Python (coefficient
+           math, queueing, staging) interleaved with device work.
+compiled — the scheduler timeline and all β_j precomputed once on the
+           host, batches staged once, and the WHOLE run executed as
+           O(#buckets) donated ``lax.scan`` launches; the only per-event
+           cost left is the scan step itself.
+
+The model is the paper-CNN geometry at CPU-budget width with K=1 local
+iteration × 2 minibatches per event — deliberately at the dispatch-bound
+end of the spectrum, because *that* is what the compiler deletes: the
+per-event host hop.  (The windowed loop's remaining per-event cost here
+is ~Python + jit-call dispatch; at K·B=32 per event both loops are
+conv-compute-bound on this 2-core container and the ratio approaches 1
+— same regime argument as bench_client_plane.py, see DESIGN.md §5.)  On
+dispatch-bound accelerator hosts every AFL configuration sits in this
+regime, and the acceptance floor (≥1.3x on the recorded host, per the
+PR-2/3 host-keyed convention) should be re-recorded there along with
+the baseline.
+
+Also records compiled/window parity on the final params (gated ≤1e-5 by
+``benchmarks/check_regression.py``) and the compiled run's launch count
+(context — the "one scan, not one hop per window" signal).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, emit, save_result
+
+M = 64
+K = 1                      # local iterations per upload
+LOCAL_BATCHES = 2          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 256           # upload events per timed run
+
+
+def _run(fleet, p0, plane, compiled: bool):
+    from repro.core.afl import run_afl
+    return run_afl(p0, fleet, None, algorithm="csmaafl",
+                   iterations=ITERATIONS, tau_u=0.1, tau_d=0.1, gamma=0.4,
+                   client_plane=plane, compiled_loop=compiled)
+
+
+def bench_compiled_loop() -> None:
+    import jax
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    seed = bench_seed()
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE,
+                   local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=seed)
+    p0 = task.init_params()
+    plane = task.client_plane(fleet)
+
+    def timed(compiled):
+        # warmup run compiles every program variant, then one timed run
+        # (an end-to-end run IS the median of ITERATIONS events)
+        r = _run(fleet, p0, plane, compiled)
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        t0 = time.perf_counter()
+        r = _run(fleet, p0, plane, compiled)
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        return time.perf_counter() - t0, r
+
+    t_win, r_win = timed(False)
+    t_cmp, r_cmp = timed(True)
+    ev_win = ITERATIONS / t_win
+    ev_cmp = ITERATIONS / t_cmp
+    speedup = t_win / t_cmp
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_cmp.params),
+                                 jax.tree.leaves(r_win.params)))
+    emit("compiled_loop.run_afl.per_window", t_win * 1e6 / ITERATIONS,
+         f"{ev_win:.1f} events/s (host hop per event/window)")
+    emit("compiled_loop.run_afl.compiled", t_cmp * 1e6 / ITERATIONS,
+         f"{ev_cmp:.1f} events/s; {speedup:.1f}x vs per-window; "
+         f"{r_cmp.stats['launches']} launches; parity {parity:.2e}")
+    save_result("compiled_loop", {
+        "model": "paper_cnn_cpu_budget", "M": M, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS, "seed": seed,
+        "mode": plane.engine.mode,
+        "window_s": t_win, "compiled_s": t_cmp,
+        "events_per_s_window": ev_win, "events_per_s_compiled": ev_cmp,
+        "compiled_launches": r_cmp.stats["launches"],
+        "compiled_variants": r_cmp.stats["variants"],
+        "speedup": speedup, "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    bench_compiled_loop()
+
+
+if __name__ == "__main__":
+    main()

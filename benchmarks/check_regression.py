@@ -1,5 +1,5 @@
 """Bench regression gates (aggregation engine + client plane + sharded
-plane) — CI-friendly.
+plane + compiled event loop) — CI-friendly.
 
 Compares the latest results under ``experiments/bench/`` (written by
 ``benchmarks/bench_aggregation.py`` / ``bench_client_plane.py`` /
@@ -35,7 +35,7 @@ Every run also writes a machine-readable ``gate_report.json`` (default
 per-gate speedup, floor, parity, and pass/fail status.
 
 Usage:  python -m benchmarks.check_regression [--threshold 1.3]
-            [--which aggregation,client_plane,sharded_plane]
+            [--which aggregation,client_plane,sharded_plane,compiled_loop]
             [--report path/to/gate_report.json]
         python -m benchmarks.run --only aggregation,client_plane --gate
 """
@@ -97,6 +97,26 @@ GATES = {
         "parity_key": "parity_max_abs_diff",
         "parity_bound": 1e-5,
         "rerun_hint": "python -m benchmarks.run --only sharded_plane",
+    },
+    "compiled_loop": {
+        "baseline": os.path.join(HERE, "baseline_compiled_loop.json"),
+        "latest": os.path.join(LATEST_DIR, "compiled_loop.json"),
+        "config_keys": ("mode", "model", "M", "K", "local_batches",
+                        "iterations", "seed"),
+        "context_keys": ("window_s", "compiled_s",
+                         "events_per_s_compiled", "compiled_launches"),
+        # whole-run event-trace compiler vs the per-window plane loop
+        # (DESIGN.md §7) at the dispatch-light K·B=2 configuration; this
+        # 2-core container measures ~1.6x (the scan still pays XLA:CPU's
+        # while-loop path on the conv body), so the floor sits at the
+        # ISSUE's 1.3x acceptance bound — the "compiled loop degenerated
+        # to per-event dispatch / started recompiling per segment"
+        # signal.  On dispatch-bound accelerator hosts the same
+        # mechanism is worth far more; re-record baseline + floor there.
+        "floor": 1.3,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "rerun_hint": "python -m benchmarks.run --only compiled_loop",
     },
 }
 
@@ -209,7 +229,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=THRESHOLD)
     ap.add_argument("--which",
-                    default="aggregation,client_plane,sharded_plane",
+                    default=",".join(GATES),
                     help="comma list of gates: " + ",".join(GATES))
     ap.add_argument("--report", default=DEFAULT_REPORT,
                     help="machine-readable per-gate report path "

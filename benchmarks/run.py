@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   sharded_plane  fleet-mesh-sharded plane vs single-device plane at M=64
                  on 8 simulated devices (docs/DESIGN.md §6; re-execs
                  itself into a child process to set the device count)
+  compiled_loop  whole-run event-trace compiler vs the per-window fleet
+                 plane loop at M=64 (docs/DESIGN.md §7)
   roofline       §Roofline table from the dry-run records
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
@@ -37,12 +39,13 @@ import os
 import sys
 import traceback
 
-GATED = ("aggregation", "client_plane", "sharded_plane")
+GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
     "client_plane": "client_plane.json",
     "sharded_plane": "sharded_plane.json",
+    "compiled_loop": "compiled_loop.json",
 }
 
 
@@ -50,7 +53,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
-                         "aggregation,client_plane,sharded_plane,roofline")
+                         "aggregation,client_plane,sharded_plane,"
+                         "compiled_loop,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -68,7 +72,7 @@ def main(argv=None) -> int:
         os.environ["REPRO_BENCH_SEED"] = str(args.seed)
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
-              "kernels", "convergence", "roofline"])
+              "compiled_loop", "kernels", "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
@@ -92,6 +96,9 @@ def main(argv=None) -> int:
                 b.main()
             elif name == "sharded_plane":
                 from benchmarks import bench_sharded_plane as b
+                b.main()
+            elif name == "compiled_loop":
+                from benchmarks import bench_compiled_loop as b
                 b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b

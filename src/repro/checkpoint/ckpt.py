@@ -94,3 +94,73 @@ def load(path: str, template: Any, *, shardings: Any = None) -> Any:
 def load_metadata(path: str) -> Dict[str, Any]:
     with open(path + ".meta.json") as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# AFL run state (the flat-buffer engine's device state + trace cursor)
+# ---------------------------------------------------------------------------
+def save_afl_state(path: str, state: Dict[str, Any], *, step: int = 0,
+                   metadata: Optional[Dict[str, Any]] = None) -> None:
+    """Persist a plane run's raw device state — ``{"fleet_buf" (M, n),
+    "g_flat" (n,), "opt_state" <pytree>, "cursor" <int>}`` (an
+    ``AFLResult.state``) — so a compiled run can resume mid-timeline:
+    the trace is recompiled deterministically from (fleet, seed) and
+    execution restarts at ``cursor`` (docs/DESIGN.md §7)."""
+    payload = {"fleet_buf": state["fleet_buf"], "g_flat": state["g_flat"],
+               "opt_state": state.get("opt_state", ()),
+               "cursor": np.int64(state["cursor"])}
+    meta = dict(metadata or {})
+    # the opt-state STRUCTURE is needed to unflatten at load time; AFL
+    # opt states are dicts of flat arrays + scalars, so a path list plus
+    # the tuple/list markers _flatten already emits reconstructs it
+    save(path, payload, step=step, metadata=meta)
+
+
+def load_afl_state(path: str) -> Dict[str, Any]:
+    """Restore :func:`save_afl_state` output.  The opt-state structure is
+    rebuilt from the stored path map (dicts/lists/tuples of arrays — the
+    shapes ``repro.optim.optimizers`` produce on flat buffers)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+
+    def decode(e):
+        return np.frombuffer(e["data"],
+                             dtype=np.dtype(e["dtype"])).reshape(e["shape"])
+
+    # rebuild the nested structure from the '/'-separated path keys and
+    # the __type__/__len__ markers _flatten wrote
+    root: Dict[str, Any] = {}
+    types: Dict[str, str] = {}
+    lens: Dict[str, int] = {}
+    for k, v in payload.items():
+        if k.endswith("__type__"):
+            types[k[:-len("__type__")]] = v
+            continue
+        if k.endswith("__len__"):
+            lens[k[:-len("__len__")]] = v
+            continue
+        parts = k.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v if isinstance(v, (str, int)) else decode(v)
+
+    def materialize(node, prefix=""):
+        if not isinstance(node, dict):
+            return node
+        t = types.get(prefix)
+        if t in ("list", "tuple"):
+            seq = [materialize(node[str(i)], f"{prefix}{i}/")
+                   for i in range(lens[prefix])]
+            return tuple(seq) if t == "tuple" else seq
+        return {k: materialize(v, f"{prefix}{k}/")
+                for k, v in node.items()}
+
+    state = materialize(root)
+    out = {
+        "fleet_buf": jnp.asarray(state["fleet_buf"]),
+        "g_flat": jnp.asarray(state["g_flat"]),
+        "opt_state": jax.tree.map(jnp.asarray, state.get("opt_state", ())),
+        "cursor": int(np.asarray(state["cursor"])),
+    }
+    return out

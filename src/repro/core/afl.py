@@ -34,6 +34,13 @@ class AFLResult:
     history: FLHistory
     events: List[UploadEvent]
     betas: List[float]
+    # plane runs also return the raw device state so a checkpoint can
+    # round-trip the run mid-timeline (checkpoint/ckpt.save_afl_state):
+    # {"fleet_buf", "g_flat", "opt_state", "cursor"} — cursor is the
+    # number of trace events consumed (the resume point)
+    state: Optional[Dict[str, Any]] = None
+    # compiled-loop instrumentation: {"launches", "segments", "variants"}
+    stats: Optional[Dict[str, int]] = None
 
 
 def run_afl(params0, fleet: Sequence[ClientSpec],
@@ -46,6 +53,8 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             max_staleness: Optional[int] = None,
             use_engine: bool = True,
             client_plane=None, use_client_plane: bool = True,
+            compiled_loop: bool = False,
+            resume_state: Optional[Dict[str, Any]] = None,
             seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
 
@@ -77,6 +86,16 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     global model (so it resynchronizes), but its update is not blended.
     eq. (11) already down-weights stale updates smoothly; the hard bound
     guards against pathological stragglers.
+
+    ``compiled_loop=True`` (requires a client plane) lowers the WHOLE run
+    through the event-trace compiler (``core.event_trace``, DESIGN.md
+    §7): the scheduler timeline and every β_j are precomputed on the
+    host, and the event loop executes as O(#buckets) jitted,
+    buffer-donated ``lax.scan`` launches instead of a host hop per
+    window — same history/params as the Python loop ≤1e-5.
+    ``resume_state`` (a prior result's ``.state`` or
+    ``ckpt.load_afl_state``) restarts a compiled run mid-timeline from
+    its trace cursor.
     """
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
@@ -88,6 +107,18 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     if server_opt is not None:
         from repro.optim import optimizers as _opt
         s_init, s_update = _opt.get_optimizer(server_opt)
+
+    if compiled_loop or resume_state is not None:
+        if plane is None:
+            raise ValueError("compiled_loop requires a client plane")
+        return _run_compiled(params0, fleet, plane, algorithm=algorithm,
+                             iterations=iterations, tau_u=tau_u,
+                             tau_d=tau_d, gamma=gamma,
+                             mu_momentum=mu_momentum, eval_fn=eval_fn,
+                             eval_every=eval_every, server_opt=server_opt,
+                             server_lr=server_lr, s_init=s_init,
+                             max_staleness=max_staleness,
+                             resume_state=resume_state, seed=seed)
 
     if algorithm == "afl_baseline":
         sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
@@ -250,4 +281,55 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             hist.add(ev.t_complete, ev.j, eval_fn(cur_params()))
     if plane is not None:
         flush_pending()       # leave the fleet buffer fully retrained
-    return AFLResult(cur_params(), hist, events, betas)
+    state = None
+    if plane is not None:
+        state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
+                 "opt_state": opt_state if opt_state is not None else (),
+                 "cursor": len(events)}
+    return AFLResult(cur_params(), hist, events, betas, state)
+
+
+def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
+                  tau_d, gamma, mu_momentum, eval_fn, eval_every,
+                  server_opt, server_lr, s_init, max_staleness,
+                  resume_state, seed) -> AFLResult:
+    """The ``compiled_loop=True`` body: compile the whole timeline once,
+    then execute it as bucket-grouped donated scan segments
+    (``core.event_trace``, DESIGN.md §7)."""
+    from repro.core import event_trace as _et
+
+    trace = _et.compile_afl_trace(
+        fleet, algorithm=algorithm, iterations=iterations, tau_u=tau_u,
+        tau_d=tau_d, gamma=gamma, mu_momentum=mu_momentum,
+        max_staleness=max_staleness, seed=seed)
+    runner = _et.CompiledLoopRunner(plane, server_opt=server_opt,
+                                    server_lr=server_lr)
+    engine = plane.engine
+    hist = FLHistory()
+    if resume_state is None:
+        g_flat = engine.flatten(params0)
+        opt_state = s_init(g_flat) if server_opt is not None else ()
+        # every client trains on the initial broadcast w_0 — ONE launch
+        fleet_buf = plane.init_fleet(g_flat, seed * 100003)
+        runner.count_launch()
+        start = 0
+        if eval_fn is not None:
+            hist.add(0.0, 0, eval_fn(params0))
+    else:
+        g_flat = resume_state["g_flat"]
+        fleet_buf = resume_state["fleet_buf"]
+        opt_state = resume_state.get("opt_state", ())
+        start = int(resume_state["cursor"])
+        if start > len(trace):
+            raise ValueError(
+                f"resume cursor {start} beyond the {len(trace)}-event "
+                "trace — was the run compiled with fewer iterations?")
+    fleet_buf, g_flat, opt_state = runner.run(
+        trace, fleet_buf, g_flat, opt_state, start=start,
+        eval_fn=eval_fn, eval_every=eval_every, hist=hist)
+    state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
+             "opt_state": opt_state, "cursor": len(trace)}
+    stats = {"launches": runner.launches, "segments": runner.segments,
+             "variants": runner.variants()}
+    return AFLResult(engine.unflatten(g_flat), hist, trace.events[start:],
+                     [float(b) for b in trace.betas[start:]], state, stats)

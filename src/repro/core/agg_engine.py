@@ -176,19 +176,32 @@ class AggEngine:
                                       axes=(0, 0))
             return acc.astype(self.storage_dtype)
 
+        def blend_row_expr(g_flat, row, coefs):
+            """TRACEABLE single-row eq. (3): ``row`` is the already-sliced
+            (n,) client row.  This is the donation-safe form — it owns no
+            jit boundary, so when inlined into a larger donated program
+            (the §7 event-trace scan carries (fleet_buf, g_flat) through
+            ``lax.scan`` with ``donate_argnums``) the blend reuses the
+            caller's buffers instead of allocating per event."""
+            if self.mode == "kernel":
+                return kern(g_flat, row[None], coefs)
+            acc = (coefs[0] * g_flat.astype(jnp.float32)
+                   + coefs[1] * row.astype(jnp.float32))
+            return acc.astype(self.storage_dtype)
+
+        def delta_row_expr(g_flat, row, scale):
+            """Traceable FedOpt pseudo-gradient scale·(w − row), (n,) f32."""
+            return scale * (g_flat.astype(jnp.float32)
+                            - row.astype(jnp.float32))
+
         def blend_row(g_flat, fleet_buf, cid, coefs):
             """eq. (3) against row ``cid`` of the (M, n) fleet buffer."""
             row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)
-            if self.mode == "kernel":
-                return kern(g_flat, row, coefs)
-            acc = (coefs[0] * g_flat.astype(jnp.float32)
-                   + coefs[1] * row[0].astype(jnp.float32))
-            return acc.astype(self.storage_dtype)
+            return blend_row_expr(g_flat, row[0], coefs)
 
         def delta_row(g_flat, fleet_buf, cid, scale):
             row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)[0]
-            return scale * (g_flat.astype(jnp.float32)
-                            - row.astype(jnp.float32))
+            return delta_row_expr(g_flat, row, scale)
 
         def delta_one(g_flat, client_tree, scale):
             return scale * (g_flat.astype(jnp.float32)
@@ -196,6 +209,8 @@ class AggEngine:
 
         self._flatten_expr = flatten_expr
         self._unflatten_expr = unflatten_expr
+        self.blend_row_expr = blend_row_expr
+        self.delta_row_expr = delta_row_expr
         self._flatten = jax.jit(flatten_expr)
         self._unflatten = jax.jit(unflatten_expr)
         dn = (0,) if donate else ()

@@ -95,6 +95,29 @@ class ClientPlane:
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.bucket = bucket
+        # per-client batch sizes (ClientSpec.batch_size): the SAMPLE axis
+        # (axis 1 of every staged leaf) pads to one fleet-wide pow2
+        # bucket with a sample-valid mask, so heterogeneous B_m share a
+        # single compiled program; step_fn then receives
+        # {"batch": ..., "sample_valid": (B_pad,) bool} per scan step
+        declared = [getattr(c, "batch_size", None) for c in self.fleet]
+        if any(b is not None for b in declared):
+            if any(b is None for b in declared):
+                raise ValueError(
+                    "per-client batch sizes must be declared on every "
+                    "client or none (ClientSpec.batch_size)")
+            if not getattr(step_fn, "supports_sample_mask", False):
+                # fail at plane-build time with a clear message, not at
+                # trace time inside jit when step_fn indexes the staged
+                # {"batch", "sample_valid"} dict it doesn't expect
+                raise ValueError(
+                    "fleet declares per-client batch sizes but step_fn "
+                    "does not set supports_sample_mask=True — it must "
+                    "consume {'batch', 'sample_valid'} staged trees and "
+                    "mask its per-sample loss (see CNNTask.client_plane)")
+            self.sample_pad: Optional[int] = pow2_bucket(max(declared))
+        else:
+            self.sample_pad = None
         # cap on the AFL event-window length before a forced retrain
         # flush (None = only flush on uploader repeat); large fleets set
         # this to bound the pending g-snapshot memory (one (n,) buffer
@@ -148,9 +171,44 @@ class ClientPlane:
             raise ValueError("a training round needs at least one batch")
         return pow2_bucket(nb) if self.bucket else nb
 
+    def _staged_batches(self, cid: int, num_steps: int, seed: int):
+        """``batch_fn`` + the per-client sample-axis padding policy.
+
+        With heterogeneous ``ClientSpec.batch_size`` declared, every
+        leaf's sample axis (axis 1) zero-pads to the fleet-wide pow2
+        bucket and the staged tree becomes ``{"batch": <padded tree>,
+        "sample_valid": (S, B_pad) bool}`` — the scan then feeds
+        ``step_fn`` one ``{"batch": ..., "sample_valid": ...}`` slice per
+        step, and the task masks its per-sample loss accordingly
+        (docs/DESIGN.md §4).  Without declarations this is ``batch_fn``
+        verbatim, so uniform fleets (and the toy parity tasks whose axis
+        1 is a feature dim) are untouched."""
+        b = self.batch_fn(cid, num_steps, seed)
+        if self.sample_pad is None:
+            return b
+        B = self.fleet[cid].batch_size
+        leaves = jax.tree.leaves(b)
+        if any(x.shape[1] != B for x in leaves):
+            raise ValueError(
+                f"client {cid} staged batches carry sample axis "
+                f"{leaves[0].shape[1]} != declared batch_size {B}")
+        pad = self.sample_pad - B
+
+        def padx(x):
+            x = np.asarray(x)
+            if pad <= 0:
+                return x
+            widths = [(0, 0)] * x.ndim
+            widths[1] = (0, pad)
+            return np.pad(x, widths)
+
+        mask = np.zeros((leaves[0].shape[0], self.sample_pad), bool)
+        mask[:, :B] = True
+        return {"batch": jax.tree.map(padx, b), "sample_valid": mask}
+
     def _stage_one(self, cid: int, num_steps: int, seed: int,
                    bucket: Optional[int] = None):
-        batches = self.batch_fn(cid, num_steps, seed)
+        batches = self._staged_batches(cid, num_steps, seed)
         nb = _num_batches(batches)
         bucket = self._bucketed(nb) if bucket is None else bucket
         valid = np.arange(bucket) < nb
@@ -170,7 +228,7 @@ class ClientPlane:
         nbs = []
         for c in self.fleet:
             k = local_steps_override or c.local_steps
-            b = self.batch_fn(c.cid, k, seed)
+            b = self._staged_batches(c.cid, k, seed)
             staged.append(b)
             nbs.append(_num_batches(b))
         bucket = self._bucketed(max(nbs))
@@ -218,7 +276,8 @@ class ClientPlane:
         cids = [e[0] for e in entries]
         if len(set(cids)) != len(cids):
             raise ValueError("event-window entries must have distinct cids")
-        staged = [self.batch_fn(cid, k, seed) for cid, _, k, seed in entries]
+        staged = [self._staged_batches(cid, k, seed)
+                  for cid, _, k, seed in entries]
         nbs = [_num_batches(b) for b in staged]
         nb_bucket = self._bucketed(max(nbs))
         W = len(entries)
@@ -404,7 +463,8 @@ class ShardedClientPlane(ClientPlane):
         per_shard: list = [[] for _ in range(D)]
         for e in entries:
             per_shard[self.layout.shard_of(e[0])].append(e)
-        staged = {e[0]: self.batch_fn(e[0], e[2], e[3]) for e in entries}
+        staged = {e[0]: self._staged_batches(e[0], e[2], e[3])
+                  for e in entries}
         nbs = {cid: _num_batches(b) for cid, b in staged.items()}
         nb_bucket = self._bucketed(max(nbs.values()))
         W = max(len(p) for p in per_shard)

@@ -1,0 +1,498 @@
+"""Whole-run event-trace compiler — the AFL event loop as ONE device program.
+
+PRs 1-3 fused the blends (``agg_engine``), the local SGD
+(``client_plane``) and sharded the fleet, but the AFL *event loop* itself
+stayed host-driven: ``run_afl`` walks the scheduler generator one window
+at a time, paying a host→device round trip per window (and per-event jit
+dispatch for the blends).  On dispatch-bound accelerator hosts that hop
+is the dominant cost of the simulation — and it is entirely avoidable,
+because the scheduler is a *pure function* of (fleet, tau_u, tau_d): no
+randomness, no feedback from the learning state.  docs/DESIGN.md §7.
+
+This module therefore splits the run into a host-side COMPILE step and a
+device-side EXECUTE step:
+
+* ``compile_afl_trace`` runs the scheduler ONCE on the host and lowers
+  the full timeline into dense per-event arrays — uploader cid,
+  staleness, the §III coefficient β_j (the staleness tracker is a cheap
+  scalar recurrence, replayed exactly), retrain step counts, retrain
+  seeds, window/broadcast boundaries.  The trace is plain NumPy: pure
+  control plane, no device state.
+* ``group_segments`` buckets the per-event scan lengths (pow2, shared
+  policy with ``agg_engine.pow2_bucket``) and groups the trace into
+  contiguous same-bucket segments, merging runs shorter than ``min_run``
+  upward into their larger-bucket neighbor.  Heavily interleaved bucket
+  sequences collapse toward ONE max-bucket segment; long homogeneous
+  phases keep their own tighter program.  Event order is never permuted.
+* ``CompiledLoopRunner`` executes each segment as ONE jitted,
+  buffer-donated ``lax.scan`` over the trace slice: every scan step
+  ``dynamic_slice``s the uploader's row, applies the eq. (3) blend (or
+  the FedOpt pseudo-gradient + server optimizer) to the carried global
+  flat buffer, retrains the row with the client plane's scanned local
+  SGD, and scatters it back — carrying ``(fleet_buf, g_flat, opt_state)``
+  with ``donate_argnums=(0, 1)`` so on TPU/GPU no buffer copy survives
+  between events.  A whole ≥300-event run is O(#buckets) launches
+  instead of O(#windows) (asserted by tests via the runner's
+  launch/trace instrumentation, not timing).
+
+The sharded fleet plane rides the same trace: the segment program is
+wrapped in ``shard_map_compat`` over the plane's ``fleet`` mesh — the
+owning shard contributes the uploader's row through a one-row psum and
+masks the row write-back, exactly like the per-event
+``ShardedRowEngine`` blends, so the compiled run matches the
+single-device plane ≤1e-5 at M=64 (tests/test_event_trace.py).
+
+``run_afl(..., compiled_loop=True)`` / ``launch/train.py --loop
+compiled`` are the entry points; eval points and the baseline's every-M
+broadcast split the run into chunks (one extra launch per boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.agg_engine import pow2_bucket
+from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
+                                  ClientSpec, UploadEvent)
+from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat2d
+
+
+# ---------------------------------------------------------------------------
+# Host-side trace compilation (pure control plane)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EventTrace:
+    """Dense device-ready view of one whole AFL run's timeline.
+
+    All arrays have length E = number of upload events.  ``betas`` holds
+    the per-event β_j EXACTLY as ``run_afl`` would compute it (staleness
+    tracker replayed, ``max_staleness`` drops already applied as β=1);
+    ``seeds`` is the per-event retrain seed (the broadcast retrain of the
+    baseline algorithm uses the same ``seed·100003 + j`` formula, so
+    ``seeds[i]`` serves both).  ``s_buckets`` (pow2 bucket id of each
+    event's staged batch count) is filled in by the runner's staging pass
+    — it depends on the task's ``batch_fn``, not on the schedule.
+    """
+    events: List[UploadEvent]
+    cids: np.ndarray            # (E,) int32  uploader per event
+    js: np.ndarray              # (E,) int32  global iteration (1-based)
+    staleness: np.ndarray       # (E,) int32
+    betas: np.ndarray           # (E,) float64  β_j per event
+    local_steps: np.ndarray     # (E,) int32  retrain K per event
+    seeds: np.ndarray           # (E,) int64  retrain seed per event
+    t_complete: np.ndarray      # (E,) float64  virtual aggregation time
+    broadcast: np.ndarray       # (E,) bool  baseline every-M broadcast AFTER
+    algorithm: str
+    M: int
+    base_seed: int
+    s_buckets: Optional[np.ndarray] = None   # (E,) int32, runner-filled
+
+    def __len__(self) -> int:
+        return len(self.cids)
+
+    @property
+    def per_event_retrain(self) -> bool:
+        """eq. (4): only the uploader retrains — except the §III-B
+        baseline, where clients keep the cycle-start model and the fleet
+        retrains wholesale at the every-M broadcast."""
+        return self.algorithm != "afl_baseline"
+
+
+def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
+                      iterations: int, tau_u: float, tau_d: float,
+                      gamma: float = 0.4, mu_momentum: float = 0.9,
+                      max_staleness: Optional[int] = None,
+                      seed: int = 0) -> EventTrace:
+    """Run the scheduler once on the host and precompute every scalar the
+    event loop would: the timeline, the §III coefficients, the retrain
+    seeds.  Mirrors ``run_afl``'s coefficient logic exactly (same float
+    ops in the same order), so trace replay is bit-consistent with the
+    Python loop up to data-plane rounding."""
+    M = len(fleet)
+    alpha = agg.sfl_alpha([c.num_samples for c in fleet])
+    if algorithm == "afl_baseline":
+        sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
+        cycle_betas = agg.solve_betas(alpha, sched.cycle_order())
+    elif algorithm in ("afl_alpha", "csmaafl"):
+        sched = AFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
+    else:
+        raise ValueError(f"unknown AFL algorithm '{algorithm}'")
+    tracker = agg.StalenessTracker(momentum=mu_momentum)
+    events = sched.trace(iterations)
+    betas, bcast = [], []
+    for ev in events:
+        if algorithm == "afl_alpha":
+            one_minus_beta = float(alpha[ev.cid])
+        elif algorithm == "afl_baseline":
+            one_minus_beta = 1.0 - float(cycle_betas[(ev.j - 1) % M])
+        else:   # csmaafl, eq. (11) — tracker updated on EVERY event,
+            # dropped or not, exactly as the Python loop does
+            mu = tracker.update(ev.staleness)
+            one_minus_beta = agg.staleness_coefficient(ev.j, ev.i, mu, gamma)
+        if max_staleness is not None and ev.staleness > max_staleness:
+            one_minus_beta = 0.0
+        betas.append(1.0 - one_minus_beta)
+        bcast.append(algorithm == "afl_baseline" and ev.j % M == 0)
+    js = np.asarray([ev.j for ev in events], np.int32)
+    return EventTrace(
+        events=events,
+        cids=np.asarray([ev.cid for ev in events], np.int32),
+        js=js,
+        staleness=np.asarray([ev.staleness for ev in events], np.int32),
+        betas=np.asarray(betas, np.float64),
+        local_steps=np.asarray([ev.local_steps for ev in events], np.int32),
+        seeds=seed * 100003 + js.astype(np.int64),
+        t_complete=np.asarray([ev.t_complete for ev in events], np.float64),
+        broadcast=np.asarray(bcast, bool),
+        algorithm=algorithm, M=M, base_seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Bucket grouping (order-preserving)
+# ---------------------------------------------------------------------------
+def group_segments(buckets: Sequence[int], *, min_run: int = 16
+                   ) -> List[Tuple[int, int, int]]:
+    """Group per-event scan-length buckets into contiguous
+    ``(start, stop, bucket)`` segments.
+
+    Maximal equal-bucket runs shorter than ``min_run`` are merged into
+    the neighboring run with the LARGER bucket (shorter events pad up
+    under their valid-masks — merges never truncate), then adjacent
+    equal-bucket runs coalesce.  This bounds the launch count: a heavily
+    interleaved bucket sequence collapses toward one max-bucket segment,
+    while long homogeneous phases keep their own tighter program.  The
+    segments concatenate to ``[0, len(buckets))`` in order — event order
+    is never permuted.
+    """
+    buckets = [int(b) for b in buckets]
+    if not buckets:
+        return []
+    runs: List[List[int]] = []
+    s = 0
+    for i in range(1, len(buckets) + 1):
+        if i == len(buckets) or buckets[i] != buckets[s]:
+            runs.append([s, i, buckets[s]])
+            s = i
+    changed = True
+    while changed and len(runs) > 1:
+        changed = False
+        for idx, run in enumerate(runs):
+            if run[1] - run[0] >= min_run:
+                continue
+            nbrs = [j for j in (idx - 1, idx + 1) if 0 <= j < len(runs)]
+            j = max(nbrs, key=lambda k: runs[k][2])
+            lo, hi = sorted((idx, j))
+            runs[lo] = [runs[lo][0], runs[hi][1],
+                        max(runs[lo][2], runs[hi][2])]
+            del runs[hi]
+            changed = True
+            break
+    out = [runs[0]]
+    for r in runs[1:]:
+        if r[2] == out[-1][2]:
+            out[-1] = [out[-1][0], r[1], r[2]]
+        else:
+            out.append(r)
+    return [(r[0], r[1], r[2]) for r in out]
+
+
+# ---------------------------------------------------------------------------
+# Device-side execution: segments as donated lax.scan programs
+# ---------------------------------------------------------------------------
+class CompiledLoopRunner:
+    """Execute a compiled :class:`EventTrace` against a client plane.
+
+    One instance owns the jitted segment programs (cached per batch-tree
+    structure; per-shape retraces are counted by ``variants()``) and the
+    launch instrumentation the tests assert on:
+
+    * ``launches``  — number of jitted program invocations performed
+      (segments + the fleet-init / broadcast ``train_all`` calls);
+    * ``segments``  — number of scan segments executed;
+    * ``variants()``— total TRACED program variants across the cached
+      jitted functions (the honest "no recompile-per-event" signal).
+
+    ``min_run`` is the :func:`group_segments` merge threshold.  The
+    runner works for both the single-device :class:`ClientPlane` and the
+    :class:`ShardedClientPlane` (detected by its ``mesh``): the sharded
+    segment program wraps the same scan in ``shard_map_compat``, resolves
+    cid → (shard, local row) in-program and psum-gathers only the
+    addressed row, mirroring ``ShardedRowEngine``.
+    """
+
+    def __init__(self, plane, *, server_opt: Optional[str] = None,
+                 server_lr: float = 1.0, min_run: int = 16):
+        self.plane = plane
+        self.engine = plane.engine
+        # the base AggEngine (the sharded plane wraps it) fixes the blend
+        # math + storage dtype; its traceable row exprs inline into scan
+        self.base_engine = getattr(plane.engine, "base", plane.engine)
+        self.server_opt = server_opt
+        self.server_lr = server_lr
+        self.min_run = min_run
+        self.sharded = getattr(plane, "mesh", None) is not None
+        self._s_update = None
+        if server_opt is not None:
+            from repro.optim import optimizers as _opt
+            _, self._s_update = _opt.get_optimizer(server_opt)
+        # compiled segment programs live ON THE PLANE (shared by every
+        # runner over it, like the plane's own train programs), so a
+        # second compiled run reuses the compiled scan instead of paying
+        # trace+compile again; keys carry (server_opt, server_lr) since
+        # the optimizer update is closed over
+        self._progs: Dict[Any, Any] = plane.__dict__.setdefault(
+            "_compiled_progs", {})
+        self._prog_ctx = (server_opt, float(server_lr))
+        self.launches = 0
+        self.segments = 0
+
+    # -- instrumentation -----------------------------------------------------
+    def variants(self) -> int:
+        total = 0
+        for prog in self._progs.values():
+            size = getattr(prog, "_cache_size", None)
+            total += int(size()) if callable(size) else 1
+        return total
+
+    def count_launch(self, n: int = 1) -> None:
+        """Record jitted launches performed on the runner's behalf by
+        the plane (fleet init, baseline broadcasts)."""
+        self.launches += n
+
+    # -- program builders ----------------------------------------------------
+    def _scan_step(self, retrain: bool):
+        """The per-event body shared by both placements: blend the carried
+        global against the uploader's (already gathered) row, optionally
+        retrain.  Returns (g_new, row_new-or-None)."""
+        blend = self.base_engine.blend_row_expr
+        delta = self.base_engine.delta_row_expr
+        s_update, lr = self._s_update, self.server_lr
+        scan_train = self.plane._scan_train
+
+        def step(g, opt, row, cf, ev, b, sv):
+            if s_update is None:
+                g2 = blend(g, row, cf)
+            else:
+                pg = delta(g, row, cf[1])
+                g2, opt2 = s_update(g, pg, opt, lr)
+                # padded slots must not advance the optimizer state
+                g2 = jnp.where(ev, g2, g)
+                opt = jax.tree.map(
+                    lambda a, o: jnp.where(ev, a, o), opt2, opt)
+            new = scan_train(g2, b, sv) if retrain else None
+            return g2, opt, new
+        return step
+
+    def _build_prog(self, retrain: bool):
+        step_fn = self._scan_step(retrain)
+        dn = (0, 1) if self.plane.donate else ()
+
+        def seg(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
+                batches, svalid):
+            def step(carry, xs):
+                buf, g, opt = carry
+                cid, cf, ev, b, sv = xs
+                row = jax.lax.dynamic_slice_in_dim(buf, cid, 1, axis=0)[0]
+                g2, opt, new = step_fn(g, opt, row, cf, ev, b, sv)
+                if new is not None:
+                    new = jnp.where(ev, new.astype(buf.dtype), row)
+                    buf = jax.lax.dynamic_update_slice_in_dim(
+                        buf, new[None], cid, axis=0)
+                return (buf, g2, opt), None
+            (buf, g, opt), _ = jax.lax.scan(
+                step, (fleet_buf, g_flat, opt_state),
+                (cids, coefs, evalid, batches, svalid))
+            return buf, g, opt
+
+        return jax.jit(seg, donate_argnums=dn)
+
+    def _build_sharded_prog(self, retrain: bool, batches_proto, opt_proto):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import shard_map_compat
+        from repro.sharding.specs import FLEET_AXIS, fleet_buffer_spec
+
+        plane = self.plane
+        base = self.base_engine
+        storage = base.storage_dtype
+        use_kernel = base.mode == "kernel"
+        kern = functools.partial(weighted_agg_flat2d,
+                                 block_rows=base.block_rows,
+                                 interpret=base.interpret)
+        m_loc = plane.layout.rows_per_shard
+        ax = FLEET_AXIS
+        s_update, lr = self._s_update, self.server_lr
+        scan_train = plane._scan_train
+
+        def body(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
+                 batches, svalid):
+            def step(carry, xs):
+                buf, g, opt = carry
+                cid, cf, ev, b, sv = xs
+                shard = cid // m_loc
+                lrow = cid - shard * m_loc
+                cur = jax.lax.dynamic_slice_in_dim(buf, lrow, 1, axis=0)
+                mine = jax.lax.axis_index(ax) == shard
+                # owning shard contributes its row via a one-row psum —
+                # the fleet is never gathered (ShardedRowEngine's trick)
+                row = jax.lax.psum(
+                    jnp.where(mine, cur[0].astype(jnp.float32), 0.0), ax)
+                if s_update is None:
+                    if use_kernel:
+                        g2 = kern(g, row.astype(storage)[None], cf)
+                    else:
+                        g2 = (cf[0] * g.astype(jnp.float32)
+                              + cf[1] * row).astype(g.dtype)
+                else:
+                    pg = cf[1] * (g.astype(jnp.float32) - row)
+                    g2, opt2 = s_update(g, pg, opt, lr)
+                    g2 = jnp.where(ev, g2, g)
+                    opt = jax.tree.map(
+                        lambda a, o: jnp.where(ev, a, o), opt2, opt)
+                if retrain:
+                    new = scan_train(g2, b, sv)
+                    write = jnp.where(ev & mine,
+                                      new[None].astype(buf.dtype), cur)
+                    buf = jax.lax.dynamic_update_slice_in_dim(
+                        buf, write, lrow, axis=0)
+                return (buf, g2, opt), None
+            (buf, g, opt), _ = jax.lax.scan(
+                step, (fleet_buf, g_flat, opt_state),
+                (cids, coefs, evalid, batches, svalid))
+            return buf, g, opt
+
+        rep = lambda t: jax.tree.map(lambda _: P(), t)   # noqa: E731
+        in_specs = (fleet_buffer_spec(), P(), rep(opt_proto), P(), P(),
+                    P(), rep(batches_proto), P())
+        out_specs = (fleet_buffer_spec(), P(), rep(opt_proto))
+        f = shard_map_compat(body, mesh=plane.mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+        dn = (0, 1) if plane.donate else ()
+        return jax.jit(f, donate_argnums=dn)
+
+    def _prog_for(self, retrain: bool, batches, opt_state):
+        if not self.sharded:
+            # one jitted fn per retrain mode: jax.jit's own cache keys the
+            # (shape, structure) variants, counted by ``variants()``
+            key = ("seg", retrain, self._prog_ctx)
+            if key not in self._progs:
+                self._progs[key] = self._build_prog(retrain)
+            return self._progs[key]
+        key = ("sharded-seg", retrain, self._prog_ctx,
+               jax.tree.structure(batches), jax.tree.structure(opt_state))
+        if key not in self._progs:
+            self._progs[key] = self._build_sharded_prog(
+                retrain, batches, opt_state)
+        return self._progs[key]
+
+    # -- staging -------------------------------------------------------------
+    def _stage_events(self, trace: EventTrace, start: int):
+        """Stage every event's batches once (host NumPy) and annotate the
+        trace with each event's pow2 scan-length bucket id."""
+        plane = self.plane
+        staged: List[Tuple[Any, int]] = [None] * start
+        buckets = np.zeros(len(trace), np.int32)
+        for i in range(start, len(trace)):
+            b = plane._staged_batches(int(trace.cids[i]),
+                                      int(trace.local_steps[i]),
+                                      int(trace.seeds[i]))
+            nb = int(jax.tree.leaves(b)[0].shape[0])
+            staged.append((b, nb))
+            buckets[i] = plane._bucketed(nb)
+        trace.s_buckets = buckets
+        return staged
+
+    # -- execution -----------------------------------------------------------
+    def _run_segment(self, trace, staged, s0, s1, s_bucket,
+                     fleet_buf, g_flat, opt_state):
+        from repro.core.client_plane import _pad_batches
+
+        L = s1 - s0
+        Lb = pow2_bucket(L)
+        pad = Lb - L
+        retrain = trace.per_event_retrain
+        if retrain:
+            trees, svalid = [], []
+            for i in range(s0, s1):
+                b, nb = staged[i]
+                trees.append(_pad_batches(b, s_bucket))
+                svalid.append(np.arange(s_bucket) < nb)
+            trees += trees[:1] * pad
+            batches = jax.tree.map(lambda *xs: np.stack(xs), *trees)
+            svalid = np.stack(svalid + [np.zeros(s_bucket, bool)] * pad)
+        else:
+            # §III-B baseline: blends only; a zero-width step placeholder
+            # keeps the scan xs structure uniform
+            batches = np.zeros((Lb, 0), np.float32)
+            svalid = np.zeros((Lb, 0), bool)
+        cids = np.concatenate(
+            [trace.cids[s0:s1], np.zeros(pad, np.int32)])
+        betas = trace.betas[s0:s1]
+        cf0 = betas.astype(np.float32)
+        if self._s_update is None:
+            # mirrors run_afl: coefs = [f32(β), f32(1) − f32(β)]
+            cf1 = np.float32(1.0) - cf0
+        else:
+            # mirrors run_afl's delta path: scale = f32(1 − β)
+            cf1 = (1.0 - betas).astype(np.float32)
+        coefs = np.stack([cf0, cf1], axis=1)
+        coefs = np.concatenate(
+            [coefs, np.tile(np.asarray([[1.0, 0.0]], np.float32),
+                            (pad, 1))]).astype(np.float32)
+        evalid = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+        prog = self._prog_for(retrain, batches, opt_state)
+        self.launches += 1
+        self.segments += 1
+        fleet_buf, g_flat, opt_state = prog(
+            fleet_buf, g_flat, opt_state, cids, coefs, evalid,
+            batches, svalid)
+        return fleet_buf, g_flat, opt_state
+
+    def run(self, trace: EventTrace, fleet_buf, g_flat, opt_state=(), *,
+            start: int = 0, eval_fn=None, eval_every: int = 10,
+            hist=None):
+        """Execute ``trace[start:]`` from the given device state.  Eval
+        points and baseline broadcasts split the run into chunks (one
+        launch per boundary action); everything between boundaries runs
+        as bucket-grouped donated scan segments.  Returns the final
+        ``(fleet_buf, g_flat, opt_state)``."""
+        E = len(trace)
+        if start >= E:
+            return fleet_buf, g_flat, opt_state
+        if trace.per_event_retrain:
+            staged = self._stage_events(trace, start)
+        else:
+            staged = None
+            trace.s_buckets = np.zeros(E, np.int32)
+        cuts = {E}
+        for i in range(start, E):
+            if trace.broadcast[i]:
+                cuts.add(i + 1)
+            if eval_fn is not None and trace.js[i] % eval_every == 0:
+                cuts.add(i + 1)
+        a = start
+        for b in sorted(cuts):
+            if b <= a:
+                continue
+            for s0, s1, bucket in group_segments(
+                    trace.s_buckets[a:b], min_run=self.min_run):
+                fleet_buf, g_flat, opt_state = self._run_segment(
+                    trace, staged, a + s0, a + s1, bucket,
+                    fleet_buf, g_flat, opt_state)
+            i = b - 1
+            if trace.broadcast[i]:
+                fleet_buf = self.plane.train_all(
+                    g_flat, int(trace.seeds[i]))
+                self.launches += 1
+            if eval_fn is not None and trace.js[i] % eval_every == 0 \
+                    and hist is not None:
+                hist.add(float(trace.t_complete[i]), int(trace.js[i]),
+                         eval_fn(self.engine.unflatten(g_flat)))
+            a = b
+        return fleet_buf, g_flat, opt_state

@@ -25,18 +25,27 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class ClientSpec:
-    """Static description of one client."""
+    """Static description of one client.
+
+    ``batch_size`` (optional): this client's local minibatch size.  When
+    set (on every client — the fleet plane refuses mixed declarations),
+    the client-plane staging pads the per-sample axis to the fleet-wide
+    pow2 bucket with a sample-valid mask (docs/DESIGN.md §4), so
+    heterogeneous edge devices with different memory budgets share one
+    compiled program.  None keeps the task's uniform default.
+    """
     cid: int
     tau_compute: float          # seconds per local iteration
     num_samples: int
     local_steps: int = 1        # K_m (possibly adapted)
+    batch_size: Optional[int] = None   # B_m (None = task default)
 
 
 @dataclasses.dataclass
@@ -62,7 +71,8 @@ class _Pending:
 def make_fleet(num_clients: int, *, tau: float, hetero_a: float,
                samples_per_client: Sequence[int], seed: int = 0,
                adaptive: bool = True, min_steps: int = 1,
-               max_steps: int = 8, base_local_steps: int = 1
+               max_steps: int = 8, base_local_steps: int = 1,
+               batch_sizes: Optional[Sequence[int]] = None
                ) -> List[ClientSpec]:
     """Sample a heterogeneous fleet: compute time log-uniform in
     [tau, a·tau] (paper: fastest = τ, slowest = a·τ)."""
@@ -84,11 +94,28 @@ def make_fleet(num_clients: int, *, tau: float, hetero_a: float,
                             min_steps, max_steps))
         fleet.append(ClientSpec(cid=cid, tau_compute=float(taus[cid]),
                                 num_samples=int(samples_per_client[cid]),
-                                local_steps=k))
+                                local_steps=k,
+                                batch_size=(None if batch_sizes is None
+                                            else int(batch_sizes[cid]))))
     return fleet
 
 
-class AFLScheduler:
+class _TraceExportMixin:
+    """Whole-run trace export shared by both schedulers.
+
+    The event stream is a pure function of (fleet, tau_u, tau_d) — no
+    randomness, no learning-state feedback — so the ENTIRE timeline can
+    be materialized once on the host and handed to the event-trace
+    compiler (``core/event_trace.py``), which lowers it into a single
+    device-resident ``lax.scan`` program (docs/DESIGN.md §7).
+    """
+
+    def trace(self, max_iterations: int) -> List["UploadEvent"]:
+        """Materialize the full event timeline (one host pass)."""
+        return list(self.events(max_iterations))
+
+
+class AFLScheduler(_TraceExportMixin):
     """Event-driven AFL channel scheduler (paper §III-C).
 
     Usage::
@@ -151,7 +178,7 @@ class AFLScheduler:
             heapq.heappush(heap, (t_next, cid))
 
 
-class BaselineAFLScheduler:
+class BaselineAFLScheduler(_TraceExportMixin):
     """§III-B baseline requirements: (a) a client uploads again only after
     every other client has uploaded (strict cycles, faster clients first),
     (b) the schedule of each cycle is predetermined by completion order,

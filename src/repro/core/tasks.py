@@ -46,6 +46,10 @@ class CNNTask:
         self.cfg = cnn_cfg or MNIST_CNN
         self.lr = lr
         self.batch_size = batch_size
+        # per-client overrides (ClientSpec.batch_size) — populated by
+        # ``client_plane`` when the fleet declares heterogeneous sizes,
+        # so the per-minibatch reference path draws the SAME batches
+        self._batch_size_by_cid: Dict[int, int] = {}
         self.local_batches = local_batches_per_step
         ds = make_dataset(variant, train_n=train_n, test_n=test_n, seed=seed)
         if iid:
@@ -86,10 +90,12 @@ class CNNTask:
 
     def _global_batch_indices(self, cid: int, num_steps: int, seed: int
                               ) -> np.ndarray:
-        """(num_batches, B) indices into the staged full training set."""
+        """(num_batches, B_cid) indices into the staged full training
+        set; B_cid honors a per-client ``ClientSpec.batch_size``."""
         client = self.clients[cid]
+        bs = self._batch_size_by_cid.get(cid, self.batch_size)
         local = client.batch_indices(
-            self.batch_size, num_steps * self.local_batches, seed)
+            bs, num_steps * self.local_batches, seed)
         return client.indices[local].astype(np.int32)
 
     def local_train_fn(self, params, cid: int, num_steps: int, seed: int):
@@ -106,9 +112,23 @@ class CNNTask:
         """Fused fleet plane: grad against the flat parameter vector via
         the engine's cached unflatten expression; batches staged as
         index arrays (the image gather happens on device inside scan).
-        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6)."""
+        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6).
+
+        Fleets declaring per-client ``ClientSpec.batch_size`` get the
+        plane's sample-axis padding (§4): each scan step then receives
+        ``{"batch": (B_pad,) idx, "sample_valid": (B_pad,) bool}`` and
+        the loss is the masked per-sample mean — identical to the
+        per-minibatch reference path's plain mean over the client's true
+        B_m samples (which ``local_train_fn`` also honors once the plane
+        has registered the per-client sizes)."""
         from repro.core.agg_engine import engine_for
         from repro.core.client_plane import ClientPlane, ShardedClientPlane
+
+        # rebuilt per fleet — stale per-cid sizes from a previous fleet
+        # must not leak into this one's batch draws
+        self._batch_size_by_cid = {
+            c.cid: int(c.batch_size) for c in fleet
+            if getattr(c, "batch_size", None) is not None}
 
         template = jax.eval_shape(
             lambda: cnn_mod.init_params(self.cfg, jax.random.PRNGKey(0)))
@@ -116,11 +136,30 @@ class CNNTask:
         unflatten = engine.unflatten_expr
         train_x, train_y, lr = self._train_x, self._train_y, self.lr
 
-        def step_fn(flat, idx):
-            batch = {"images": train_x[idx], "labels": train_y[idx]}
-            grad = jax.grad(
-                lambda f: cnn_mod.loss_fn(unflatten(f), batch))(flat)
+        def step_fn(flat, batch):
+            if isinstance(batch, dict):      # ragged fleet: masked mean
+                idx, mask = batch["batch"], batch["sample_valid"]
+            else:
+                idx, mask = batch, None
+            images, labels = train_x[idx], train_y[idx]
+
+            def loss_flat(f):
+                params = unflatten(f)
+                if mask is None:
+                    return cnn_mod.loss_fn(
+                        params, {"images": images, "labels": labels})
+                logp = cnn_mod.forward(params, images)
+                nll = -jnp.take_along_axis(
+                    logp, labels[:, None], axis=-1)[:, 0]
+                m = mask.astype(jnp.float32)
+                return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+            grad = jax.grad(loss_flat)(flat)
             return flat - lr * grad
+
+        # advertise the {"batch", "sample_valid"} staging contract so the
+        # plane accepts fleets with declared per-client batch sizes
+        step_fn.supports_sample_mask = True
 
         cls = ShardedClientPlane if sharded else ClientPlane
         return cls(engine, fleet, step_fn,

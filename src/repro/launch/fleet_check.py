@@ -34,8 +34,13 @@ Checks (all gated at 1e-5):
   * run_afl / run_fedavg parity, sharded vs single-device plane, on the
     paper CNN at f32 and a flat toy fleet at bf16;
   * an M not divisible by the device count (padded rows masked out);
+  * the compiled event-trace loop (DESIGN.md §7) on the sharded plane
+    matches the single-device windowed loop, in O(#buckets) launches;
   * optional ``--smoke-M 1000``: a large-fleet run stays finite and
     compiles O(log) program variants, not one per event.
+
+``--checks addressing,cnn,bf16,compiled`` narrows the run (subprocess
+callers bound their runtime with it).
 
 Used by ``tests/test_sharded_plane.py`` (as a subprocess, so tier-1 can
 exercise 8 simulated devices without forcing them on the whole suite)
@@ -181,6 +186,38 @@ def check_toy_bf16(report: dict) -> None:
     report["afl_bf16_parity"] = _maxdiff(r_shard.params, r_base.params)
 
 
+def check_compiled(report: dict, M: int, iterations: int) -> None:
+    """Whole-run event-trace compiler (DESIGN.md §7) on the sharded
+    plane: the compiled scan — blend + retrain per event inside ONE
+    donated ``lax.scan`` program, rows psum-gathered per event — must
+    match the single-device plane's windowed Python loop ≤1e-5, and the
+    run must execute as O(#buckets) launches, not O(#windows)."""
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=128,
+                   batch_size=1, local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=True, max_steps=3, seed=0)
+    p0 = task.init_params()
+    base = task.client_plane(fleet)
+    sharded = task.client_plane(fleet, sharded=True)
+    kw = dict(algorithm="csmaafl", iterations=iterations,
+              tau_u=0.1, tau_d=0.1, gamma=0.4)
+    r_ref = run_afl(p0, fleet, None, client_plane=base, **kw)
+    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
+                     compiled_loop=True, **kw)
+    report["compiled_sharded_parity"] = _maxdiff(r_comp.params,
+                                                 r_ref.params)
+    report["compiled_launches"] = r_comp.stats["launches"]
+    report["compiled_segments"] = r_comp.stats["segments"]
+    report["compiled_variants"] = r_comp.stats["variants"]
+
+
 def check_smoke(report: dict, M: int) -> None:
     """Large-fleet smoke: finite result, bounded program-variant count."""
     import jax
@@ -227,8 +264,12 @@ def main(argv=None) -> int:
     ap.add_argument("--iterations", type=int, default=48)
     ap.add_argument("--smoke-M", type=int, default=0, dest="smoke_m",
                     help="also smoke-run a toy fleet this large (0: skip)")
+    ap.add_argument("--checks", default="addressing,cnn,bf16,compiled",
+                    help="comma list of checks to run (subprocess callers "
+                         "narrow this to bound their runtime)")
     ap.add_argument("--json", default=None, help="write the report here")
     args = ap.parse_args(argv)
+    checks = {c.strip() for c in args.checks.split(",") if c.strip()}
 
     report: dict = {"devices": len(jax.devices()),
                     "backend": jax.default_backend(), "M": args.M}
@@ -237,16 +278,27 @@ def main(argv=None) -> int:
               f"{report['devices']} (flag parsed too late?)",
               file=sys.stderr)
         return 2
-    check_addressing(report)
-    check_cnn_f32(report, args.M, args.iterations)
-    check_toy_bf16(report)
+    if "addressing" in checks:
+        check_addressing(report)
+    if "cnn" in checks:
+        check_cnn_f32(report, args.M, args.iterations)
+    if "bf16" in checks:
+        check_toy_bf16(report)
+    if "compiled" in checks:
+        check_compiled(report, args.M, args.iterations)
     if args.smoke_m:
         check_smoke(report, args.smoke_m)
 
     bound = 1e-5
     failures = [k for k in ("addressing_max_diff", "afl_f32_parity",
-                            "fedavg_f32_parity", "afl_bf16_parity")
-                if report[k] > bound]
+                            "fedavg_f32_parity", "afl_bf16_parity",
+                            "compiled_sharded_parity")
+                if k in report and report[k] > bound]
+    if "compiled" in checks:
+        # O(#buckets) launches (+init +eval/broadcast boundaries), never
+        # one launch per event window
+        if report["compiled_launches"] > 12:
+            failures.append("compiled_launches")
     if args.smoke_m:
         if not report["smoke_finite"]:
             failures.append("smoke_finite")

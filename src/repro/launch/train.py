@@ -60,7 +60,14 @@ def run_fleet_plane(cfg, args, params) -> None:
     plane.  LMTask supplies the flat-row step; the plane shards the
     (M, n) fleet buffer over every host device (``make_fleet_mesh``) and
     the AFL event loop / FedAvg rounds run through the row-addressed
-    engine — on one device this is exactly the PR-2 plane."""
+    engine — on one device this is exactly the PR-2 plane.
+
+    ``--loop compiled`` lowers the whole AFL run through the event-trace
+    compiler (DESIGN.md §7): O(#buckets) donated scan launches instead
+    of a host hop per event window.  ``--save`` then also writes the raw
+    AFL device state (``<path>.state``: fleet buffer + global flat model
+    + server-opt state + trace cursor) and ``--resume <path>.state``
+    restarts a compiled run mid-timeline."""
     from repro.core.afl import run_afl
     from repro.core.sfl import run_fedavg
     from repro.core.tasks import LMTask
@@ -72,20 +79,42 @@ def run_fleet_plane(cfg, args, params) -> None:
     plane = task.client_plane(fleet, sharded=True,
                               window_cap=args.window_cap)
     print(f"fleet plane: M={plane.M} shards={plane.layout.D} "
-          f"rows/shard={plane.layout.rows_per_shard} n={plane.engine.n:,}")
+          f"rows/shard={plane.layout.rows_per_shard} n={plane.engine.n:,} "
+          f"loop={args.loop}")
     t0 = time.time()
     every = max(args.steps // 10, 1)
+    state = None
     if args.algorithm == "fedavg":
+        if args.loop == "compiled" or args.resume:
+            raise SystemExit("--loop compiled / --resume apply to the AFL "
+                             "event loop; fedavg rounds are already one "
+                             "launch each")
         final, hist = run_fedavg(
             params, fleet, None, rounds=args.steps, tau_u=0.05, tau_d=0.05,
             eval_fn=task.eval_fn, eval_every=every, client_plane=plane)
     else:
+        resume_state = None
+        if args.resume:
+            # a resume replays the compiled trace from its cursor — the
+            # windowed loop has no cursor; refuse rather than silently
+            # running a different loop than the banner announced
+            if args.loop != "compiled":
+                raise SystemExit("--resume replays the compiled event "
+                                 "trace; pass --loop compiled")
+            resume_state = ckpt.load_afl_state(args.resume)
+            print(f"resuming from {args.resume} at trace cursor "
+                  f"{resume_state['cursor']}")
         res = run_afl(
             params, fleet, None, algorithm="csmaafl",
             iterations=args.steps, tau_u=0.05, tau_d=0.05,
             gamma=args.gamma, eval_fn=task.eval_fn, eval_every=every,
-            client_plane=plane)
-        final, hist = res.params, res.history
+            client_plane=plane, compiled_loop=(args.loop == "compiled"),
+            resume_state=resume_state)
+        final, hist, state = res.params, res.history, res.state
+        if res.stats is not None:
+            print(f"compiled loop: {res.stats['launches']} launches, "
+                  f"{res.stats['segments']} segments, "
+                  f"{res.stats['variants']} program variants")
     for it, m in zip(hist.iterations, hist.metrics):
         print(f"iter {it:4d} loss={m['loss']:.4f}")
     print(f"{args.steps} events in {time.time()-t0:.1f}s")
@@ -93,6 +122,12 @@ def run_fleet_plane(cfg, args, params) -> None:
         ckpt.save(args.save, final, step=args.steps,
                   metadata={"arch": cfg.arch_id, "data_plane": "fleet"})
         print("checkpoint saved to", args.save)
+        if state is not None:
+            ckpt.save_afl_state(args.save + ".state", state,
+                                step=args.steps,
+                                metadata={"arch": cfg.arch_id,
+                                          "algorithm": args.algorithm})
+            print("AFL device state saved to", args.save + ".state")
 
 
 def main(argv=None) -> None:
@@ -115,6 +150,17 @@ def main(argv=None) -> None:
                     help="fleet plane: max AFL event-window length before "
                          "a forced retrain flush (bounds snapshot memory "
                          "on M>=1000 fleets)")
+    ap.add_argument("--loop", default="window",
+                    choices=["window", "compiled"],
+                    help="fleet plane AFL loop: window = host-driven "
+                         "event windows (one launch per window); "
+                         "compiled = whole-run event-trace compiler "
+                         "(O(#buckets) donated scan launches, DESIGN.md "
+                         "§7)")
+    ap.add_argument("--resume", default=None,
+                    help="resume a fleet-plane AFL run from a "
+                         "<ckpt>.state file written by --save (trace "
+                         "cursor + device buffers)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--clients", type=int, default=4,
@@ -143,6 +189,10 @@ def main(argv=None) -> None:
               f"algorithm={args.algorithm} data_plane=fleet")
         run_fleet_plane(cfg, args, params)
         return
+
+    if args.loop != "window" or args.resume:
+        ap.error("--loop compiled / --resume ride the fleet plane's AFL "
+                 "event loop; use --data-plane fleet")
 
     fed = FederatedConfig(num_clients=args.clients, algorithm=args.algorithm,
                           gamma=args.gamma, lr=args.lr)

@@ -232,7 +232,8 @@ def test_sharded_plane_8dev_subprocess():
     env.pop("XLA_FLAGS", None)                   # fleet_check sets it
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.fleet_check",
-         "--devices", "8", "--M", "64", "--iterations", "48"],
+         "--devices", "8", "--M", "64", "--iterations", "48",
+         "--checks", "addressing,cnn,bf16"],   # compiled: test_event_trace
         capture_output=True, text=True, env=env, timeout=540)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     report = json.loads(proc.stdout)
