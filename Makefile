@@ -1,19 +1,22 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test lint format-check bench bench-agg bench-client \
-	bench-sharded bench-compiled bench-gate
+.PHONY: test lint format format-check bench bench-agg bench-client \
+	bench-sharded bench-compiled bench-sweep bench-gate bench-record
 
 test:
 	python -m pytest -x -q
 
 # ruff is not baked into the repro container; CI installs it (see
 # .github/workflows/ci.yml), locally `pip install ruff` once.
-# `lint` (ruff check, pyproject [tool.ruff]) is the required gate;
-# `format-check` is advisory in CI until the tree is ruff-formatted
-# wholesale (the repo predates the formatter).
+# `lint` (ruff check + ruff format --check, pyproject [tool.ruff]) is
+# the required gate — format drift fails CI; `make format` fixes it.
 lint:
 	ruff check .
+	ruff format --check .
+
+format:
+	ruff format .
 
 format-check:
 	ruff format --check .
@@ -39,12 +42,28 @@ bench-sharded:
 bench-compiled:
 	python -m benchmarks.run --only compiled_loop
 
-# all gated benches; fail on >1.3x slowdown vs benchmarks/baseline_*.json
-# (or below the acceptance floors / parity >1e-5 — see
-# benchmarks/check_regression.py; baselines are keyed by hostname, so an
-# unknown host warns instead of false-failing).  Writes
-# experiments/bench/gate_report.json for CI consumption.
+# the sweep-plane bench (run-batched seeds x scenarios grid vs
+# sequential compiled runs, DESIGN.md §8)
+bench-sweep:
+	python -m benchmarks.run --only sweep_plane
+
+# all 5 gated benches; fail on >1.3x slowdown vs benchmarks/
+# baseline_*.json (or below the acceptance floors / parity >1e-5 — see
+# benchmarks/check_regression.py).  Baselines are keyed by HOST KEY
+# (REPRO_BENCH_HOST_KEY / github-runner / hostname): an unrecorded host
+# warns locally but FAILS in CI (REPRO_GATE_ENFORCE=1).  Writes
+# experiments/bench/local/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane \
 		--gate --seed 0
+
+# rerun the gated benches on THIS host and fold the fresh results into
+# benchmarks/baseline_*.json under the current host key — how a new
+# bench host (or a pinned CI runner) gets armed.  Also refreshes the
+# tracked experiments/bench/*.json records (--record).
+bench-record:
+	python -m benchmarks.run \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane \
+		--seed 0 --record
+	python -m benchmarks.check_regression --record-baselines

@@ -1,0 +1,267 @@
+"""Sweep-plane benchmark: aggregate events/s for a seeds x scenarios
+grid through the run-batched sweep plane (docs/DESIGN.md §8) vs the same
+grid as sequential ``compiled_loop=True`` runs.
+
+Two grids, one regime argument (the PR-2/PR-4 convention):
+
+* ``grid_toy`` (GATED speedup) — a flat-vector task whose per-op device
+  cost is tiny, i.e. the dispatch-light end of the spectrum where the
+  loop STRUCTURE is what's being measured.  Sequential pays R full
+  pipelines (scheduler simulation, staging, per-run launches);
+  the sweep shares one scheduler simulation per scenario
+  (``Scenario.fleet_seed`` pins the device population, so seeds vary
+  data/init only), bulk-stacks the staged events straight into the
+  (L, R, ...) layout, and executes the whole grid as a handful of
+  run-batched donated scans.  This is the "someone re-introduced
+  per-run host looping / per-run launches" regression signal.
+* ``grid_cnn`` (context + GATED parity) — the paper-grid configuration
+  (CPU-budget paper CNN at M=64).  On this 2-core container XLA:CPU's
+  conv kernels cost ~500us per *sample* and scale linearly with batch,
+  so every configuration is conv-compute-bound and run-batching is
+  worth ~1x end-to-end — the honest number is recorded as context, and
+  the per-run final-params parity vs the sequential runs is gated
+  ≤ 1e-5.  On accelerator hosts (conv ~us, dispatch ~10-100us/launch)
+  the same grid sits in the toy's regime; re-record there.
+
+Both timed passes include trace compilation and host-side staging (the
+sweep restages and restacks every pass, exactly like the sequential
+runs); planes and compiled programs are warm in both (one warmup pass
+each), and the timed value is the median of 3 passes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, emit, save_result
+
+M = 64
+ITER_TOY = 256
+ITER_CNN = 64
+EVAL_EVERY = 16
+SEEDS_TOY = 8
+SEEDS_CNN = 4
+SCENARIO_NAMES = ("paper_iid", "paper_noniid", "uplink_bound")
+TOY_D = 1024
+K = 1                      # local iterations per upload
+LOCAL_BATCHES = 2          # minibatches per local iteration
+
+
+def _scenarios(fleet_seed):
+    from repro.core import sweep_plane as sp
+    return [sp.resolve_scenario({"name": n, "fleet_seed": fleet_seed})
+            for n in SCENARIO_NAMES]
+
+
+def _timed(run_fn, leaf_fn, passes=3):
+    import jax
+    jax.block_until_ready(leaf_fn(run_fn()))      # warmup compiles
+    ts = []
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        out = run_fn()
+        jax.block_until_ready(leaf_fn(out))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def _grid_toy(seed0: int):
+    """Flat-vector grid: staging is pool slicing, the model is a
+    target-pull update — ~everything left is loop structure.  Eval
+    curves are ON (a convergence grid without histories is not the
+    paper's workload): the sequential loop pays R host-synced eval
+    fetches per eval point, the sweep one vmapped launch."""
+    import jax.numpy as jnp
+
+    from repro.core import event_trace as et
+    from repro.core import sweep_plane as sp
+    from repro.core.afl import run_afl
+    from repro.core.agg_engine import AggEngine
+    from repro.core.client_plane import ClientPlane
+
+    rng = np.random.default_rng(seed0)
+    w0 = jnp.asarray(rng.normal(size=TOY_D), jnp.float32)
+    pool = rng.normal(size=(257, TOY_D)).astype(np.float32)
+
+    def batch_fn(cid, num_steps, seed_):
+        i = (seed_ * 131 + cid) % (257 - num_steps)
+        return pool[i:i + num_steps]
+
+    def step(flat, target):
+        return flat - 0.25 * (flat - target)
+
+    def eval_fn(params):
+        return {"s": float(jnp.sum(jnp.asarray(params, jnp.float32)))}
+
+    def eval_flat(g_flat):
+        return {"s": jnp.sum(g_flat.astype(jnp.float32))}
+
+    scens = _scenarios(seed0 + 7)
+    seeds = [seed0 + s for s in range(SEEDS_TOY)]
+    planes = {}
+    for sc in scens:
+        for seed in seeds:
+            fleet = sc.make_fleet([60 + 10 * (m % 7) for m in range(M)],
+                                  seed)
+            planes[(sc.name, seed)] = ClientPlane(
+                AggEngine(w0), fleet, step, batch_fn)
+    g0 = planes[(scens[0].name, seeds[0])].engine.flatten(w0)
+
+    def build_runs():
+        runs = []
+        for sc in scens:
+            ev = None
+            for seed in seeds:
+                p = planes[(sc.name, seed)]
+                trace = et.compile_afl_trace(
+                    p.fleet, algorithm=sc.algorithm, iterations=ITER_TOY,
+                    tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
+                    seed=seed, events=ev)
+                ev = trace.events
+                runs.append(sp.SweepRun(sc, seed, p, trace, g0,
+                                        label=f"{sc.name}/s{seed}"))
+        return runs
+
+    def run_sequential():
+        outs = []
+        for sc in scens:
+            for seed in seeds:
+                p = planes[(sc.name, seed)]
+                outs.append(run_afl(
+                    w0, p.fleet, None, algorithm=sc.algorithm,
+                    iterations=ITER_TOY, tau_u=sc.tau_u, tau_d=sc.tau_d,
+                    gamma=sc.gamma, eval_fn=eval_fn,
+                    eval_every=EVAL_EVERY, client_plane=p,
+                    compiled_loop=True, seed=seed))
+        return outs
+
+    def run_sweep():
+        return sp.SweepRunner(build_runs(), eval_flat=eval_flat,
+                              eval_every=EVAL_EVERY).run()
+
+    R = len(scens) * len(seeds)
+    t_seq, solos = _timed(run_sequential, lambda o: o[-1].params)
+    t_swp, sweep = _timed(run_sweep, lambda o: o.params[-1])
+    parity = max(float(np.max(np.abs(
+        np.asarray(a, np.float32) - np.asarray(s.params, np.float32))))
+        for a, s in zip(sweep.params, solos))
+    return {"runs": R, "events": R * ITER_TOY, "seq_s": t_seq,
+            "sweep_s": t_swp, "speedup": t_seq / t_swp,
+            "parity": parity, "launches": sweep.stats["launches"],
+            "groups": sweep.stats["groups"]}
+
+
+def _grid_cnn(seed0: int):
+    """The paper-grid configuration (context + parity)."""
+    import jax
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core import event_trace as et
+    from repro.core import sweep_plane as sp
+    from repro.core.afl import run_afl
+    from repro.core.tasks import CNNTask
+
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=4096, test_n=128,
+                   batch_size=1, local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed0)
+    scens = _scenarios(seed0 + 7)
+    seeds = [seed0 + s for s in range(SEEDS_CNN)]
+    base_runs = sp.build_task_runs(task, scens, seeds,
+                                   iterations=ITER_CNN)
+
+    def build_runs():
+        runs = []
+        i = 0
+        for sc in scens:
+            ev = None
+            for seed in seeds:
+                base = base_runs[i]
+                i += 1
+                trace = et.compile_afl_trace(
+                    base.plane.fleet, algorithm=sc.algorithm,
+                    iterations=ITER_CNN, tau_u=sc.tau_u, tau_d=sc.tau_d,
+                    gamma=sc.gamma, seed=seed, events=ev)
+                ev = trace.events
+                runs.append(sp.SweepRun(sc, seed, base.plane, trace,
+                                        base.g0_flat, label=base.label))
+        return runs
+
+    def run_sequential():
+        outs = []
+        for r in base_runs:
+            sc = r.scenario
+            outs.append(run_afl(
+                task.init_params(r.seed), r.plane.fleet, None,
+                algorithm=sc.algorithm, iterations=ITER_CNN,
+                tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
+                client_plane=r.plane, compiled_loop=True, seed=r.seed))
+        return outs
+
+    def run_sweep():
+        return sp.SweepRunner(build_runs()).run()
+
+    R = len(base_runs)
+    t_seq, solos = _timed(run_sequential, lambda o: o[-1].params["fc2_w"])
+    t_swp, sweep = _timed(run_sweep, lambda o: o.params[-1]["fc2_w"])
+    parity = max(
+        max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                - np.asarray(b, np.float32))))
+            for a, b in zip(jax.tree.leaves(sp_params),
+                            jax.tree.leaves(solo.params)))
+        for sp_params, solo in zip(sweep.params, solos))
+    return {"runs": R, "events": R * ITER_CNN, "seq_s": t_seq,
+            "sweep_s": t_swp, "speedup": t_seq / t_swp,
+            "parity": parity, "launches": sweep.stats["launches"],
+            "groups": sweep.stats["groups"]}
+
+
+def bench_sweep_plane() -> None:
+    seed0 = bench_seed()
+    toy = _grid_toy(seed0)
+    cnn = _grid_cnn(seed0)
+    emit("sweep_plane.toy.sequential", toy["seq_s"] * 1e6 / toy["events"],
+         f"{toy['events'] / toy['seq_s']:.0f} events/s "
+         f"({toy['runs']} solo compiled runs)")
+    emit("sweep_plane.toy.batched", toy["sweep_s"] * 1e6 / toy["events"],
+         f"{toy['events'] / toy['sweep_s']:.0f} events/s; "
+         f"{toy['speedup']:.2f}x vs sequential; {toy['launches']} "
+         f"launches / {toy['groups']} group(s)")
+    emit("sweep_plane.cnn.sequential", cnn["seq_s"] * 1e6 / cnn["events"],
+         f"{cnn['events'] / cnn['seq_s']:.0f} events/s "
+         f"({cnn['runs']} solo compiled runs)")
+    emit("sweep_plane.cnn.batched", cnn["sweep_s"] * 1e6 / cnn["events"],
+         f"{cnn['events'] / cnn['sweep_s']:.0f} events/s; "
+         f"{cnn['speedup']:.2f}x (conv-bound host — context); "
+         f"parity {cnn['parity']:.2e}")
+    save_result("sweep_plane", {
+        "model": "flat_toy+paper_cnn_cpu_budget", "M": M,
+        "toy_d": TOY_D, "K": K, "local_batches": LOCAL_BATCHES,
+        "iterations_toy": ITER_TOY, "iterations_cnn": ITER_CNN,
+        "runs_toy": toy["runs"], "runs_cnn": cnn["runs"],
+        "scenarios": list(SCENARIO_NAMES), "seed": seed0,
+        "sequential_s_toy": toy["seq_s"], "sweep_s_toy": toy["sweep_s"],
+        "events_per_s_sequential_toy": toy["events"] / toy["seq_s"],
+        "events_per_s_sweep_toy": toy["events"] / toy["sweep_s"],
+        "sequential_s_cnn": cnn["seq_s"], "sweep_s_cnn": cnn["sweep_s"],
+        "events_per_s_sequential_cnn": cnn["events"] / cnn["seq_s"],
+        "events_per_s_sweep_cnn": cnn["events"] / cnn["sweep_s"],
+        "speedup_cnn": cnn["speedup"],
+        "sweep_launches_toy": toy["launches"],
+        "sweep_launches_cnn": cnn["launches"],
+        "sweep_groups_toy": toy["groups"],
+        "sweep_groups_cnn": cnn["groups"],
+        # the GATED pair: loop-structure speedup on the dispatch-light
+        # grid; numerical parity on the paper grid
+        "speedup": toy["speedup"],
+        "parity_max_abs_diff": max(cnn["parity"], toy["parity"]),
+    })
+
+
+def main() -> None:
+    bench_sweep_plane()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,8 @@
 """Bench regression gates (aggregation engine + client plane + sharded
-plane + compiled event loop) — CI-friendly.
+plane + compiled event loop + sweep plane) — CI-enforcing.
 
-Compares the latest results under ``experiments/bench/`` (written by
-``benchmarks/bench_aggregation.py`` / ``bench_client_plane.py`` /
-``bench_sharded_plane.py``) against the committed baselines in
+Compares the latest results under ``experiments/bench/local/`` (written
+by the gated benches; gitignored) against the committed baselines in
 ``benchmarks/baseline_*.json`` and exits nonzero when a gated speedup
 regresses by more than ``THRESHOLD``x, drops below its acceptance floor,
 or a recorded parity exceeds its bound.
@@ -12,31 +11,43 @@ The watched metrics are SAME-RUN ratios, not absolute microseconds:
 wall-clock medians swing ~2x with machine load on a shared CPU, while the
 two variants of each gate are timed back-to-back in one process, so their
 ratio isolates the code path.  A >1.3x drop in a ratio is the "someone
-re-introduced per-leaf/per-minibatch dispatch" (or "sharding started
-gathering the fleet") class of regression, not noise.
+re-introduced per-leaf/per-minibatch/per-run dispatch" (or "sharding
+started gathering the fleet") class of regression, not noise.
 
 The ratios are still PER-ENVIRONMENT, so baselines and floors are keyed
-by HOSTNAME: a baseline recorded on this repo's container says nothing
-about a fresh CI runner.  When the current host doesn't match the
-baseline's ``host`` field the gate WARNS and reports ``skipped-unknown-
-host`` instead of false-failing — re-record the baseline on the new host
-(run the bench, copy ``experiments/bench/*.json`` over the baseline) to
-arm it there.
+by a HOST KEY:
+
+* ``REPRO_BENCH_HOST_KEY`` env, when set (CI pins this);
+* else ``github-runner`` when running under GitHub Actions — runner
+  hostnames churn per job, but the fleet is homogeneous enough that one
+  shared key with conservative floors gates real regressions;
+* else the machine hostname.
+
+A baseline file holds the recording host's result at top level plus an
+optional ``"hosts"`` map of per-key records (each may carry its own
+``floor``).  When the current key matches neither, the gate WARNS and
+reports ``skipped-unknown-host`` — unless ``--enforce`` (or
+``REPRO_GATE_ENFORCE=1``) is set, in which case an unknown host is a
+FAILURE (exit 3): CI must gate, not skip.  ``make bench-record`` reruns
+the gated benches and folds the fresh results into the baselines under
+the current host key (``--record-baselines``).
 
 Exit codes (distinct so CI can tell the failure classes apart):
 
-* 0 — every requested gate passed (or was skipped for an unknown host)
+* 0 — every requested gate passed (or was skipped for an unknown host
+      in non-enforcing mode)
 * 1 — at least one REGRESSION (speedup drop / floor / parity)
 * 2 — invocation or config error (unknown gate, config-key mismatch)
-* 3 — missing baseline or missing bench result
+* 3 — missing baseline or missing bench result (incl. unknown host
+      under --enforce)
 
 Every run also writes a machine-readable ``gate_report.json`` (default
-``experiments/bench/gate_report.json``, override with ``--report``) with
-per-gate speedup, floor, parity, and pass/fail status.
+``experiments/bench/local/gate_report.json``, override with
+``--report``) with per-gate speedup, floor, parity, and pass/fail.
 
 Usage:  python -m benchmarks.check_regression [--threshold 1.3]
-            [--which aggregation,client_plane,sharded_plane,compiled_loop]
-            [--report path/to/gate_report.json]
+            [--which aggregation,...,sweep_plane] [--enforce]
+            [--report path] [--record-baselines]
         python -m benchmarks.run --only aggregation,client_plane --gate
 """
 from __future__ import annotations
@@ -48,7 +59,7 @@ import socket
 import sys
 
 HERE = os.path.dirname(__file__)
-LATEST_DIR = os.path.join(HERE, "..", "experiments", "bench")
+LATEST_DIR = os.path.join(HERE, "..", "experiments", "bench", "local")
 THRESHOLD = 1.3
 DEFAULT_REPORT = os.path.join(LATEST_DIR, "gate_report.json")
 
@@ -64,6 +75,12 @@ GATES = {
         "config_keys": ("mode", "trunk_k", "params", "model"),
         "context_keys": ("naive_us", "fused_us", "fused_single_us"),
         "floor": 3.0,
+        # the naive per-leaf comparator's wall time swings >2x with
+        # machine load on the shared container (5.9x..19.8x measured in
+        # one day), so the drop-ratio check needs a wider budget here —
+        # the FLOOR is this gate's real "engine collapsed to per-leaf"
+        # signal (a real collapse lands at ~1x, far below 3.0)
+        "drop_threshold": 3.0,
         "rerun_hint": "python -m benchmarks.run --only aggregation",
     },
     "client_plane": {
@@ -118,16 +135,68 @@ GATES = {
         "parity_bound": 1e-5,
         "rerun_hint": "python -m benchmarks.run --only compiled_loop",
     },
+    "sweep_plane": {
+        "baseline": os.path.join(HERE, "baseline_sweep_plane.json"),
+        "latest": os.path.join(LATEST_DIR, "sweep_plane.json"),
+        "config_keys": ("model", "M", "K", "local_batches", "toy_d",
+                        "iterations_toy", "iterations_cnn", "runs_toy",
+                        "runs_cnn", "seed"),
+        "context_keys": ("events_per_s_sequential_toy",
+                         "events_per_s_sweep_toy",
+                         "events_per_s_sequential_cnn",
+                         "events_per_s_sweep_cnn", "speedup_cnn",
+                         "sweep_launches_toy", "sweep_launches_cnn"),
+        # run-batched seeds x scenarios grid vs sequential compiled runs
+        # (DESIGN.md §8) on the dispatch-light flat-toy grid WITH eval
+        # curves (a convergence grid without histories is not the
+        # paper's workload); ~2.6x on this 2-core container.  The
+        # conv-bound paper-CNN grid is recorded as context (~1x here —
+        # XLA:CPU conv is ~500us/sample and linear in batch); its parity
+        # is what the parity bound gates.  The floor is the "sweep
+        # degenerated to per-run host looping / per-run launches"
+        # signal.
+        "floor": 2.0,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "rerun_hint": "python -m benchmarks.run --only sweep_plane",
+    },
 }
 
 
-def check_gate(name: str, threshold: float = THRESHOLD):
+def host_key() -> str:
+    """Baseline/floor key for this environment (see module docstring)."""
+    key = os.environ.get("REPRO_BENCH_HOST_KEY")
+    if key:
+        return key
+    if os.environ.get("GITHUB_ACTIONS") == "true":
+        return "github-runner"
+    return socket.gethostname()
+
+
+def enforcing(flag: bool = False) -> bool:
+    return flag or os.environ.get("REPRO_GATE_ENFORCE", "") not in ("", "0")
+
+
+def resolve_baseline(base: dict, key: str):
+    """Pick the baseline record for ``key``: the top-level record when it
+    was recorded under this key (or predates host keying), else the
+    ``hosts`` map entry.  None = unrecorded host."""
+    if base.get("host") in (None, key):
+        return base
+    rec = base.get("hosts", {}).get(key)
+    return rec
+
+
+def check_gate(name: str, threshold: float = THRESHOLD, *,
+               enforce: bool = False):
     """Returns (exit_code, record) for one gate; record feeds the
     machine-readable gate report."""
     g = GATES[name]
+    key = host_key()
     rec = {"gate": name, "floor": g["floor"],
            "parity_bound": g.get("parity_bound"),
-           "threshold": threshold, "host": socket.gethostname()}
+           "threshold": threshold, "host": key,
+           "hostname": socket.gethostname()}
 
     def fail(code, status, msg):
         print(f"gate[{name}]: {msg}", file=sys.stderr)
@@ -137,44 +206,54 @@ def check_gate(name: str, threshold: float = THRESHOLD):
     if not os.path.exists(g["baseline"]):
         return fail(EXIT_MISSING, "missing-baseline",
                     f"no baseline at {g['baseline']} — run the bench and "
-                    "commit its result as the baseline")
+                    "record it (`make bench-record`)")
     if not os.path.exists(g["latest"]):
         return fail(EXIT_MISSING, "missing-latest",
                     f"no bench result at {g['latest']} — run "
                     f"`{g['rerun_hint']}` first")
     with open(g["baseline"]) as f:
-        base = json.load(f)
+        base_file = json.load(f)
     with open(g["latest"]) as f:
         latest = json.load(f)
-    rec["baseline_host"] = base.get("host")
+    rec["baseline_host"] = base_file.get("host")
 
-    # hostname keying: ratios (and their floors) are per-environment, so
-    # an unrecorded host must warn, not false-fail (CI runners churn)
-    host = socket.gethostname()
-    if base.get("host") is not None and base["host"] != host:
-        print(f"gate[{name}]: WARNING baseline was recorded on host "
-              f"{base['host']!r} but this is {host!r} — skipping the gate "
-              "(re-record the baseline on this host to arm it)",
-              file=sys.stderr)
+    # host keying: ratios (and their floors) are per-environment; an
+    # unrecorded host warns (local convenience) or fails (--enforce: CI
+    # must gate, not silently skip)
+    base = resolve_baseline(base_file, key)
+    if base is None:
+        if enforce:
+            return fail(EXIT_MISSING, "unrecorded-host-enforced",
+                        f"no baseline recorded for host key {key!r} "
+                        f"(recorded: {base_file.get('host')!r} + "
+                        f"{sorted(base_file.get('hosts', {}))}) and "
+                        "--enforce is set — record one with "
+                        "`make bench-record`")
+        print(f"gate[{name}]: WARNING no baseline recorded for host key "
+              f"{key!r} — skipping the gate (run `make bench-record` on "
+              "this host to arm it)", file=sys.stderr)
         rec["status"] = "skipped-unknown-host"
         return EXIT_OK, rec
+    floor = float(base.get("floor", g["floor"]))
+    rec["floor"] = floor
 
     # the ratio is only comparable for the same configuration: a baseline
     # recorded in xla mode on CPU says nothing about kernel mode on TPU
-    for key in g["config_keys"]:
-        if base.get(key) != latest.get(key):
+    for cfg_key in g["config_keys"]:
+        if base.get(cfg_key) != latest.get(cfg_key):
             return fail(EXIT_USAGE, "config-mismatch",
-                        f"config mismatch on '{key}' (baseline "
-                        f"{base.get(key)!r} vs latest {latest.get(key)!r})"
-                        " — re-record the baseline for this configuration")
+                        f"config mismatch on '{cfg_key}' (baseline "
+                        f"{base.get(cfg_key)!r} vs latest "
+                        f"{latest.get(cfg_key)!r}) — re-record the "
+                        "baseline for this configuration")
     # context: absolute medians (load-sensitive, never gated on)
     rec["context"] = {}
-    for key in g["context_keys"]:
-        if key in base and key in latest:
-            rec["context"][key] = {"baseline": base[key],
-                                   "latest": latest[key]}
-            print(f"gate[{name}]: (context) {key}: baseline "
-                  f"{base[key]:.6g} -> latest {latest[key]:.6g}")
+    for cfg_key in g["context_keys"]:
+        if cfg_key in base and cfg_key in latest:
+            rec["context"][cfg_key] = {"baseline": base[cfg_key],
+                                       "latest": latest[cfg_key]}
+            print(f"gate[{name}]: (context) {cfg_key}: baseline "
+                  f"{base[cfg_key]:.6g} -> latest {latest[cfg_key]:.6g}")
     # gated: the same-run speedup
     if "speedup" not in base or "speedup" not in latest:
         return fail(EXIT_USAGE, "config-mismatch",
@@ -182,14 +261,19 @@ def check_gate(name: str, threshold: float = THRESHOLD):
     rc = EXIT_OK
     b_sp, l_sp = float(base["speedup"]), float(latest["speedup"])
     ratio = b_sp / max(l_sp, 1e-9)
-    rec.update(baseline_speedup=b_sp, speedup=l_sp, drop_ratio=ratio)
-    status = "OK" if ratio <= threshold else "REGRESSION"
+    # per-gate (or per-host-record) drop budget: gates whose comparator
+    # is load-noisy widen it and lean on their floor instead
+    thr = float(base.get("drop_threshold",
+                         g.get("drop_threshold", threshold)))
+    rec.update(baseline_speedup=b_sp, speedup=l_sp, drop_ratio=ratio,
+               drop_threshold=thr)
+    status = "OK" if ratio <= thr else "REGRESSION"
     print(f"gate[{name}]: speedup: baseline {b_sp:.1f}x -> latest "
-          f"{l_sp:.1f}x ({ratio:.2f}x drop) {status}")
-    if ratio > threshold:
+          f"{l_sp:.1f}x ({ratio:.2f}x drop, budget {thr:.1f}x) {status}")
+    if ratio > thr:
         rc = EXIT_REGRESSION
-    if l_sp < g["floor"]:
-        print(f"gate[{name}]: speedup {l_sp:.1f}x < {g['floor']:.1f}x "
+    if l_sp < floor:
+        print(f"gate[{name}]: speedup {l_sp:.1f}x < {floor:.1f}x "
               "floor REGRESSION")
         rc = EXIT_REGRESSION
     # gated: numerical parity of the two variants (where recorded)
@@ -207,6 +291,50 @@ def check_gate(name: str, threshold: float = THRESHOLD):
     return rc, rec
 
 
+def record_baseline(name: str) -> int:
+    """Fold the latest local result for ``name`` into its baseline file
+    under the current host key (top level when the file was recorded
+    under this key or doesn't exist yet; the ``hosts`` map otherwise).
+    An existing per-key ``floor`` override is preserved."""
+    g = GATES[name]
+    key = host_key()
+    if not os.path.exists(g["latest"]):
+        print(f"record[{name}]: no bench result at {g['latest']} — run "
+              f"`{g['rerun_hint']}` first", file=sys.stderr)
+        return EXIT_MISSING
+    with open(g["latest"]) as f:
+        latest = json.load(f)
+    latest["host"] = key
+    base_file = {}
+    if os.path.exists(g["baseline"]):
+        with open(g["baseline"]) as f:
+            base_file = json.load(f)
+    # gate-tuning overrides a maintainer set on the record survive a
+    # refresh (check_gate reads both from the resolved record)
+    keep = ("floor", "drop_threshold")
+    if base_file.get("host") in (None, key):
+        hosts = base_file.get("hosts", {})
+        old = base_file
+        base_file = dict(latest)
+        if hosts:
+            base_file["hosts"] = hosts
+        for k in keep:
+            if k in old:
+                base_file[k] = old[k]
+    else:
+        hosts = base_file.setdefault("hosts", {})
+        old = hosts.get(key, {})
+        hosts[key] = dict(latest)
+        for k in keep:
+            if k in old:
+                hosts[key][k] = old[k]
+    with open(g["baseline"], "w") as f:
+        json.dump(base_file, f, indent=1, default=float)
+    print(f"record[{name}]: baseline for host key {key!r} written to "
+          f"{g['baseline']}")
+    return EXIT_OK
+
+
 def combine_codes(codes) -> int:
     """Regression dominates, then usage errors, then missing artifacts."""
     for code in (EXIT_REGRESSION, EXIT_USAGE, EXIT_MISSING):
@@ -215,10 +343,12 @@ def combine_codes(codes) -> int:
     return EXIT_OK
 
 
-def write_report(path: str, records, rc: int, threshold: float) -> None:
+def write_report(path: str, records, rc: int, threshold: float, *,
+                 enforced: bool = False) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    report = {"host": socket.gethostname(), "threshold": threshold,
-              "exit_code": rc,
+    report = {"host": host_key(), "hostname": socket.gethostname(),
+              "threshold": threshold, "exit_code": rc,
+              "enforced": enforced,
               "gates": {r["gate"]: r for r in records}}
     with open(path, "w") as f:
         json.dump(report, f, indent=1, default=float)
@@ -234,19 +364,34 @@ def main(argv=None) -> int:
     ap.add_argument("--report", default=DEFAULT_REPORT,
                     help="machine-readable per-gate report path "
                          "('' disables)")
+    ap.add_argument("--enforce", action="store_true",
+                    help="fail (exit 3) instead of warning when the "
+                         "current host key has no recorded baseline "
+                         "(also via REPRO_GATE_ENFORCE=1)")
+    ap.add_argument("--record-baselines", action="store_true",
+                    help="fold the latest local results into the "
+                         "baseline files under the current host key "
+                         "instead of gating")
     args = ap.parse_args(argv)
-    codes, records = [], []
+    names = []
     for name in args.which.split(","):
         name = name.strip()
         if name not in GATES:
             print(f"gate: unknown gate '{name}'", file=sys.stderr)
             return EXIT_USAGE
-        rc, rec = check_gate(name, args.threshold)
+        names.append(name)
+    if args.record_baselines:
+        return combine_codes([record_baseline(n) for n in names])
+    enforce = enforcing(args.enforce)
+    codes, records = [], []
+    for name in names:
+        rc, rec = check_gate(name, args.threshold, enforce=enforce)
         codes.append(rc)
         records.append(rec)
     rc = combine_codes(codes)
     if args.report:
-        write_report(args.report, records, rc, args.threshold)
+        write_report(args.report, records, rc, args.threshold,
+                     enforced=enforce)
     return rc
 
 

@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: timing, CSV emission, result persistence."""
+"""Shared benchmark utilities: timing, CSV emission, result persistence.
+
+Results write to the GITIGNORED ``experiments/bench/local/`` by default —
+running a bench locally must not dirty the tree (PRs 1-4 kept rewriting
+the committed host-recorded results on every run).  Pass
+``benchmarks.run --record`` (or set ``REPRO_BENCH_RECORD=1``) to ALSO
+refresh the tracked ``experiments/bench/*.json`` record.
+"""
 from __future__ import annotations
 
 import json
@@ -10,8 +17,9 @@ from typing import Any, Callable, Dict
 import jax
 import numpy as np
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                           "bench")
+RECORD_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "bench")
+RESULTS_DIR = os.path.join(RECORD_DIR, "local")
 
 
 def bench_seed(default: int = 0) -> int:
@@ -19,6 +27,10 @@ def bench_seed(default: int = 0) -> int:
     exports it as ``REPRO_BENCH_SEED`` so every bench (including ones that
     re-exec themselves in a subprocess) draws the same fleets/batches."""
     return int(os.environ.get("REPRO_BENCH_SEED", default))
+
+
+def recording() -> bool:
+    return os.environ.get("REPRO_BENCH_RECORD", "") not in ("", "0")
 
 
 def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 10
@@ -41,11 +53,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def save_result(name: str, payload: Dict[str, Any]) -> str:
-    # baselines/floors are keyed by host (check_regression.py): an
+    # baselines/floors are keyed by host key (check_regression.py): an
     # unknown CI host then warns instead of false-failing the gates
-    payload.setdefault("host", socket.gethostname())
+    from benchmarks.check_regression import host_key
+    payload.setdefault("host", host_key())
+    payload.setdefault("hostname", socket.gethostname())
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    if recording():
+        with open(os.path.join(RECORD_DIR, f"{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float)
     return path

@@ -15,14 +15,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
                  itself into a child process to set the device count)
   compiled_loop  whole-run event-trace compiler vs the per-window fleet
                  plane loop at M=64 (docs/DESIGN.md §7)
+  sweep_plane    run-batched seeds x scenarios grid vs sequential
+                 compiled runs (docs/DESIGN.md §8)
   roofline       §Roofline table from the dry-run records
+
+Results land in the GITIGNORED ``experiments/bench/local/``; pass
+``--record`` to also refresh the tracked ``experiments/bench/*.json``
+host record (so casual local runs never dirty the tree).
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
 gated benchmark THIS invocation produced and fails on a >1.3x slowdown
-vs the committed baselines (``make bench-gate`` =
-``--only aggregation,client_plane,sharded_plane --gate``; ``make
-bench-agg`` / ``make bench-client`` / ``make bench-sharded`` run
-ungated).  Gate results also land in ``experiments/bench/
+vs the committed baselines (``make bench-gate`` runs all five gated
+benches; ``make bench-agg`` / ``make bench-client`` / ``make
+bench-sharded`` / ``make bench-compiled`` / ``make bench-sweep`` run
+ungated).  Gate results also land in ``experiments/bench/local/
 gate_report.json`` (machine-readable, one record per gate).
 
 CI-friendliness: ``--seed N`` pins every bench's fleet/batch draws
@@ -39,13 +45,15 @@ import os
 import sys
 import traceback
 
-GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop")
+GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop",
+         "sweep_plane")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
     "client_plane": "client_plane.json",
     "sharded_plane": "sharded_plane.json",
     "compiled_loop": "compiled_loop.json",
+    "sweep_plane": "sweep_plane.json",
 }
 
 
@@ -54,7 +62,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,client_plane,sharded_plane,"
-                         "compiled_loop,roofline")
+                         "compiled_loop,sweep_plane,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -65,21 +73,31 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, dest="json_path",
                     help="write every produced bench result + exit code "
                          "to this JSON file")
+    ap.add_argument("--record", action="store_true",
+                    help="also refresh the TRACKED experiments/bench/"
+                         "*.json records (default: results go only to "
+                         "the gitignored experiments/bench/local/)")
     args = ap.parse_args(argv)
     if args.seed is not None:
         # env, not a function argument: subprocess benches (sharded_plane)
         # and lazily-imported bench modules all read the same knob
         os.environ["REPRO_BENCH_SEED"] = str(args.seed)
+    if args.record:
+        os.environ["REPRO_BENCH_RECORD"] = "1"
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
-              "compiled_loop", "kernels", "convergence", "roofline"])
+              "compiled_loop", "sweep_plane", "kernels", "convergence",
+              "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
     failed = []
     for name in names:
         try:
-            if name == "fig2":
+            if name == "sweep_plane":
+                from benchmarks import bench_sweep_plane as b
+                b.main()
+            elif name == "fig2":
                 from benchmarks import bench_fig2_timing as b
                 b.main()
             elif name == "convergence":
@@ -132,7 +150,8 @@ def main(argv=None) -> int:
             from benchmarks import check_regression
             codes = []
             for g in sorted(gated_ran):
-                code, rec = check_regression.check_gate(g)
+                code, rec = check_regression.check_gate(
+                    g, enforce=check_regression.enforcing())
                 codes.append(code)
                 gate_records.append(rec)
             gate_rc = check_regression.combine_codes(codes)
@@ -142,12 +161,12 @@ def main(argv=None) -> int:
             rc = max(rc, gate_rc)
     if args.json_path:
         results = {}
+        from benchmarks.common import RESULTS_DIR
         for name in ran:
             fn = RESULT_FILES.get(name)
             if fn is None:
                 continue
-            path = os.path.join(os.path.dirname(__file__), "..",
-                                "experiments", "bench", fn)
+            path = os.path.join(RESULTS_DIR, fn)
             if os.path.exists(path):
                 with open(path) as f:
                     results[name] = json.load(f)

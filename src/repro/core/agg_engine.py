@@ -194,6 +194,27 @@ class AggEngine:
             return scale * (g_flat.astype(jnp.float32)
                             - row.astype(jnp.float32))
 
+        def blend_runs_expr(g_flats, rows, coefs):
+            """RUN-BATCHED traceable eq. (3): R independent runs' globals
+            blend against R uploaded rows in one expression — ``g_flats``
+            and ``rows`` are (R, n), ``coefs`` is (R, 2).  Per-run math is
+            elementwise-identical to :func:`blend_row_expr` (the sweep
+            plane's run-parity bound relies on this).  Kernel mode vmaps
+            the Pallas launch; XLA mode is one broadcasted FMA."""
+            if self.mode == "kernel":
+                return jax.vmap(
+                    lambda g, r, c: kern(g, r[None], c))(g_flats, rows,
+                                                         coefs)
+            acc = (coefs[:, :1] * g_flats.astype(jnp.float32)
+                   + coefs[:, 1:] * rows.astype(jnp.float32))
+            return acc.astype(self.storage_dtype)
+
+        def delta_runs_expr(g_flats, rows, scales):
+            """Run-batched FedOpt pseudo-gradients: (R, n) f32 from (R, n)
+            carries and (R,) scales."""
+            return scales[:, None] * (g_flats.astype(jnp.float32)
+                                      - rows.astype(jnp.float32))
+
         def blend_row(g_flat, fleet_buf, cid, coefs):
             """eq. (3) against row ``cid`` of the (M, n) fleet buffer."""
             row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)
@@ -211,6 +232,8 @@ class AggEngine:
         self._unflatten_expr = unflatten_expr
         self.blend_row_expr = blend_row_expr
         self.delta_row_expr = delta_row_expr
+        self.blend_runs_expr = blend_runs_expr
+        self.delta_runs_expr = delta_runs_expr
         self._flatten = jax.jit(flatten_expr)
         self._unflatten = jax.jit(unflatten_expr)
         dn = (0,) if donate else ()

@@ -165,6 +165,17 @@ class ClientPlane:
         self._train_rows = jax.jit(
             train_rows, donate_argnums=(0,) if donate else ())
 
+        # RUN-BATCHED fleet round (the sweep plane's init/broadcast path,
+        # docs/DESIGN.md §8): R independent runs' fleet-wide rounds as ONE
+        # launch over (R, n) globals and (R, M, S, ...) staged batches —
+        # vmap over the run axis of the vmapped per-client scan (jit's own
+        # cache keys the batch-tree structure/shape variants)
+        def train_all_runs_body(g_flats, batches, valid):
+            per_run = jax.vmap(scan_train, in_axes=(None, 0, 0))
+            return jax.vmap(per_run)(g_flats, batches, valid)
+
+        self._train_all_runs = jax.jit(train_all_runs_body)
+
     # -- staging ------------------------------------------------------------
     def _bucketed(self, nb: int) -> int:
         if nb <= 0:
@@ -244,6 +255,15 @@ class ClientPlane:
         vmap the scanned local SGD across all M rows — ONE launch."""
         batches, valid = self._stage_fleet(seed, local_steps_override)
         return self._train_all(g_flat, batches, valid)
+
+    def train_all_runs(self, g_flats: jnp.ndarray, batches,
+                       valid) -> jnp.ndarray:
+        """R runs' fleet-wide rounds as ONE launch: ``g_flats`` is (R, n),
+        ``batches``/``valid`` are the R runs' ``_stage_fleet`` outputs
+        stacked on a new leading run axis.  Returns the (R, M, n) stacked
+        fleet buffers.  Used by the sweep plane for batched fleet init and
+        the §III-B baseline's every-M broadcast (docs/DESIGN.md §8)."""
+        return self._train_all_runs(g_flats, batches, valid)
 
     def train_row(self, fleet_buf: jnp.ndarray, g_flat: jnp.ndarray,
                   cid: int, num_steps: int, seed: int) -> jnp.ndarray:

@@ -45,6 +45,14 @@ single-device plane ≤1e-5 at M=64 (tests/test_event_trace.py).
 ``run_afl(..., compiled_loop=True)`` / ``launch/train.py --loop
 compiled`` are the entry points; eval points and the baseline's every-M
 broadcast split the run into chunks (one extra launch per boundary).
+
+The sweep plane (``core/sweep_plane.py``, DESIGN.md §8) builds on the
+same machinery: ``compile_afl_trace(events=...)`` replays per-run
+coefficients over a SHARED scheduler simulation (runs that pin the
+device population have identical timelines), ``make_scan_step`` /
+``make_segment_fn`` grow ``run_batched=True`` twins that carry a
+leading run axis (donated whole), and ``stack_segment_inputs`` fills
+the (L, R, ...) scan inputs for R structure-matched traces in one pass.
 """
 from __future__ import annotations
 
@@ -108,12 +116,22 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
                       iterations: int, tau_u: float, tau_d: float,
                       gamma: float = 0.4, mu_momentum: float = 0.9,
                       max_staleness: Optional[int] = None,
-                      seed: int = 0) -> EventTrace:
+                      seed: int = 0,
+                      events: Optional[List[UploadEvent]] = None
+                      ) -> EventTrace:
     """Run the scheduler once on the host and precompute every scalar the
     event loop would: the timeline, the §III coefficients, the retrain
     seeds.  Mirrors ``run_afl``'s coefficient logic exactly (same float
     ops in the same order), so trace replay is bit-consistent with the
-    Python loop up to data-plane rounding."""
+    Python loop up to data-plane rounding.
+
+    ``events`` short-circuits the scheduler simulation with a
+    precomputed timeline: the event stream is a pure function of the
+    fleet's (τ_m, K_m) and (tau_u, tau_d), so runs that share the device
+    population (the sweep plane's ``Scenario.fleet_seed`` pinning,
+    DESIGN.md §8) share ONE host simulation while the per-run §III
+    coefficients (α from this run's partition sizes, staleness replay)
+    and retrain seeds are still computed per call."""
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
     if algorithm == "afl_baseline":
@@ -124,7 +142,11 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
     else:
         raise ValueError(f"unknown AFL algorithm '{algorithm}'")
     tracker = agg.StalenessTracker(momentum=mu_momentum)
-    events = sched.trace(iterations)
+    if events is None:
+        events = sched.trace(iterations)
+    elif len(events) != iterations:
+        raise ValueError(f"precomputed timeline has {len(events)} events, "
+                         f"expected {iterations}")
     betas, bcast = [], []
     for ev in events:
         if algorithm == "afl_alpha":
@@ -203,6 +225,254 @@ def group_segments(buckets: Sequence[int], *, min_run: int = 16
 
 
 # ---------------------------------------------------------------------------
+# Shared segment builders (single-run and run-batched)
+# ---------------------------------------------------------------------------
+def make_scan_step(base_engine, scan_train, s_update, server_lr: float,
+                   retrain: bool, *, run_batched: bool = False):
+    """The per-event body shared by the compiled loop and the sweep
+    plane: blend the carried global(s) against the uploader's (already
+    gathered) row(s), optionally retrain.  Returns
+    ``step(g, opt, row, cf, ev, b, sv) -> (g_new, opt_new, row_new|None)``.
+
+    With ``run_batched=True`` every array carries a leading run axis R —
+    the blend goes through the engine's run-batched expressions
+    (``blend_runs_expr`` / ``delta_runs_expr``) and the retrain vmaps the
+    plane's scanned local SGD across runs; ``ev`` stays a scalar (within
+    a structure-matched group every run pads at the same positions)."""
+    if run_batched:
+        blend = base_engine.blend_runs_expr
+        delta = base_engine.delta_runs_expr
+        train = jax.vmap(scan_train)
+    else:
+        blend = base_engine.blend_row_expr
+        delta = base_engine.delta_row_expr
+        train = scan_train
+    lr = server_lr
+
+    def step(g, opt, row, cf, ev, b, sv):
+        if s_update is None:
+            g2 = blend(g, row, cf)
+        else:
+            pg = delta(g, row, cf[..., 1])
+            g2, opt2 = s_update(g, pg, opt, lr)
+            # padded slots must not advance the optimizer state
+            g2 = jnp.where(ev, g2, g)
+            opt = jax.tree.map(
+                lambda a, o: jnp.where(ev, a, o), opt2, opt)
+        new = train(g2, b, sv) if retrain else None
+        return g2, opt, new
+
+    return step
+
+
+def make_segment_fn(step_fn, *, run_batched: bool = False):
+    """One scan segment over a trace slice as a traceable function of
+    ``(fleet_buf, g_flat, opt_state, cids, coefs, evalid, batches,
+    svalid)``.  The single-run form carries ``((M, n), (n,), opt)`` and
+    per-event xs with leading axis L; the run-batched form carries
+    ``((R, M, n), (R, n), opt)`` with xs of shape (L, R, ...) — the SAME
+    event order executes for R runs at once, and ``donate_argnums=(0, 1)``
+    on the jitted wrapper donates the whole stacked run axis."""
+    if not run_batched:
+
+        def seg(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
+                batches, svalid):
+            def step(carry, xs):
+                buf, g, opt = carry
+                cid, cf, ev, b, sv = xs
+                row = jax.lax.dynamic_slice_in_dim(buf, cid, 1, axis=0)[0]
+                g2, opt, new = step_fn(g, opt, row, cf, ev, b, sv)
+                if new is not None:
+                    new = jnp.where(ev, new.astype(buf.dtype), row)
+                    buf = jax.lax.dynamic_update_slice_in_dim(
+                        buf, new[None], cid, axis=0)
+                return (buf, g2, opt), None
+            (buf, g, opt), _ = jax.lax.scan(
+                step, (fleet_buf, g_flat, opt_state),
+                (cids, coefs, evalid, batches, svalid))
+            return buf, g, opt
+
+        return seg
+
+    gather = jax.vmap(
+        lambda bu, c: jax.lax.dynamic_slice_in_dim(bu, c, 1, axis=0)[0])
+    scatter = jax.vmap(
+        lambda bu, nr, c: jax.lax.dynamic_update_slice_in_dim(
+            bu, nr[None], c, axis=0))
+
+    def seg_runs(fleet_bufs, g_flats, opt_state, cids, coefs, evalid,
+                 batches, svalid):
+        def step(carry, xs):
+            bufs, g, opt = carry
+            cid, cf, ev, b, sv = xs
+            rows = gather(bufs, cid)
+            g2, opt, new = step_fn(g, opt, rows, cf, ev, b, sv)
+            if new is not None:
+                new = jnp.where(ev, new.astype(bufs.dtype), rows)
+                bufs = scatter(bufs, new, cid)
+            return (bufs, g2, opt), None
+        (bufs, g, opt), _ = jax.lax.scan(
+            step, (fleet_bufs, g_flats, opt_state),
+            (cids, coefs, evalid, batches, svalid))
+        return bufs, g, opt
+
+    return seg_runs
+
+
+def segment_inputs(trace: EventTrace, staged, s0: int, s1: int,
+                   s_bucket: int, *, fedopt: bool):
+    """Dense padded scan inputs for ``trace[s0:s1]`` — the host-side half
+    of one segment launch, shared by the single-run runner and the sweep
+    plane (which stacks R runs' outputs on a new axis).  Returns numpy
+    ``(cids, coefs, evalid, batches, svalid)`` with leading axis
+    ``Lb = pow2_bucket(s1 - s0)``; pad slots carry identity coefficients
+    and ``evalid=False``."""
+    from repro.core.client_plane import _pad_batches
+
+    L = s1 - s0
+    Lb = pow2_bucket(L)
+    pad = Lb - L
+    if trace.per_event_retrain:
+        trees, svalid = [], []
+        for i in range(s0, s1):
+            b, nb = staged[i]
+            trees.append(_pad_batches(b, s_bucket))
+            svalid.append(np.arange(s_bucket) < nb)
+        trees += trees[:1] * pad
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *trees)
+        svalid = np.stack(svalid + [np.zeros(s_bucket, bool)] * pad)
+    else:
+        # §III-B baseline: blends only; a zero-width step placeholder
+        # keeps the scan xs structure uniform
+        batches = np.zeros((Lb, 0), np.float32)
+        svalid = np.zeros((Lb, 0), bool)
+    cids = np.concatenate(
+        [trace.cids[s0:s1], np.zeros(pad, np.int32)])
+    betas = trace.betas[s0:s1]
+    cf0 = betas.astype(np.float32)
+    if not fedopt:
+        # mirrors run_afl: coefs = [f32(β), f32(1) − f32(β)]
+        cf1 = np.float32(1.0) - cf0
+    else:
+        # mirrors run_afl's delta path: scale = f32(1 − β)
+        cf1 = (1.0 - betas).astype(np.float32)
+    coefs = np.stack([cf0, cf1], axis=1)
+    coefs = np.concatenate(
+        [coefs, np.tile(np.asarray([[1.0, 0.0]], np.float32),
+                        (pad, 1))]).astype(np.float32)
+    evalid = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+    return cids, coefs, evalid, batches, svalid
+
+
+def stack_segment_inputs(traces: Sequence[EventTrace], stageds,
+                         s0: int, s1: int, s_bucket: int, *,
+                         fedopt: bool):
+    """Run-stacked scan inputs for R structure-matched traces: the
+    (L, R, ...) twin of :func:`segment_inputs`, filled directly into
+    preallocated arrays (one copy per event per run — no per-run
+    intermediate stacks, which would double the sweep's host time).
+    Pad events (beyond L up to the pow2 launch width) carry zero batches
+    with ``evalid=False`` — identity blends, masked-out retrains."""
+    R = len(traces)
+    L = s1 - s0
+    Lb = pow2_bucket(L)
+    retrain = traces[0].per_event_retrain
+    cids = np.zeros((Lb, R), np.int32)
+    coefs = np.empty((Lb, R, 2), np.float32)
+    coefs[L:] = (1.0, 0.0)
+    evalid = np.zeros(Lb, bool)
+    evalid[:L] = True
+    for k, trace in enumerate(traces):
+        cids[:L, k] = trace.cids[s0:s1]
+        betas = trace.betas[s0:s1]
+        cf0 = betas.astype(np.float32)
+        coefs[:L, k, 0] = cf0
+        if not fedopt:
+            # mirrors run_afl: coefs = [f32(β), f32(1) − f32(β)]
+            coefs[:L, k, 1] = np.float32(1.0) - cf0
+        else:
+            # mirrors run_afl's delta path: scale = f32(1 − β)
+            coefs[:L, k, 1] = (1.0 - betas).astype(np.float32)
+    if not retrain:
+        return (cids, coefs, evalid, np.zeros((Lb, R, 0), np.float32),
+                np.zeros((Lb, R, 0), bool))
+    first = stageds[0][s0][0]
+    if isinstance(first, np.ndarray) and first.shape[0] == s_bucket:
+        # uniform single-array staging (the dispatch-light common case:
+        # every event stages exactly s_bucket steps of one ndarray leaf):
+        # ONE C-level stack straight into the (Lb, R, ...) layout
+        # instead of L x R Python-side assignments
+        rows, uniform = [], True
+        for i in range(s0, s1):            # event-major == axis-0 order
+            for staged in stageds:
+                b, nb = staged[i]
+                if not (isinstance(b, np.ndarray)
+                        and nb == s_bucket == b.shape[0]):
+                    uniform = False
+                    break
+                rows.append(b)
+            if not uniform:
+                break
+        if uniform:
+            batches = np.zeros((Lb, R) + first.shape, first.dtype)
+            np.stack(rows, out=batches[:L].reshape((L * R,) + first.shape))
+            svalid = np.zeros((Lb, R, s_bucket), bool)
+            svalid[:L] = True
+            return cids, coefs, evalid, batches, svalid
+    leaves0, treedef = jax.tree.flatten(stageds[0][s0][0])
+    batch_arrs = [np.zeros((Lb, R, s_bucket) + np.shape(x)[1:],
+                           np.asarray(x).dtype) for x in leaves0]
+    svalid = np.zeros((Lb, R, s_bucket), bool)
+    for k, staged in enumerate(stageds):
+        for i in range(s0, s1):
+            b, nb = staged[i]
+            for arr, x in zip(batch_arrs, treedef.flatten_up_to(b)):
+                arr[i - s0, k, :nb] = x
+            svalid[i - s0, k, :nb] = True
+    batches = jax.tree.unflatten(treedef, batch_arrs)
+    return cids, coefs, evalid, batches, svalid
+
+
+def stage_trace_events(plane, trace: EventTrace, start: int = 0):
+    """Stage every event's batches once (host NumPy) and annotate the
+    trace with each event's pow2 scan-length bucket id.  Returns the
+    per-event ``(batches, num_batches)`` list (entries before ``start``
+    are None).  Shared by the compiled-loop runner and the sweep plane."""
+    staged: List[Optional[Tuple[Any, int]]] = [None] * start
+    buckets = np.zeros(len(trace), np.int32)
+    stage = plane._staged_batches
+    bucketed = plane._bucketed
+    cids, steps, seeds = trace.cids, trace.local_steps, trace.seeds
+    for i in range(start, len(trace)):
+        b = stage(int(cids[i]), int(steps[i]), int(seeds[i]))
+        # ndarray fast path: tree_leaves costs ~2us per event, which is
+        # real money at sweep scale (R x E events staged per pass)
+        nb = (b.shape[0] if isinstance(b, np.ndarray)
+              else int(jax.tree.leaves(b)[0].shape[0]))
+        staged.append((b, int(nb)))
+        buckets[i] = bucketed(nb)
+    trace.s_buckets = buckets
+    return staged
+
+
+def boundary_cuts(trace: EventTrace, *, start: int = 0,
+                  eval_every: Optional[int] = None) -> List[int]:
+    """Chunk boundaries of ``trace[start:]``: eval points (``js`` divisible
+    by ``eval_every``; None = no eval cuts) and the §III-B every-M
+    broadcasts, plus the trace end.  Shared by the compiled-loop runner
+    and the sweep plane — two runs with the same (algorithm, iterations,
+    eval cadence) cut at identical positions, which is what lets their
+    segments stack on a run axis."""
+    cuts = {len(trace)}
+    for i in range(start, len(trace)):
+        if trace.broadcast[i]:
+            cuts.add(i + 1)
+        if eval_every is not None and trace.js[i] % eval_every == 0:
+            cuts.add(i + 1)
+    return sorted(cuts)
+
+
+# ---------------------------------------------------------------------------
 # Device-side execution: segments as donated lax.scan programs
 # ---------------------------------------------------------------------------
 class CompiledLoopRunner:
@@ -267,49 +537,12 @@ class CompiledLoopRunner:
 
     # -- program builders ----------------------------------------------------
     def _scan_step(self, retrain: bool):
-        """The per-event body shared by both placements: blend the carried
-        global against the uploader's (already gathered) row, optionally
-        retrain.  Returns (g_new, row_new-or-None)."""
-        blend = self.base_engine.blend_row_expr
-        delta = self.base_engine.delta_row_expr
-        s_update, lr = self._s_update, self.server_lr
-        scan_train = self.plane._scan_train
-
-        def step(g, opt, row, cf, ev, b, sv):
-            if s_update is None:
-                g2 = blend(g, row, cf)
-            else:
-                pg = delta(g, row, cf[1])
-                g2, opt2 = s_update(g, pg, opt, lr)
-                # padded slots must not advance the optimizer state
-                g2 = jnp.where(ev, g2, g)
-                opt = jax.tree.map(
-                    lambda a, o: jnp.where(ev, a, o), opt2, opt)
-            new = scan_train(g2, b, sv) if retrain else None
-            return g2, opt, new
-        return step
+        return make_scan_step(self.base_engine, self.plane._scan_train,
+                              self._s_update, self.server_lr, retrain)
 
     def _build_prog(self, retrain: bool):
-        step_fn = self._scan_step(retrain)
+        seg = make_segment_fn(self._scan_step(retrain))
         dn = (0, 1) if self.plane.donate else ()
-
-        def seg(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
-                batches, svalid):
-            def step(carry, xs):
-                buf, g, opt = carry
-                cid, cf, ev, b, sv = xs
-                row = jax.lax.dynamic_slice_in_dim(buf, cid, 1, axis=0)[0]
-                g2, opt, new = step_fn(g, opt, row, cf, ev, b, sv)
-                if new is not None:
-                    new = jnp.where(ev, new.astype(buf.dtype), row)
-                    buf = jax.lax.dynamic_update_slice_in_dim(
-                        buf, new[None], cid, axis=0)
-                return (buf, g2, opt), None
-            (buf, g, opt), _ = jax.lax.scan(
-                step, (fleet_buf, g_flat, opt_state),
-                (cids, coefs, evalid, batches, svalid))
-            return buf, g, opt
-
         return jax.jit(seg, donate_argnums=dn)
 
     def _build_sharded_prog(self, retrain: bool, batches_proto, opt_proto):
@@ -393,59 +626,15 @@ class CompiledLoopRunner:
 
     # -- staging -------------------------------------------------------------
     def _stage_events(self, trace: EventTrace, start: int):
-        """Stage every event's batches once (host NumPy) and annotate the
-        trace with each event's pow2 scan-length bucket id."""
-        plane = self.plane
-        staged: List[Tuple[Any, int]] = [None] * start
-        buckets = np.zeros(len(trace), np.int32)
-        for i in range(start, len(trace)):
-            b = plane._staged_batches(int(trace.cids[i]),
-                                      int(trace.local_steps[i]),
-                                      int(trace.seeds[i]))
-            nb = int(jax.tree.leaves(b)[0].shape[0])
-            staged.append((b, nb))
-            buckets[i] = plane._bucketed(nb)
-        trace.s_buckets = buckets
-        return staged
+        return stage_trace_events(self.plane, trace, start)
 
     # -- execution -----------------------------------------------------------
     def _run_segment(self, trace, staged, s0, s1, s_bucket,
                      fleet_buf, g_flat, opt_state):
-        from repro.core.client_plane import _pad_batches
-
-        L = s1 - s0
-        Lb = pow2_bucket(L)
-        pad = Lb - L
         retrain = trace.per_event_retrain
-        if retrain:
-            trees, svalid = [], []
-            for i in range(s0, s1):
-                b, nb = staged[i]
-                trees.append(_pad_batches(b, s_bucket))
-                svalid.append(np.arange(s_bucket) < nb)
-            trees += trees[:1] * pad
-            batches = jax.tree.map(lambda *xs: np.stack(xs), *trees)
-            svalid = np.stack(svalid + [np.zeros(s_bucket, bool)] * pad)
-        else:
-            # §III-B baseline: blends only; a zero-width step placeholder
-            # keeps the scan xs structure uniform
-            batches = np.zeros((Lb, 0), np.float32)
-            svalid = np.zeros((Lb, 0), bool)
-        cids = np.concatenate(
-            [trace.cids[s0:s1], np.zeros(pad, np.int32)])
-        betas = trace.betas[s0:s1]
-        cf0 = betas.astype(np.float32)
-        if self._s_update is None:
-            # mirrors run_afl: coefs = [f32(β), f32(1) − f32(β)]
-            cf1 = np.float32(1.0) - cf0
-        else:
-            # mirrors run_afl's delta path: scale = f32(1 − β)
-            cf1 = (1.0 - betas).astype(np.float32)
-        coefs = np.stack([cf0, cf1], axis=1)
-        coefs = np.concatenate(
-            [coefs, np.tile(np.asarray([[1.0, 0.0]], np.float32),
-                            (pad, 1))]).astype(np.float32)
-        evalid = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+        cids, coefs, evalid, batches, svalid = segment_inputs(
+            trace, staged, s0, s1, s_bucket,
+            fedopt=self._s_update is not None)
         prog = self._prog_for(retrain, batches, opt_state)
         self.launches += 1
         self.segments += 1
@@ -470,14 +659,11 @@ class CompiledLoopRunner:
         else:
             staged = None
             trace.s_buckets = np.zeros(E, np.int32)
-        cuts = {E}
-        for i in range(start, E):
-            if trace.broadcast[i]:
-                cuts.add(i + 1)
-            if eval_fn is not None and trace.js[i] % eval_every == 0:
-                cuts.add(i + 1)
+        cuts = boundary_cuts(
+            trace, start=start,
+            eval_every=eval_every if eval_fn is not None else None)
         a = start
-        for b in sorted(cuts):
+        for b in cuts:
             if b <= a:
                 continue
             for s0, s1, bucket in group_segments(

@@ -1,0 +1,493 @@
+"""Batched sweep plane — vmap the compiled AFL loop across seed x
+scenario grids (docs/DESIGN.md §8).
+
+The paper's central claim is empirical: CSMAAFL "converges with a
+similar level of accuracy as the classical synchronous algorithm ... in
+various scenarios".  Reproducing a Fig.-2-style convergence grid means
+R = seeds x scenarios end-to-end runs; PR 4 made ONE run a handful of
+donated ``lax.scan`` launches (``core/event_trace.py``), but a grid
+still paid a slow host-side loop over R compiled runs.  This module
+batches *runs themselves* into the device:
+
+* :class:`Scenario` describes one experimental condition — the fleet's
+  compute-speed distribution (τ, heterogeneity a, adaptive-K policy),
+  channel times, the aggregation variant (``afl_alpha`` /
+  ``afl_baseline`` / ``csmaafl``) and its γ / staleness cap, the data
+  partitioner (paper IID / label shards / Dirichlet skew via the
+  ``data.federated`` registry) and per-client batch sizes.  Scenarios
+  self-register in a registry so sweep grids can name them by string
+  (``experiments/sweeps/*.json``).
+* :func:`build_task_runs` lowers (scenario, seed) pairs into
+  :class:`SweepRun`\\ s: per run, the task's dataset is re-partitioned,
+  a fleet is drawn, a client plane is bound to the partition, and
+  ``compile_afl_trace`` precomputes the whole timeline on the host.
+* :class:`SweepRunner` stacks runs whose trace STRUCTURE matches —
+  same cut points, same segment/bucket plan, same staged-batch shapes —
+  onto a new leading run axis and executes each segment as ONE jitted,
+  run-axis-donated ``lax.scan`` over ``(fleet_bufs (R, M, n),
+  g_flats (R, n), opt_state)``: the blends go through the engine's
+  run-batched expressions (``blend_runs_expr``), retrains vmap the
+  plane's scanned local SGD across runs, fleet init / §III-B broadcasts
+  go through ``ClientPlane.train_all_runs``, and eval points evaluate
+  the whole group's globals in one vmapped launch.  Runs with divergent
+  structure (e.g. adaptive-K fleets whose bucket sequences differ) fall
+  back to smaller groups — same code path, smaller R — and
+  ``sub_batch`` caps the runs per program for memory.
+
+A 12-run grid therefore executes in ≤ ceil(R / sub_batch) x
+(#buckets + 2) launches instead of R x that, with per-run history
+parity ≤ 1e-5 against R individual ``compiled_loop=True`` runs
+(tests/test_sweep_plane.py; ``benchmarks/bench_sweep_plane.py`` gates
+the aggregate events/s win).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import event_trace as et
+from repro.core.agg_engine import pow2_bucket
+from repro.core.scheduler import ClientSpec, make_fleet
+from repro.core.sfl import FLHistory
+
+
+# ---------------------------------------------------------------------------
+# Scenarios and their registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Scenario:
+    """One experimental condition of the paper's evaluation grid.
+
+    Everything the AFL control plane varies across the figures lives
+    here; the task (model, dataset, learning rate) stays fixed across a
+    sweep — that shared structure is what lets runs batch onto one
+    device program.  ``partition_kw`` is forwarded to the named
+    partitioner from ``data.federated.PARTITIONERS``.
+    """
+
+    name: str
+    algorithm: str = "csmaafl"          # afl_alpha | afl_baseline | csmaafl
+    tau: float = 1.0                    # fastest client's compute time
+    hetero_a: float = 4.0               # slowest = a * tau
+    adaptive: bool = False              # §III-C adaptive local iterations
+    local_steps: int = 1                # base K
+    max_steps: int = 8                  # adaptive clamp
+    batch_size: Optional[int] = None    # uniform per-client B_m override
+    tau_u: float = 0.1
+    tau_d: float = 0.1
+    gamma: float = 0.4                  # eq. (11) mixing weight
+    mu_momentum: float = 0.9
+    max_staleness: Optional[int] = None
+    partitioner: str = "iid"
+    partition_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # pin the DEVICE POPULATION across the scenario's seeds: with a
+    # fleet_seed the per-run seed varies only the data partition, batch
+    # draws and model init — the τ_m / K_m draw (and therefore the whole
+    # upload timeline) is shared, which isolates data randomness from
+    # fleet randomness in the figures AND lets the sweep plane compile
+    # the scheduler simulation once per scenario instead of once per run
+    fleet_seed: Optional[int] = None
+
+    def make_fleet(self, samples_per_client: Sequence[int],
+                   seed: int) -> List[ClientSpec]:
+        M = len(samples_per_client)
+        sizes = (None if self.batch_size is None
+                 else [int(self.batch_size)] * M)
+        fseed = seed if self.fleet_seed is None else self.fleet_seed
+        return make_fleet(M, tau=self.tau, hetero_a=self.hetero_a,
+                          samples_per_client=samples_per_client,
+                          adaptive=self.adaptive,
+                          base_local_steps=self.local_steps,
+                          max_steps=self.max_steps, seed=fseed,
+                          batch_sizes=sizes)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario '{name}' — registered: "
+                       f"{sorted(SCENARIOS)}") from None
+
+
+def resolve_scenario(entry) -> Scenario:
+    """A grid entry is a registered name, or a dict overriding a
+    registered base (``{"name": "paper_iid", "gamma": 0.6}``), or a
+    fully inline dict defining a new scenario."""
+    if isinstance(entry, Scenario):
+        return entry
+    if isinstance(entry, str):
+        return get_scenario(entry)
+    if not isinstance(entry, dict) or "name" not in entry:
+        raise ValueError(f"scenario entry must be a name or a dict with "
+                         f"'name', got {entry!r}")
+    base = SCENARIOS.get(entry["name"])
+    fields = {f.name for f in dataclasses.fields(Scenario)}
+    unknown = set(entry) - fields
+    if unknown:
+        raise ValueError(f"unknown Scenario field(s) {sorted(unknown)}")
+    if base is None:
+        return Scenario(**entry)
+    return dataclasses.replace(base, **entry)
+
+
+# the paper-grid builtins: IID vs the two non-IID partitions, the
+# channel-bound regime, the adaptive-K policy, and the §III-B baseline
+register_scenario(Scenario("paper_iid"))
+register_scenario(Scenario("paper_noniid", partitioner="label",
+                           partition_kw={"classes_per_client": 2}))
+register_scenario(Scenario("dirichlet_skew", partitioner="dirichlet",
+                           partition_kw={"alpha": 0.5,
+                                         "min_per_client": 8}))
+register_scenario(Scenario("uplink_bound", tau_u=0.4, tau_d=0.05))
+register_scenario(Scenario("adaptive_k", adaptive=True, max_steps=4))
+register_scenario(Scenario("baseline_cycle", algorithm="afl_baseline"))
+
+
+# ---------------------------------------------------------------------------
+# Runs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepRun:
+    """One (scenario, seed) cell of the grid, compiled and bound.
+
+    ``plane`` is a single-device :class:`~repro.core.client_plane.
+    ClientPlane` over this run's fleet + partition; ``trace`` the
+    host-compiled timeline; ``g0_flat`` the run's initial global flat
+    model.  The runner fills the staging/plan fields and, after
+    execution, ``history`` / ``params`` / ``g_final``.
+    """
+
+    scenario: Scenario
+    seed: int
+    plane: Any
+    trace: et.EventTrace
+    g0_flat: Any
+    label: str = ""
+    # runner-filled:
+    staged: Any = None
+    cuts: Any = None
+    plan: Any = None
+    init_staged: Any = None
+    bcast_staged: Any = None
+    history: Optional[FLHistory] = None
+    g_final: Any = None
+    params: Any = None
+
+
+def build_task_runs(task, scenarios: Sequence, seeds: Sequence[int], *,
+                    iterations: int, plane_kw: Optional[dict] = None
+                    ) -> List[SweepRun]:
+    """Lower a scenarios x seeds grid into compiled :class:`SweepRun`\\ s
+    for a task exposing ``scenario_clients`` / ``client_plane(clients=)``
+    / ``init_params`` (``CNNTask`` does).  The seed drives the
+    partition, the fleet draw, the initial model and the trace's retrain
+    seeds — exactly what an individual ``run_afl(..., seed=seed)`` call
+    would use, so sweep-vs-solo parity is per-cell exact."""
+    runs = []
+    for entry in scenarios:
+        sc = resolve_scenario(entry)
+        # with a pinned fleet_seed every seed of this scenario shares the
+        # upload timeline — simulate the scheduler once and replay only
+        # the per-run coefficients (compile_afl_trace's ``events`` path)
+        shared_events = None
+        for seed in seeds:
+            clients = task.scenario_clients(sc.partitioner, seed=seed,
+                                            **sc.partition_kw)
+            fleet = sc.make_fleet([c.num_samples for c in clients], seed)
+            plane = task.client_plane(fleet, clients=clients,
+                                      **(plane_kw or {}))
+            trace = et.compile_afl_trace(
+                fleet, algorithm=sc.algorithm, iterations=iterations,
+                tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
+                mu_momentum=sc.mu_momentum,
+                max_staleness=sc.max_staleness, seed=seed,
+                events=shared_events)
+            if sc.fleet_seed is not None:
+                shared_events = trace.events
+            g0 = plane.engine.flatten(task.init_params(seed))
+            runs.append(SweepRun(sc, seed, plane, trace, g0,
+                                 label=f"{sc.name}/s{seed}"))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# The runner: structure-grouped, run-axis-batched execution
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepResult:
+    runs: List[SweepRun]
+    params: List[Any]
+    histories: List[FLHistory]
+    stats: Dict[str, int]
+
+    def run_index(self) -> Dict[Tuple[str, int], int]:
+        return {(r.scenario.name, r.seed): i
+                for i, r in enumerate(self.runs)}
+
+
+class SweepRunner:
+    """Execute a list of :class:`SweepRun`\\ s as run-batched device
+    programs.
+
+    Runs are grouped by trace STRUCTURE (cut points + segment plan +
+    staged shapes — see :meth:`_structure_key`); each group executes its
+    shared launch sequence once with every array carrying a leading run
+    axis, donated across segments.  Instrumentation mirrors the
+    compiled-loop runner: ``launches`` counts jitted program invocations
+    (init + segments + broadcasts; eval launches are tallied separately
+    in ``eval_launches``), ``segments`` the scan segments, ``groups`` /
+    ``group_sizes`` the structure partition, and :meth:`variants` the
+    traced program variants across the planes' shared caches.
+
+    Requirements: all runs share the task (same step math, same engine
+    layout) — asserted structurally; sharded planes are not supported
+    (the sweep batches RUNS, the fleet mesh batches ROWS — composing the
+    two is a ROADMAP follow-up).
+    """
+
+    def __init__(self, runs: Sequence[SweepRun], *,
+                 server_opt: Optional[str] = None, server_lr: float = 1.0,
+                 eval_flat=None, eval_every: int = 10,
+                 sub_batch: Optional[int] = None, min_run: int = 16):
+        if not runs:
+            raise ValueError("sweep needs at least one run")
+        self.runs = list(runs)
+        p0 = self.runs[0].plane
+        e0 = getattr(p0.engine, "base", p0.engine)
+        for r in self.runs:
+            if getattr(r.plane, "mesh", None) is not None:
+                raise NotImplementedError(
+                    "sweep plane batches runs on a single device; use the "
+                    "fleet mesh (ShardedClientPlane) for one big run or "
+                    "the sweep for many small ones")
+            eng = getattr(r.plane.engine, "base", r.plane.engine)
+            if (r.plane.M, eng.n, eng.storage_dtype, eng.mode) != \
+                    (p0.M, e0.n, e0.storage_dtype, e0.mode):
+                raise ValueError(
+                    f"run {r.label!r} does not share the sweep's fleet "
+                    "size / engine layout — all runs must come from the "
+                    "same task")
+        self.server_opt = server_opt
+        self.server_lr = float(server_lr)
+        self._s_init = self._s_update = None
+        if server_opt is not None:
+            from repro.optim import optimizers as _opt
+            self._s_init, self._s_update = _opt.get_optimizer(server_opt)
+        self.eval_flat = eval_flat
+        self.eval_every = eval_every
+        self._eval_prog = (None if eval_flat is None
+                           else jax.jit(jax.vmap(eval_flat)))
+        self.sub_batch = sub_batch
+        self.min_run = min_run
+        self.launches = 0
+        self.segments = 0
+        self.eval_launches = 0
+        self.groups = 0
+        self.group_sizes: List[int] = []
+
+    # -- instrumentation -----------------------------------------------------
+    def variants(self) -> int:
+        progs, seen, total = [], set(), 0
+        for r in self.runs:
+            progs += list(r.plane.__dict__.get("_sweep_progs", {}).values())
+            progs.append(r.plane._train_all_runs)
+        if self._eval_prog is not None:
+            progs.append(self._eval_prog)
+        for p in progs:
+            if id(p) in seen:
+                continue
+            seen.add(id(p))
+            size = getattr(p, "_cache_size", None)
+            total += int(size()) if callable(size) else 1
+        return total
+
+    # -- preparation ---------------------------------------------------------
+    def _prepare(self, run: SweepRun) -> None:
+        trace, plane = run.trace, run.plane
+        if trace.per_event_retrain:
+            run.staged = et.stage_trace_events(plane, trace)
+        else:
+            run.staged = None
+            trace.s_buckets = np.zeros(len(trace), np.int32)
+        run.cuts = tuple(et.boundary_cuts(
+            trace,
+            eval_every=self.eval_every if self.eval_flat is not None
+            else None))
+        plan, a = [], 0
+        for b in run.cuts:
+            if b <= a:
+                continue
+            segs = et.group_segments(trace.s_buckets[a:b],
+                                     min_run=self.min_run)
+            plan.append((a, b, tuple((a + s0, a + s1, bk)
+                                     for s0, s1, bk in segs)))
+            a = b
+        run.plan = tuple(plan)
+        run.init_staged = plane._stage_fleet(run.seed * 100003)
+        run.bcast_staged = {
+            int(i): plane._stage_fleet(int(trace.seeds[i]))
+            for i in np.nonzero(trace.broadcast)[0]}
+        run.history = FLHistory()
+
+    @staticmethod
+    def _tree_sig(tree, *, lead_axes: int) -> tuple:
+        leaves, treedef = jax.tree.flatten(tree)
+        return (treedef, tuple(
+            (tuple(np.shape(x)[lead_axes:]), str(np.asarray(x).dtype))
+            for x in leaves))
+
+    def _structure_key(self, run: SweepRun) -> tuple:
+        """Everything that fixes the group's launch sequence and program
+        shapes.  Two runs with equal keys execute the same segments with
+        the same padded shapes — only the DATA (cids, coefficients,
+        batches, init globals) differs, so they stack on a run axis."""
+        trace, plane = run.trace, run.plane
+        eng = getattr(plane.engine, "base", plane.engine)
+        seg_sigs = []
+        for _a, _b, segs in run.plan:
+            for s0, s1, bk in segs:
+                if trace.per_event_retrain:
+                    batch_sig = self._tree_sig(run.staged[s0][0],
+                                               lead_axes=1)
+                else:
+                    batch_sig = None
+                seg_sigs.append((s0, s1, bk, pow2_bucket(s1 - s0),
+                                 batch_sig))
+        return (plane.M, eng.n, str(eng.storage_dtype), eng.mode,
+                trace.per_event_retrain, run.cuts,
+                tuple(sorted(run.bcast_staged)),
+                self._tree_sig(run.init_staged, lead_axes=0),
+                tuple(seg_sigs))
+
+    # -- programs ------------------------------------------------------------
+    def _seg_prog(self, plane, retrain: bool):
+        # cached ON the group's plane (like the compiled-loop programs),
+        # so a rebuilt runner over the same planes reuses compiled code
+        cache = plane.__dict__.setdefault("_sweep_progs", {})
+        key = ("seg-runs", retrain, self.server_opt, self.server_lr)
+        prog = cache.get(key)
+        if prog is None:
+            base = getattr(plane.engine, "base", plane.engine)
+            step = et.make_scan_step(base, plane._scan_train,
+                                     self._s_update, self.server_lr,
+                                     retrain, run_batched=True)
+            seg = et.make_segment_fn(step, run_batched=True)
+            dn = (0, 1) if plane.donate else ()
+            prog = jax.jit(seg, donate_argnums=dn)
+            cache[key] = prog
+        return prog
+
+    # -- execution -----------------------------------------------------------
+    def _record_eval(self, runs_g: List[SweepRun], g,
+                     i: Optional[int] = None) -> None:
+        out = self._eval_prog(g)                  # dict of (Rg,) arrays
+        self.eval_launches += 1
+        vals = {k: np.asarray(v, np.float32) for k, v in out.items()}
+        for k, r in enumerate(runs_g):
+            m = {key: float(v[k]) for key, v in vals.items()}
+            if i is None:
+                r.history.add(0.0, 0, m)
+            else:
+                r.history.add(float(r.trace.t_complete[i]),
+                              int(r.trace.js[i]), m)
+
+    def _execute(self, runs_g: List[SweepRun]) -> None:
+        plane = runs_g[0].plane
+        trace0 = runs_g[0].trace
+        retrain = trace0.per_event_retrain
+        fedopt = self._s_update is not None
+        g = jnp.stack([jnp.asarray(r.g0_flat) for r in runs_g])
+        opt = self._s_init(g) if fedopt else ()
+        if self.eval_flat is not None:
+            # the t=0 point evaluates the runs' initial models, exactly
+            # as run_afl records eval_fn(params0) before any event
+            self._record_eval(runs_g, g)
+        init_b = jax.tree.map(lambda *xs: np.stack(xs),
+                              *[r.init_staged[0] for r in runs_g])
+        init_v = np.stack([r.init_staged[1] for r in runs_g])
+        bufs = plane.train_all_runs(g, init_b, init_v)
+        self.launches += 1
+        traces = [r.trace for r in runs_g]
+        stageds = [r.staged for r in runs_g]
+        for a, b, segs in runs_g[0].plan:
+            for s0, s1, bucket in segs:
+                cids, coefs, evalid, batches, svalid = \
+                    et.stack_segment_inputs(traces, stageds, s0, s1,
+                                            bucket, fedopt=fedopt)
+                prog = self._seg_prog(plane, retrain)
+                bufs, g, opt = prog(bufs, g, opt, cids, coefs, evalid,
+                                    batches, svalid)
+                self.launches += 1
+                self.segments += 1
+            i = b - 1
+            if trace0.broadcast[i]:
+                bb = jax.tree.map(lambda *xs: np.stack(xs),
+                                  *[r.bcast_staged[i][0] for r in runs_g])
+                bv = np.stack([r.bcast_staged[i][1] for r in runs_g])
+                bufs = plane.train_all_runs(g, bb, bv)
+                self.launches += 1
+            if self.eval_flat is not None and \
+                    trace0.js[i] % self.eval_every == 0:
+                self._record_eval(runs_g, g, i)
+        for k, r in enumerate(runs_g):
+            r.g_final = g[k]
+            r.params = plane.engine.unflatten(g[k])
+
+    def run(self) -> SweepResult:
+        self.launches = self.segments = self.eval_launches = 0
+        for r in self.runs:
+            self._prepare(r)
+        groups: List[List[int]] = []
+        index: Dict[tuple, int] = {}
+        for i, r in enumerate(self.runs):
+            k = self._structure_key(r)
+            if k in index:
+                groups[index[k]].append(i)
+            else:
+                index[k] = len(groups)
+                groups.append([i])
+        self.groups = len(groups)
+        self.group_sizes = [len(g) for g in groups]
+        for ids in groups:
+            sub = self.sub_batch or len(ids)
+            for j in range(0, len(ids), sub):
+                self._execute([self.runs[i] for i in ids[j:j + sub]])
+        stats = {"launches": self.launches, "segments": self.segments,
+                 "eval_launches": self.eval_launches,
+                 "groups": self.groups, "runs": len(self.runs),
+                 "variants": self.variants()}
+        return SweepResult(self.runs, [r.params for r in self.runs],
+                           [r.history for r in self.runs], stats)
+
+
+def run_sweep(task, scenarios: Sequence, seeds: Sequence[int], *,
+              iterations: int, eval_every: int = 10, with_eval: bool = True,
+              sub_batch: Optional[int] = None,
+              server_opt: Optional[str] = None, server_lr: float = 1.0
+              ) -> SweepResult:
+    """One-call grid execution: build the runs, bind the task's flat
+    eval, run the batched plane.  The convenience wrapper behind
+    ``launch/train.py --sweep`` and the nightly smoke."""
+    runs = build_task_runs(task, scenarios, seeds, iterations=iterations)
+    eval_flat = (task.eval_flat_fn(runs[0].plane.engine)
+                 if with_eval else None)
+    runner = SweepRunner(runs, eval_flat=eval_flat, eval_every=eval_every,
+                         sub_batch=sub_batch, server_opt=server_opt,
+                         server_lr=server_lr)
+    return runner.run()

@@ -52,11 +52,12 @@ class CNNTask:
         self._batch_size_by_cid: Dict[int, int] = {}
         self.local_batches = local_batches_per_step
         ds = make_dataset(variant, train_n=train_n, test_n=test_n, seed=seed)
-        if iid:
-            parts = fd.partition_iid(ds.train_y, num_clients, seed=seed)
-        else:
-            parts = fd.partition_label(ds.train_y, num_clients,
-                                       classes_per_client=2, seed=seed)
+        # the raw (host) arrays stay around so scenario sweeps can re-
+        # partition the SAME dataset per scenario (``scenario_clients``)
+        self._train_x_np, self._train_y_np = ds.train_x, ds.train_y
+        parts = fd.partition("iid" if iid else "label", ds.train_y,
+                             num_clients, seed=seed,
+                             **({} if iid else {"classes_per_client": 2}))
         self.clients = fd.make_clients(ds.train_x, ds.train_y, parts)
         # the WHOLE training set lives on device once; minibatches are
         # gathered by index inside the jitted step (no per-minibatch
@@ -88,15 +89,35 @@ class CNNTask:
     def num_samples(self) -> List[int]:
         return [c.num_samples for c in self.clients]
 
+    def scenario_clients(self, partitioner: str, seed: int = 0,
+                         **kw) -> List[fd.ClientDataset]:
+        """Re-partition the task's dataset through the partitioner
+        registry (``data.federated.PARTITIONERS``) — the sweep plane
+        builds one shard set per (scenario, seed) over the SAME staged
+        dataset, so R runs cost one device copy of the images."""
+        parts = fd.partition(partitioner, self._train_y_np,
+                             len(self.clients), seed=seed, **kw)
+        return fd.make_clients(self._train_x_np, self._train_y_np, parts)
+
+    def _batch_indices_fn(self, clients):
+        """``batch_fn`` bound to an explicit shard set (scenario sweeps
+        pass per-scenario partitions; the default path uses
+        ``self.clients``)."""
+
+        def batch_fn(cid: int, num_steps: int, seed: int) -> np.ndarray:
+            client = clients[cid]
+            bs = self._batch_size_by_cid.get(cid, self.batch_size)
+            local = client.batch_indices(
+                bs, num_steps * self.local_batches, seed)
+            return client.indices[local].astype(np.int32)
+
+        return batch_fn
+
     def _global_batch_indices(self, cid: int, num_steps: int, seed: int
                               ) -> np.ndarray:
         """(num_batches, B_cid) indices into the staged full training
         set; B_cid honors a per-client ``ClientSpec.batch_size``."""
-        client = self.clients[cid]
-        bs = self._batch_size_by_cid.get(cid, self.batch_size)
-        local = client.batch_indices(
-            bs, num_steps * self.local_batches, seed)
-        return client.indices[local].astype(np.int32)
+        return self._batch_indices_fn(self.clients)(cid, num_steps, seed)
 
     def local_train_fn(self, params, cid: int, num_steps: int, seed: int):
         """K "local iterations"; each = ``local_batches`` SGD minibatches
@@ -108,11 +129,14 @@ class CNNTask:
             params, _ = self._sgd_step(params, row)
         return params
 
-    def client_plane(self, fleet, *, sharded: bool = False, **plane_kw):
+    def client_plane(self, fleet, *, sharded: bool = False, clients=None,
+                     **plane_kw):
         """Fused fleet plane: grad against the flat parameter vector via
         the engine's cached unflatten expression; batches staged as
         index arrays (the image gather happens on device inside scan).
-        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6).
+        ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6);
+        ``clients`` overrides the shard set (scenario sweeps pass the
+        per-scenario partition from ``scenario_clients``).
 
         Fleets declaring per-client ``ClientSpec.batch_size`` get the
         plane's sample-axis padding (§4): each scan step then receives
@@ -162,11 +186,25 @@ class CNNTask:
         step_fn.supports_sample_mask = True
 
         cls = ShardedClientPlane if sharded else ClientPlane
-        return cls(engine, fleet, step_fn,
-                   self._global_batch_indices, **plane_kw)
+        batch_fn = (self._global_batch_indices if clients is None
+                    else self._batch_indices_fn(clients))
+        return cls(engine, fleet, step_fn, batch_fn, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"accuracy": float(self._eval(params))}
+
+    def eval_flat_fn(self, engine):
+        """Traceable eval against the FLAT parameter vector — the sweep
+        plane vmaps it across a run group's stacked (R, n) globals so a
+        grid's eval points are one launch each (DESIGN.md §8)."""
+        unflatten = engine.unflatten_expr
+        test_x, test_y = self.test_x, self.test_y
+
+        def eval_flat(g_flat):
+            return {"accuracy": cnn_mod.accuracy(unflatten(g_flat),
+                                                 test_x, test_y)}
+
+        return eval_flat
 
 
 # ---------------------------------------------------------------------------

@@ -9,13 +9,44 @@
 Each partitioner returns ``List[np.ndarray]`` of sample indices per client.
 ``ClientDataset`` wraps one shard with an infinite batch iterator keyed by
 a seed so local training is reproducible.
+
+Partitioners self-register in the ``PARTITIONERS`` registry so scenario
+configs (``core/sweep_plane.py``, DESIGN.md §8) can name them by string —
+``get_partitioner("dirichlet")`` / ``partition("label", labels, M,
+seed=3, classes_per_client=2)``; extensions register theirs with
+:func:`register_partitioner`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Callable, Dict, List, Sequence
 
 import numpy as np
+
+PartitionFn = Callable[..., List[np.ndarray]]
+PARTITIONERS: Dict[str, PartitionFn] = {}
+
+
+def register_partitioner(name: str, fn: PartitionFn) -> PartitionFn:
+    """Register a partitioner under ``name`` (last registration wins, so
+    downstream code can override a builtin in tests)."""
+    PARTITIONERS[name] = fn
+    return fn
+
+
+def get_partitioner(name: str) -> PartitionFn:
+    try:
+        return PARTITIONERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown partitioner '{name}' — registered: "
+            f"{sorted(PARTITIONERS)}") from None
+
+
+def partition(name: str, labels: np.ndarray, num_clients: int, *,
+              seed: int = 0, **kw) -> List[np.ndarray]:
+    """Registry-driven dispatch: ``partition("dirichlet", y, M, alpha=.5)``."""
+    return get_partitioner(name)(labels, num_clients, seed=seed, **kw)
 
 
 def partition_iid(labels: np.ndarray, num_clients: int, *, seed: int = 0
@@ -42,8 +73,13 @@ def partition_label(labels: np.ndarray, num_clients: int, *,
 
 
 def partition_dirichlet(labels: np.ndarray, num_clients: int, *,
-                        alpha: float = 0.5, seed: int = 0
-                        ) -> List[np.ndarray]:
+                        alpha: float = 0.5, seed: int = 0,
+                        min_per_client: int = 0) -> List[np.ndarray]:
+    """Dir(α) label skew.  ``min_per_client`` > 0 rebalances after the
+    draw — clients left below the minimum (heavy skew + small datasets
+    starve some draws entirely) take samples from the richest clients,
+    deterministically, so downstream batch staging never sees an empty
+    shard."""
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     buckets: List[List[int]] = [[] for _ in range(num_clients)]
@@ -54,7 +90,22 @@ def partition_dirichlet(labels: np.ndarray, num_clients: int, *,
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for cid, chunk in enumerate(np.split(idx, cuts)):
             buckets[cid].extend(chunk.tolist())
+    if min_per_client > 0:
+        if min_per_client * num_clients > len(labels):
+            raise ValueError(
+                f"min_per_client={min_per_client} x {num_clients} clients "
+                f"exceeds the {len(labels)}-sample dataset")
+        for cid in range(num_clients):
+            while len(buckets[cid]) < min_per_client:
+                donor = max(range(num_clients),
+                            key=lambda c: len(buckets[c]))
+                buckets[cid].append(buckets[donor].pop())
     return [np.sort(np.asarray(b, np.int64)) for b in buckets]
+
+
+register_partitioner("iid", partition_iid)
+register_partitioner("label", partition_label)
+register_partitioner("dirichlet", partition_dirichlet)
 
 
 @dataclasses.dataclass

@@ -21,10 +21,19 @@ every blend is row-addressed — the event loop is ``core.afl.run_afl``.
 
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen2-0.5b --reduced --steps 40 --data-plane fleet
+
+``--sweep grid.json`` runs a whole seeds x scenarios convergence grid
+through the batched sweep plane (DESIGN.md §8) — R compiled AFL
+timelines stacked on a run axis and executed as a handful of
+run-batched donated scans, with per-run eval curves written as JSON:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --sweep experiments/sweeps/paper_grid.json --check-parity 3
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import List
 
@@ -130,6 +139,110 @@ def run_fleet_plane(cfg, args, params) -> None:
             print("AFL device state saved to", args.save + ".state")
 
 
+def run_sweep_grid(args) -> None:
+    """``--sweep grid.json``: execute a seeds x scenarios convergence
+    grid through the run-batched sweep plane (core/sweep_plane.py,
+    DESIGN.md §8) and write the per-run convergence curves as JSON.
+
+    The grid config names registered scenarios (or inline overrides) and
+    the CNN task geometry; ``--check-parity N`` re-runs N grid cells as
+    individual ``compiled_loop=True`` runs and fails on >1e-5 history
+    drift — the nightly CI workflow runs this as its parity gate."""
+    import json
+    import socket
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core import sweep_plane as sp
+    from repro.core.afl import run_afl
+    from repro.core.tasks import CNNTask
+
+    with open(args.sweep) as f:
+        cfg = json.load(f)
+    tcfg = cfg.get("task", {})
+    if tcfg.get("type", "cnn") != "cnn":
+        raise SystemExit("--sweep drives the paper CNN task "
+                         "(task.type = 'cnn')")
+    cnn_cfg = CNNConfig(**tcfg["cnn"]) if "cnn" in tcfg else None
+    task = CNNTask(iid=True, num_clients=tcfg.get("M", 64),
+                   train_n=tcfg.get("train_n", 4096),
+                   test_n=tcfg.get("test_n", 256),
+                   batch_size=tcfg.get("batch_size", 1),
+                   local_batches_per_step=tcfg.get("local_batches", 2),
+                   lr=tcfg.get("lr", 0.01), cnn_cfg=cnn_cfg,
+                   seed=tcfg.get("seed", 0))
+    scenarios = [sp.resolve_scenario(e) for e in cfg["scenarios"]]
+    seeds = list(cfg.get("seeds", [0]))
+    iterations = int(cfg.get("iterations", 64))
+    eval_every = int(cfg.get("eval_every", 10))
+    print(f"sweep: {len(scenarios)} scenario(s) x {len(seeds)} seed(s) "
+          f"= {len(scenarios) * len(seeds)} runs, M={len(task.clients)}, "
+          f"{iterations} events each")
+    t0 = time.time()
+    res = sp.run_sweep(task, scenarios, seeds, iterations=iterations,
+                       eval_every=eval_every,
+                       sub_batch=cfg.get("sub_batch"),
+                       server_opt=cfg.get("server_opt"),
+                       server_lr=cfg.get("server_lr", 1.0))
+    wall = time.time() - t0
+    print(f"sweep: {res.stats['launches']} launches "
+          f"({res.stats['segments']} segments, {res.stats['groups']} "
+          f"group(s), {res.stats['eval_launches']} eval launches) "
+          f"in {wall:.1f}s")
+    for r in res.runs:
+        final = r.history.metrics[-1] if r.history.metrics else {}
+        print(f"  {r.label:24s} " + " ".join(
+            f"{k}={v:.4f}" for k, v in final.items()))
+
+    worst_parity = None
+    if args.check_parity:
+        n = min(args.check_parity, len(res.runs))
+        picks = sorted({int(round(i * (len(res.runs) - 1)
+                                  / max(n - 1, 1))) for i in range(n)})
+        worst_parity = 0.0
+        for i in picks:
+            r = res.runs[i]
+            sc = r.scenario
+            solo = run_afl(
+                task.init_params(r.seed), r.plane.fleet, None,
+                algorithm=sc.algorithm, iterations=iterations,
+                tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
+                mu_momentum=sc.mu_momentum,
+                max_staleness=sc.max_staleness, eval_fn=task.eval_fn,
+                eval_every=eval_every, client_plane=r.plane,
+                compiled_loop=True, seed=r.seed)
+            if r.history.times != solo.history.times:
+                raise SystemExit(f"sweep parity: {r.label} eval "
+                                 "timeline diverged from the solo run")
+            run_drift = max(
+                float(np.max(np.abs(r.history.series(key)
+                                    - solo.history.series(key))))
+                for key in solo.history.metrics[0])
+            worst_parity = max(worst_parity, run_drift)
+            print(f"sweep parity: {r.label} drift {run_drift:.2e}")
+
+    out_path = args.sweep_out
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    payload = {
+        "config": cfg, "host": socket.gethostname(), "wall_s": wall,
+        "stats": res.stats, "parity_checked": args.check_parity,
+        "parity_max_abs_drift": worst_parity,
+        "runs": [{
+            "scenario": r.scenario.name, "seed": r.seed,
+            "scenario_config": r.scenario.to_dict(),
+            "times": r.history.times,
+            "iterations": r.history.iterations,
+            "metrics": {k: r.history.series(k).tolist()
+                        for k in (r.history.metrics[0] if
+                                  r.history.metrics else {})},
+        } for r in res.runs],
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"sweep: convergence grid written to {out_path}")
+    if worst_parity is not None and worst_parity > 1e-5:
+        raise SystemExit(f"sweep parity drift {worst_parity:.2e} > 1e-5")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -161,6 +274,19 @@ def main(argv=None) -> None:
                     help="resume a fleet-plane AFL run from a "
                          "<ckpt>.state file written by --save (trace "
                          "cursor + device buffers)")
+    ap.add_argument("--sweep", default=None,
+                    help="run a seeds x scenarios convergence grid from "
+                         "this JSON config through the batched sweep "
+                         "plane (DESIGN.md §8; see experiments/sweeps/)")
+    ap.add_argument("--sweep-out", dest="sweep_out",
+                    default=os.path.join("experiments", "bench", "local",
+                                         "sweep_convergence.json"),
+                    help="where --sweep writes the per-run convergence "
+                         "curves")
+    ap.add_argument("--check-parity", dest="check_parity", type=int,
+                    default=0, metavar="N",
+                    help="--sweep: re-run N grid cells as individual "
+                         "compiled runs and fail on >1e-5 history drift")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--clients", type=int, default=4,
@@ -170,6 +296,10 @@ def main(argv=None) -> None:
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--save", default=None, help="checkpoint path")
     args = ap.parse_args(argv)
+
+    if args.sweep:
+        run_sweep_grid(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

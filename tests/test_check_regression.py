@@ -1,0 +1,233 @@
+"""Tests for the CI gatekeeper itself (benchmarks/check_regression.py):
+exit codes 1/2/3, host-key resolution (env / GitHub Actions / hostname),
+the hosts-map baselines with per-key floors, enforcing mode, baseline
+recording, and the gate_report.json schema.  The gatekeeper decides
+whether every PR merges — it was the one untested component of CI.
+"""
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+@pytest.fixture
+def gate(tmp_path, monkeypatch):
+    """A synthetic gate wired into GATES + a pinned host key."""
+    g = {
+        "baseline": str(tmp_path / "baseline_test.json"),
+        "latest": str(tmp_path / "latest_test.json"),
+        "config_keys": ("mode", "M"),
+        "context_keys": ("x_s",),
+        "floor": 1.5,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "rerun_hint": "run the bench",
+    }
+    monkeypatch.setitem(cr.GATES, "testgate", g)
+    monkeypatch.setenv("REPRO_BENCH_HOST_KEY", "hostA")
+    monkeypatch.delenv("REPRO_GATE_ENFORCE", raising=False)
+    monkeypatch.delenv("GITHUB_ACTIONS", raising=False)
+    return g
+
+
+def _record(speedup=3.0, parity=1e-7, host="hostA", **extra):
+    rec = {"mode": "xla", "M": 8, "x_s": 1.0, "speedup": speedup,
+           "parity_max_abs_diff": parity, "host": host}
+    rec.update(extra)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# host_key resolution
+# ---------------------------------------------------------------------------
+def test_host_key_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_HOST_KEY", "pinned")
+    assert cr.host_key() == "pinned"
+    monkeypatch.delenv("REPRO_BENCH_HOST_KEY")
+    monkeypatch.setenv("GITHUB_ACTIONS", "true")
+    assert cr.host_key() == "github-runner"
+    monkeypatch.delenv("GITHUB_ACTIONS")
+    import socket
+    assert cr.host_key() == socket.gethostname()
+
+
+# ---------------------------------------------------------------------------
+# Exit codes
+# ---------------------------------------------------------------------------
+def test_pass_and_report_record(gate):
+    _write(gate["baseline"], _record(speedup=3.0))
+    _write(gate["latest"], _record(speedup=2.9))
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_OK
+    assert rec["status"] == "pass"
+    assert rec["speedup"] == 2.9
+    assert rec["baseline_speedup"] == 3.0
+    assert rec["parity"] == pytest.approx(1e-7)
+    assert rec["context"]["x_s"] == {"baseline": 1.0, "latest": 1.0}
+
+
+def test_exit1_on_speedup_drop(gate):
+    _write(gate["baseline"], _record(speedup=4.0))
+    _write(gate["latest"], _record(speedup=2.0))   # 2x drop > 1.3x
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_REGRESSION
+    assert rec["status"] == "regression"
+
+
+def test_per_gate_and_per_record_drop_threshold(gate):
+    # a noisy gate widens its drop budget and leans on the floor
+    gate["drop_threshold"] = 3.0
+    _write(gate["baseline"], _record(speedup=4.0))
+    _write(gate["latest"], _record(speedup=2.0))   # 2x drop <= 3x budget
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_OK
+    assert rec["drop_threshold"] == 3.0
+    # a per-host baseline record can override it the other way
+    _write(gate["baseline"], _record(speedup=4.0, drop_threshold=1.1))
+    rc, _ = cr.check_gate("testgate")
+    assert rc == cr.EXIT_REGRESSION
+
+
+def test_exit1_on_floor_violation(gate):
+    _write(gate["baseline"], _record(speedup=1.6))
+    _write(gate["latest"], _record(speedup=1.4))   # drop OK, floor 1.5 not
+    rc, _ = cr.check_gate("testgate")
+    assert rc == cr.EXIT_REGRESSION
+
+
+def test_exit1_on_parity_violation(gate):
+    _write(gate["baseline"], _record())
+    _write(gate["latest"], _record(parity=3e-4))
+    rc, _ = cr.check_gate("testgate")
+    assert rc == cr.EXIT_REGRESSION
+
+
+def test_exit2_on_config_mismatch_and_unknown_gate(gate):
+    _write(gate["baseline"], _record(M=8))
+    _write(gate["latest"], _record(M=16))
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_USAGE
+    assert rec["status"] == "config-mismatch"
+    assert cr.main(["--which", "no-such-gate"]) == cr.EXIT_USAGE
+
+
+def test_exit3_on_missing_artifacts(gate):
+    rc, rec = cr.check_gate("testgate")
+    assert (rc, rec["status"]) == (cr.EXIT_MISSING, "missing-baseline")
+    _write(gate["baseline"], _record())
+    rc, rec = cr.check_gate("testgate")
+    assert (rc, rec["status"]) == (cr.EXIT_MISSING, "missing-latest")
+
+
+# ---------------------------------------------------------------------------
+# Host keying: skip vs enforce, hosts map, per-key floors
+# ---------------------------------------------------------------------------
+def test_unknown_host_skips_without_enforce(gate, monkeypatch):
+    _write(gate["baseline"], _record(host="hostB"))
+    _write(gate["latest"], _record(speedup=0.1))   # would fail if gated
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_OK
+    assert rec["status"] == "skipped-unknown-host"
+    # --enforce (or REPRO_GATE_ENFORCE) turns the skip into a failure
+    rc, rec = cr.check_gate("testgate", enforce=True)
+    assert rc == cr.EXIT_MISSING
+    assert rec["status"] == "unrecorded-host-enforced"
+    monkeypatch.setenv("REPRO_GATE_ENFORCE", "1")
+    assert cr.enforcing()
+    monkeypatch.setenv("REPRO_GATE_ENFORCE", "0")
+    assert not cr.enforcing()
+
+
+def test_hosts_map_resolution_and_floor_override(gate):
+    base = _record(speedup=3.0, host="hostB")
+    # hostA's record lives in the hosts map with its own (lower) floor
+    base["hosts"] = {"hostA": _record(speedup=1.2, floor=1.0)}
+    _write(gate["baseline"], base)
+    _write(gate["latest"], _record(speedup=1.1))
+    rc, rec = cr.check_gate("testgate")
+    assert rc == cr.EXIT_OK                 # 1.1 >= hostA floor 1.0
+    assert rec["floor"] == 1.0
+    assert rec["baseline_speedup"] == 1.2
+    # without the per-key floor the gate's default (1.5) would fail it
+    base["hosts"]["hostA"].pop("floor")
+    _write(gate["baseline"], base)
+    rc, _ = cr.check_gate("testgate")
+    assert rc == cr.EXIT_REGRESSION
+
+
+# ---------------------------------------------------------------------------
+# Baseline recording
+# ---------------------------------------------------------------------------
+def test_record_baseline_creates_and_merges(gate):
+    assert cr.record_baseline("testgate") == cr.EXIT_MISSING  # no latest
+    _write(gate["latest"], _record(speedup=2.5, host="ignored"))
+    assert cr.record_baseline("testgate") == cr.EXIT_OK
+    with open(gate["baseline"]) as f:
+        base = json.load(f)
+    assert base["host"] == "hostA" and base["speedup"] == 2.5
+    # another host's recording lands in the hosts map, preserving any
+    # existing floor override there
+    base["hosts"] = {"hostB": _record(speedup=9.0, host="hostB",
+                                      floor=0.7)}
+    _write(gate["baseline"], base)
+    import os
+    os.environ["REPRO_BENCH_HOST_KEY"] = "hostB"
+    try:
+        assert cr.record_baseline("testgate") == cr.EXIT_OK
+    finally:
+        os.environ["REPRO_BENCH_HOST_KEY"] = "hostA"
+    with open(gate["baseline"]) as f:
+        base = json.load(f)
+    assert base["host"] == "hostA"                    # top level untouched
+    assert base["hosts"]["hostB"]["speedup"] == 2.5   # refreshed
+    assert base["hosts"]["hostB"]["floor"] == 0.7     # override preserved
+    # re-recording the top-level key keeps the hosts map
+    assert cr.record_baseline("testgate") == cr.EXIT_OK
+    with open(gate["baseline"]) as f:
+        base = json.load(f)
+    assert "hostB" in base["hosts"]
+
+
+# ---------------------------------------------------------------------------
+# main() + gate_report.json schema
+# ---------------------------------------------------------------------------
+def test_main_writes_schema_conformant_report(gate, tmp_path):
+    _write(gate["baseline"], _record())
+    _write(gate["latest"], _record(speedup=2.8))
+    report = tmp_path / "report.json"
+    rc = cr.main(["--which", "testgate", "--report", str(report)])
+    assert rc == cr.EXIT_OK
+    with open(report) as f:
+        rep = json.load(f)
+    assert rep["host"] == "hostA"
+    assert rep["exit_code"] == cr.EXIT_OK
+    assert rep["threshold"] == cr.THRESHOLD
+    assert rep["enforced"] is False
+    g = rep["gates"]["testgate"]
+    for key in ("status", "speedup", "baseline_speedup", "drop_ratio",
+                "floor", "parity", "parity_bound", "context", "host"):
+        assert key in g, key
+    assert g["status"] == "pass"
+
+
+def test_main_record_baselines_mode(gate):
+    _write(gate["latest"], _record(speedup=2.2))
+    assert cr.main(["--which", "testgate", "--record-baselines"]) == \
+        cr.EXIT_OK
+    with open(gate["baseline"]) as f:
+        assert json.load(f)["speedup"] == 2.2
+
+
+def test_combine_codes_precedence():
+    E = cr
+    assert E.combine_codes([E.EXIT_OK, E.EXIT_OK]) == E.EXIT_OK
+    assert E.combine_codes([E.EXIT_MISSING, E.EXIT_REGRESSION,
+                            E.EXIT_USAGE]) == E.EXIT_REGRESSION
+    assert E.combine_codes([E.EXIT_MISSING, E.EXIT_USAGE]) == E.EXIT_USAGE
+    assert E.combine_codes([E.EXIT_MISSING]) == E.EXIT_MISSING
