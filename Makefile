@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test lint format format-check bench bench-agg bench-client \
-	bench-sharded bench-compiled bench-sweep bench-gate bench-record
+	bench-sharded bench-compiled bench-sweep bench-faults bench-gate \
+	bench-record
 
 test:
 	python -m pytest -x -q
@@ -47,7 +48,12 @@ bench-compiled:
 bench-sweep:
 	python -m benchmarks.run --only sweep_plane
 
-# all 5 gated benches; fail on >1.3x slowdown vs benchmarks/
+# the fault-staging bench (fault-injection trace transform vs clean
+# staging + realization determinism, DESIGN.md §9)
+bench-faults:
+	python -m benchmarks.run --only faults
+
+# all 6 gated benches; fail on >1.3x slowdown vs benchmarks/
 # baseline_*.json (or below the acceptance floors / parity >1e-5 — see
 # benchmarks/check_regression.py).  Baselines are keyed by HOST KEY
 # (REPRO_BENCH_HOST_KEY / github-runner / hostname): an unrecorded host
@@ -55,7 +61,7 @@ bench-sweep:
 # experiments/bench/local/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults \
 		--gate --seed 0
 
 # rerun the gated benches on THIS host and fold the fresh results into
@@ -64,6 +70,6 @@ bench-gate:
 # tracked experiments/bench/*.json records (--record).
 bench-record:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults \
 		--seed 0 --record
 	python -m benchmarks.check_regression --record-baselines

@@ -1,0 +1,96 @@
+"""Fault-injection staging benchmark (docs/DESIGN.md §9): the cost of
+realizing a fault model over the AFL timeline, relative to staging the
+clean trace.
+
+``compile_afl_trace`` is pure host-side control plane; the fault
+transform (``core/faults.py``) adds four vectorized draw/filter passes,
+the availability interval algebra and the drop-aware model-version
+replay on top.  The whole point of keeping it a trace TRANSFORM (same
+event skeleton, β=1 no-op slots) is that degraded runs stage and
+execute with the clean run's launch structure — so the gated metric is
+
+    speedup = clean_staging_s / faulty_staging_s
+
+which must stay ≥ 1/1.3 (the ISSUE's "faulty staging ≤ 1.3x clean"
+acceptance bound; floor 0.75 leaves measurement headroom).  A collapse
+(per-event Python in the realization, per-client re-simulation) lands
+far below it.
+
+Also records the determinism parity: two faulty compiles under one
+fault seed must produce BIT-IDENTICAL β streams (max abs diff 0.0,
+gated ≤1e-5 by ``benchmarks/check_regression.py``), plus the realized
+drop rate as context.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, emit, save_result
+
+M = 64
+ITERATIONS = 4096          # upload events per staged timeline
+REPS = 7
+PRESET = "diurnal20"
+
+
+def _stage(fleet, faults, seed):
+    from repro.core.event_trace import compile_afl_trace
+    return compile_afl_trace(fleet, algorithm="csmaafl",
+                             iterations=ITERATIONS, tau_u=0.1, tau_d=0.1,
+                             gamma=0.4, seed=seed, faults=faults)
+
+
+def bench_faults() -> None:
+    from repro.core import faults as flt
+    from repro.core.scheduler import make_fleet
+
+    seed = bench_seed()
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[100] * M, seed=seed)
+
+    def timed(faults):
+        _stage(fleet, faults, seed)            # warmup (imports, caches)
+        ts = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            tr = _stage(fleet, faults, seed)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), tr
+
+    t_clean, tr_clean = timed(None)
+    t_fault, tr_fault = timed(PRESET)
+    speedup = t_clean / t_fault
+    # determinism: a second compile under the same fault seed must be
+    # bit-identical (the four-path parity contract rests on this)
+    tr_again = _stage(fleet, PRESET, seed)
+    parity = float(np.max(np.abs(tr_fault.betas - tr_again.betas)))
+    if not np.array_equal(tr_fault.dropped, tr_again.dropped):
+        parity = 1.0                           # fail the gate loudly
+    stats = flt.trace_stats(tr_fault)
+    emit("faults.stage.clean", t_clean * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_clean:.0f} events/s staged")
+    emit("faults.stage.faulty", t_fault * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_fault:.0f} events/s; {1 / speedup:.2f}x clean "
+         f"staging cost; drop_rate={stats['drop_rate']:.3f}; "
+         f"parity {parity:.1e}")
+    save_result("faults", {
+        "model": "staging_only", "M": M, "iterations": ITERATIONS,
+        "preset": PRESET, "seed": seed,
+        "clean_s": t_clean, "faulty_s": t_fault,
+        "events_per_s_clean": ITERATIONS / t_clean,
+        "events_per_s_faulty": ITERATIONS / t_fault,
+        "drop_rate": stats["drop_rate"],
+        "fault_drops": stats["fault_drops"],
+        "contribution_gini": stats["contribution_gini"],
+        "speedup": speedup, "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    bench_faults()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """Bench regression gates (aggregation engine + client plane + sharded
-plane + compiled event loop + sweep plane) — CI-enforcing.
+plane + compiled event loop + sweep plane + fault staging) —
+CI-enforcing.
 
 Compares the latest results under ``experiments/bench/local/`` (written
 by the gated benches; gitignored) against the committed baselines in
@@ -159,6 +160,25 @@ GATES = {
         "parity_key": "parity_max_abs_diff",
         "parity_bound": 1e-5,
         "rerun_hint": "python -m benchmarks.run --only sweep_plane",
+    },
+    "faults": {
+        "baseline": os.path.join(HERE, "baseline_faults.json"),
+        "latest": os.path.join(LATEST_DIR, "faults.json"),
+        "config_keys": ("model", "M", "iterations", "preset", "seed"),
+        "context_keys": ("clean_s", "faulty_s", "events_per_s_faulty",
+                         "drop_rate"),
+        # fault realization is a host-side trace TRANSFORM (DESIGN.md
+        # §9): staging a degraded timeline must cost ≤1.3x the clean
+        # staging pass (the ISSUE's acceptance bound), i.e. the gated
+        # clean/faulty ratio stays ≥ 1/1.3 — floor 0.75 leaves
+        # measurement headroom.  A collapse to per-event Python or
+        # per-client re-simulation lands far below.  The parity bound
+        # gates determinism: two compiles under one fault seed must be
+        # bit-identical (recorded as 0.0, or 1.0 on any mismatch).
+        "floor": 0.75,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "rerun_hint": "python -m benchmarks.run --only faults",
     },
 }
 

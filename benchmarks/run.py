@@ -17,6 +17,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                  plane loop at M=64 (docs/DESIGN.md §7)
   sweep_plane    run-batched seeds x scenarios grid vs sequential
                  compiled runs (docs/DESIGN.md §8)
+  faults         fault-injection staging cost vs the clean trace +
+                 realization determinism (docs/DESIGN.md §9)
   roofline       §Roofline table from the dry-run records
 
 Results land in the GITIGNORED ``experiments/bench/local/``; pass
@@ -46,7 +48,7 @@ import sys
 import traceback
 
 GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop",
-         "sweep_plane")
+         "sweep_plane", "faults")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
@@ -54,6 +56,7 @@ RESULT_FILES = {
     "sharded_plane": "sharded_plane.json",
     "compiled_loop": "compiled_loop.json",
     "sweep_plane": "sweep_plane.json",
+    "faults": "faults.json",
 }
 
 
@@ -62,7 +65,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,client_plane,sharded_plane,"
-                         "compiled_loop,sweep_plane,roofline")
+                         "compiled_loop,sweep_plane,faults,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -86,8 +89,8 @@ def main(argv=None) -> int:
         os.environ["REPRO_BENCH_RECORD"] = "1"
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
-              "compiled_loop", "sweep_plane", "kernels", "convergence",
-              "roofline"])
+              "compiled_loop", "sweep_plane", "faults", "kernels",
+              "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
@@ -117,6 +120,9 @@ def main(argv=None) -> int:
                 b.main()
             elif name == "compiled_loop":
                 from benchmarks import bench_compiled_loop as b
+                b.main()
+            elif name == "faults":
+                from benchmarks import bench_faults as b
                 b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b

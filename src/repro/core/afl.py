@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 
 from repro.core import aggregation as agg
+from repro.core import faults as flt
 from repro.core.agg_engine import engine_for
 from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
                                   ClientSpec, UploadEvent)
@@ -39,8 +40,12 @@ class AFLResult:
     # {"fleet_buf", "g_flat", "opt_state", "cursor"} — cursor is the
     # number of trace events consumed (the resume point)
     state: Optional[Dict[str, Any]] = None
-    # compiled-loop instrumentation: {"launches", "segments", "variants"}
-    stats: Optional[Dict[str, int]] = None
+    # compiled-loop instrumentation ({"launches", "segments",
+    # "variants"}) plus the fault/participation accounting under
+    # ``stats["faults"]`` (``core.faults.participation_stats``) — present
+    # on every path; dropped events are EXCLUDED from the per-client
+    # participation tallies
+    stats: Optional[Dict[str, Any]] = None
 
 
 def run_afl(params0, fleet: Sequence[ClientSpec],
@@ -55,6 +60,7 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             client_plane=None, use_client_plane: bool = True,
             compiled_loop: bool = False,
             resume_state: Optional[Dict[str, Any]] = None,
+            faults=None,
             seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
 
@@ -96,6 +102,16 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     ``resume_state`` (a prior result's ``.state`` or
     ``ckpt.load_afl_state``) restarts a compiled run mid-timeline from
     its trace cursor.
+
+    ``faults`` (``core.faults``: a ``FaultModel``, preset name, or
+    kwargs dict) injects availability windows, mid-flight dropouts and
+    flaky-uplink retries into the timeline before the loop consumes it.
+    The realization is a pure function of the fault seed, so this
+    reference loop, the compiled loop, the sharded plane and run-stacked
+    sweeps see bit-identical drop patterns and realized staleness.
+    Fault-dropped events are no-ops (no tracker update, no blend, no
+    retrain — the client keeps its stale model); deferred/retried events
+    carry retry-inflated staleness into eq. (11).
     """
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
@@ -118,7 +134,8 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
                              eval_every=eval_every, server_opt=server_opt,
                              server_lr=server_lr, s_init=s_init,
                              max_staleness=max_staleness,
-                             resume_state=resume_state, seed=seed)
+                             resume_state=resume_state, faults=faults,
+                             seed=seed)
 
     if algorithm == "afl_baseline":
         sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
@@ -196,86 +213,111 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     hist = FLHistory()
     events: List[UploadEvent] = []
     betas: List[float] = []
+    stale_flags: List[bool] = []
     if eval_fn is not None:
         hist.add(0.0, 0, eval_fn(params0))
 
-    for ev in sched.events(iterations):
-        events.append(ev)
-        # ---- choose the aggregation coefficient for this iteration ----
-        if algorithm == "afl_alpha":
-            one_minus_beta = float(alpha[ev.cid])          # §III-A naive
-        elif algorithm == "afl_baseline":
-            pos_in_cycle = (ev.j - 1) % M
-            one_minus_beta = 1.0 - float(cycle_betas[pos_in_cycle])
-        else:  # csmaafl, eq. (11)
-            mu = tracker.update(ev.staleness)
-            one_minus_beta = agg.staleness_coefficient(
-                ev.j, ev.i, mu, gamma)
-        if max_staleness is not None and ev.staleness > max_staleness:
-            one_minus_beta = 0.0          # admission control: drop update
-        beta = 1.0 - one_minus_beta
-        betas.append(beta)
+    # fault injection: realize the timeline ONCE (same transform the
+    # event-trace compiler applies, keyed by the same seed — the drop
+    # pattern and realized staleness are bit-identical to the compiled
+    # paths); without faults the scheduler generator streams lazily
+    fm = flt.resolve_faults(faults)
+    if fm is not None and fm.active():
+        event_stream = flt.realize_events(
+            sched.trace(iterations), fm, algorithm=algorithm, M=M,
+            tau_u=tau_u, seed=seed).events
+    else:
+        event_stream = sched.events(iterations)
 
-        # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
-        if plane is not None:
-            if ev.cid in pending_cids:
-                # this uploader's pending retrain feeds this very blend
-                flush_pending()
-            if server_opt is None:
-                g_flat = engine.blend_row_flat(g_flat, fleet_buf, ev.cid,
-                                               beta)
-            else:
-                pg = engine.delta_row_flat(g_flat, fleet_buf, ev.cid,
-                                           one_minus_beta)
+    for ev in event_stream:
+        events.append(ev)
+        accepted = ev.outcome == flt.OUTCOME_OK
+        if not accepted:
+            # fault-dropped upload: the server never sees it — no
+            # tracker update, no blend, no retrain (the client keeps its
+            # stale model and its last version i); the §III-B broadcast
+            # and the eval cadence still fire on schedule below
+            betas.append(1.0)
+            stale_flags.append(False)
+        else:
+            # ---- choose the aggregation coefficient ----
+            if algorithm == "afl_alpha":
+                one_minus_beta = float(alpha[ev.cid])      # §III-A naive
+            elif algorithm == "afl_baseline":
+                pos_in_cycle = (ev.j - 1) % M
+                one_minus_beta = 1.0 - float(cycle_betas[pos_in_cycle])
+            else:  # csmaafl, eq. (11)
+                mu = tracker.update(ev.staleness)
+                one_minus_beta = agg.staleness_coefficient(
+                    ev.j, ev.i, mu, gamma)
+            stale = (max_staleness is not None
+                     and ev.staleness > max_staleness)
+            stale_flags.append(stale)
+            if stale:
+                one_minus_beta = 0.0      # admission control: drop update
+            beta = 1.0 - one_minus_beta
+            betas.append(beta)
+
+            # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
+            if plane is not None:
+                if ev.cid in pending_cids:
+                    # this uploader's pending retrain feeds this blend
+                    flush_pending()
+                if server_opt is None:
+                    g_flat = engine.blend_row_flat(g_flat, fleet_buf,
+                                                   ev.cid, beta)
+                else:
+                    pg = engine.delta_row_flat(g_flat, fleet_buf, ev.cid,
+                                               one_minus_beta)
+                    g_flat, opt_state = s_update(g_flat, pg, opt_state,
+                                                 server_lr)
+            elif server_opt is None:
+                if engine is not None:
+                    g_flat, global_params = engine.blend_flat(
+                        g_flat, client_models[ev.cid], beta)
+                else:
+                    global_params = agg.blend_pytree(
+                        global_params, client_models[ev.cid], beta)
+            elif engine is not None:
+                # pseudo-gradient −Δ on the flat buffer (one fused
+                # launch), server optimizer over the single-leaf pytree
+                pg = engine.delta_flat(g_flat, client_models[ev.cid],
+                                       one_minus_beta)
                 g_flat, opt_state = s_update(g_flat, pg, opt_state,
                                              server_lr)
-        elif server_opt is None:
-            if engine is not None:
-                g_flat, global_params = engine.blend_flat(
-                    g_flat, client_models[ev.cid], beta)
+                global_params = engine.unflatten(g_flat)
             else:
-                global_params = agg.blend_pytree(
-                    global_params, client_models[ev.cid], beta)
-        elif engine is not None:
-            # pseudo-gradient −Δ on the flat buffer (one fused launch),
-            # server optimizer over the single-leaf flat pytree
-            pg = engine.delta_flat(g_flat, client_models[ev.cid],
-                                   one_minus_beta)
-            g_flat, opt_state = s_update(g_flat, pg, opt_state, server_lr)
-            global_params = engine.unflatten(g_flat)
-        else:
-            # per-leaf reference path for the server optimizer
-            import jax as _jax
-            import jax.numpy as _jnp
-            pseudo_grad = _jax.tree.map(
-                lambda g, c: (1.0 - beta) * (g.astype(_jnp.float32)
-                                             - c.astype(_jnp.float32)),
-                global_params, client_models[ev.cid])
-            global_params, opt_state = s_update(
-                global_params, pseudo_grad, opt_state, server_lr)
+                # per-leaf reference path for the server optimizer
+                import jax as _jax
+                import jax.numpy as _jnp
+                pseudo_grad = _jax.tree.map(
+                    lambda g, c: (1.0 - beta) * (g.astype(_jnp.float32)
+                                                 - c.astype(_jnp.float32)),
+                    global_params, client_models[ev.cid])
+                global_params, opt_state = s_update(
+                    global_params, pseudo_grad, opt_state, server_lr)
 
-        # ---- model redistribution ----
-        if algorithm == "afl_baseline":
-            # §III-B requirement (c): broadcast to *all* clients every M
-            # iterations; mid-cycle, clients keep training from the cycle-
-            # start model (their uploads must equal SFL's w_t^m).
-            if ev.j % M == 0:
+            # ---- §II-B: only the uploader receives w_{j+1} (eq. 4) ----
+            if algorithm != "afl_baseline":
                 if plane is not None:
-                    fleet_buf = plane.train_all(g_flat,
-                                                seed * 100003 + ev.j)
+                    queue_retrain(ev.cid, ev.local_steps,
+                                  seed * 100003 + ev.j)
                 else:
-                    for c in fleet:
-                        client_models[c.cid] = local_train_fn(
-                            global_params, c.cid, c.local_steps,
-                            seed * 100003 + ev.j)
-        else:
-            # §II-B: only the uploading client receives w_{j+1} (eq. 4)
+                    client_models[ev.cid] = local_train_fn(
+                        global_params, ev.cid, ev.local_steps,
+                        seed * 100003 + ev.j)
+
+        # ---- §III-B requirement (c): broadcast to *all* clients every
+        # M iterations (fires on schedule even if this slot dropped);
+        # mid-cycle, clients keep training from the cycle-start model.
+        if algorithm == "afl_baseline" and ev.j % M == 0:
             if plane is not None:
-                queue_retrain(ev.cid, ev.local_steps, seed * 100003 + ev.j)
+                fleet_buf = plane.train_all(g_flat, seed * 100003 + ev.j)
             else:
-                client_models[ev.cid] = local_train_fn(
-                    global_params, ev.cid, ev.local_steps,
-                    seed * 100003 + ev.j)
+                for c in fleet:
+                    client_models[c.cid] = local_train_fn(
+                        global_params, c.cid, c.local_steps,
+                        seed * 100003 + ev.j)
 
         if eval_fn is not None and ev.j % eval_every == 0:
             hist.add(ev.t_complete, ev.j, eval_fn(cur_params()))
@@ -286,13 +328,19 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
         state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
                  "opt_state": opt_state if opt_state is not None else (),
                  "cursor": len(events)}
-    return AFLResult(cur_params(), hist, events, betas, state)
+    stats = {"faults": flt.participation_stats(
+        [e.cid for e in events], betas,
+        [e.outcome != flt.OUTCOME_OK for e in events], stale_flags, M,
+        attempts=[e.attempts for e in events],
+        outcomes=[e.outcome for e in events],
+        staleness=[e.staleness for e in events])}
+    return AFLResult(cur_params(), hist, events, betas, state, stats)
 
 
 def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
                   tau_d, gamma, mu_momentum, eval_fn, eval_every,
                   server_opt, server_lr, s_init, max_staleness,
-                  resume_state, seed) -> AFLResult:
+                  resume_state, faults, seed) -> AFLResult:
     """The ``compiled_loop=True`` body: compile the whole timeline once,
     then execute it as bucket-grouped donated scan segments
     (``core.event_trace``, DESIGN.md §7)."""
@@ -301,7 +349,7 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
     trace = _et.compile_afl_trace(
         fleet, algorithm=algorithm, iterations=iterations, tau_u=tau_u,
         tau_d=tau_d, gamma=gamma, mu_momentum=mu_momentum,
-        max_staleness=max_staleness, seed=seed)
+        max_staleness=max_staleness, faults=faults, seed=seed)
     runner = _et.CompiledLoopRunner(plane, server_opt=server_opt,
                                     server_lr=server_lr)
     engine = plane.engine
@@ -330,6 +378,7 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
     state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
              "opt_state": opt_state, "cursor": len(trace)}
     stats = {"launches": runner.launches, "segments": runner.segments,
-             "variants": runner.variants()}
+             "variants": runner.variants(),
+             "faults": flt.trace_stats(trace)}
     return AFLResult(engine.unflatten(g_flat), hist, trace.events[start:],
                      [float(b) for b in trace.betas[start:]], state, stats)

@@ -147,6 +147,41 @@ class StalenessTracker:
         return self.mu
 
 
+def ema_sequence(values: np.ndarray, momentum: float) -> np.ndarray:
+    """Vectorized :class:`StalenessTracker` replay: ``out[k]`` is the μ
+    AFTER observing ``values[0..k]`` (first observation seeds μ).
+
+    Uses the blocked closed form μ_k = m^k·(μ_0 + (1−m)·Σ_t s_t/m^t) per
+    block so m^t never underflows; agrees with the sequential recurrence
+    to ~1e-14, which lets ``compile_afl_trace`` replay million-event
+    staleness streams without the per-event Python loop.  NOTE: callers
+    clamp (``max(s, 1.0)``) before calling, matching ``update``."""
+    s = np.asarray(values, np.float64)
+    n = len(s)
+    out = np.empty(n, np.float64)
+    if n == 0:
+        return out
+    m = float(momentum)
+    if m <= 0.0:
+        out[:] = s
+        return out
+    if m >= 1.0:
+        out[:] = s[0]
+        return out
+    block = int(min(1024, max(8, 600.0 / np.log(1.0 / m))))
+    out[0] = s[0]
+    mu = s[0]
+    k = 1
+    while k < n:
+        b = min(block, n - k)
+        pw = m ** np.arange(1, b + 1, dtype=np.float64)
+        cum = np.cumsum(s[k:k + b] / pw)
+        out[k:k + b] = pw * (mu + (1.0 - m) * cum)
+        mu = out[k + b - 1]
+        k += b
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Trunk folding: sequence of blends -> one weighted sum
 # ---------------------------------------------------------------------------

@@ -30,7 +30,10 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+import numpy as np
+
 from repro.core import aggregation as agg
+from repro.core import faults as flt
 from repro.core.agg_engine import engine_for
 from repro.core.scheduler import ClientSpec
 
@@ -62,7 +65,7 @@ class AsyncCSMAAFLServer:
                  mu_momentum: float = 0.9,
                  max_staleness: Optional[int] = None,
                  use_engine: bool = True,
-                 client_plane=None):
+                 client_plane=None, faults=None, fault_seed: int = 0):
         self.gamma = gamma
         self.tracker = agg.StalenessTracker(momentum=mu_momentum)
         self.max_staleness = max_staleness
@@ -71,6 +74,16 @@ class AsyncCSMAAFLServer:
         self.last_slot: Dict[int, int] = {}
         self.betas: List[float] = []
         self.trunk_sizes: List[int] = []
+        # flaky-uplink faults (core/faults.py): per-(cid, attempt#) keyed
+        # loss draws so the drop pattern is deterministic under the fault
+        # seed no matter how the threads interleave; a dropped upload is
+        # answered with (None, i) — the client keeps its stale model
+        self._faults = flt.resolve_faults(faults)
+        self._fault_seed = int(self._faults.seed) \
+            if self._faults is not None and self._faults.seed is not None \
+            else int(fault_seed)
+        self._upload_counts: Dict[int, int] = {}
+        self.drops = 0
         self._plane = client_plane
         if client_plane is not None:
             self._engine = client_plane.engine
@@ -121,8 +134,37 @@ class AsyncCSMAAFLServer:
                                       r.t_request))
             self._aggregate_trunk(batch)
 
+    def _uplink_drop(self, cid: int) -> bool:
+        """Deterministic flaky-uplink verdict for this client's next
+        upload: loses every attempt with prob loss_prob, bounded by
+        max_retries — same geometric-failures model the trace transform
+        uses, keyed by (fault seed, cid, upload #)."""
+        fm = self._faults
+        if fm is None or fm.loss_prob <= 0.0:
+            return False
+        k = self._upload_counts.get(cid, 0)
+        self._upload_counts[cid] = k + 1
+        if fm.loss_prob >= 1.0:
+            return True
+        rng = np.random.default_rng([self._fault_seed, cid, k, 0xFA])
+        fails = int(rng.geometric(1.0 - fm.loss_prob)) - 1
+        return fails > fm.max_retries
+
     def _aggregate_trunk(self, batch: List[_SlotRequest]):
         with self._lock:
+            if self._faults is not None:
+                kept = []
+                for req in batch:
+                    if self._uplink_drop(req.cid):
+                        # lost slot: no iteration is spent, no tracker
+                        # update; the client resumes from its stale model
+                        self.drops += 1
+                        req.reply.put((None, req.model_iter))
+                    else:
+                        kept.append(req)
+                batch = kept
+                if not batch:
+                    return
             betas: List[float] = []
             for req in batch:
                 self.j += 1
@@ -197,9 +239,13 @@ def client_worker(server: AsyncCSMAAFLServer, spec: ClientSpec,
         server.requests.put(_SlotRequest(
             cid=spec.cid, model=params, model_iter=model_iter,
             t_request=time.monotonic(), reply=reply))
-        params, model_iter = reply.get()       # fresh global, iteration j
+        fresh, new_iter = reply.get()       # fresh global, iteration j
+        if fresh is not None:
+            params, model_iter = fresh, new_iter
+        # else: upload lost (flaky uplink) — keep training from the
+        # stale model; the 100%-loss degenerate run still terminates
         if stats is not None:
-            stats.setdefault(spec.cid, []).append(model_iter)
+            stats.setdefault(spec.cid, []).append(new_iter)
 
 
 def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
@@ -207,7 +253,8 @@ def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
               time_scale: float = 0.005,
               max_staleness: Optional[int] = None,
               use_engine: bool = True,
-              client_plane=None, use_client_plane: bool = True):
+              client_plane=None, use_client_plane: bool = True,
+              faults=None, fault_seed: int = 0):
     """Run the threaded fleet to completion; returns (params, server)."""
     plane = client_plane if (use_client_plane and client_plane is not None) \
         else None
@@ -216,7 +263,8 @@ def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
     server = AsyncCSMAAFLServer(params0, gamma=gamma,
                                 max_staleness=max_staleness,
                                 use_engine=use_engine,
-                                client_plane=plane).start()
+                                client_plane=plane, faults=faults,
+                                fault_seed=fault_seed).start()
     stats: Dict[int, List[int]] = {}
     threads = [threading.Thread(
         target=client_worker,

@@ -100,6 +100,14 @@ class EventTrace:
     M: int
     base_seed: int
     s_buckets: Optional[np.ndarray] = None   # (E,) int32, runner-filled
+    # fault-injection plane (core/faults.py, DESIGN.md §9) — compile
+    # always fills these; fault-dropped events keep their slot (β=1
+    # identity coefficients) and execute as masked no-op steps
+    dropped: Optional[np.ndarray] = None     # (E,) bool  fault-dropped
+    stale_drop: Optional[np.ndarray] = None  # (E,) bool  max_staleness drop
+    attempts: Optional[np.ndarray] = None    # (E,) int32 upload attempts
+    outcomes: Optional[np.ndarray] = None    # (E,) int8  OUTCOME_* codes
+    base_events: Optional[List[UploadEvent]] = None  # clean timeline
 
     def __len__(self) -> int:
         return len(self.cids)
@@ -117,13 +125,15 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
                       gamma: float = 0.4, mu_momentum: float = 0.9,
                       max_staleness: Optional[int] = None,
                       seed: int = 0,
-                      events: Optional[List[UploadEvent]] = None
-                      ) -> EventTrace:
+                      events: Optional[List[UploadEvent]] = None,
+                      faults=None) -> EventTrace:
     """Run the scheduler once on the host and precompute every scalar the
     event loop would: the timeline, the §III coefficients, the retrain
     seeds.  Mirrors ``run_afl``'s coefficient logic exactly (same float
-    ops in the same order), so trace replay is bit-consistent with the
-    Python loop up to data-plane rounding.
+    ops in the same order — the β replay is vectorized numpy over the
+    event arrays, so million-event traces stay cheap to stage), so trace
+    replay is bit-consistent with the Python loop up to data-plane
+    rounding.
 
     ``events`` short-circuits the scheduler simulation with a
     precomputed timeline: the event stream is a pure function of the
@@ -131,7 +141,16 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
     population (the sweep plane's ``Scenario.fleet_seed`` pinning,
     DESIGN.md §8) share ONE host simulation while the per-run §III
     coefficients (α from this run's partition sizes, staleness replay)
-    and retrain seeds are still computed per call."""
+    and retrain seeds are still computed per call.  ``events`` must be
+    the CLEAN timeline (``EventTrace.base_events``) — ``faults`` (a
+    ``FaultModel`` / preset name / kwargs dict, ``core/faults.py``) is
+    realized HERE, per call, so shared-timeline sweep runs don't
+    double-apply it.  Fault-dropped events keep their slot with β=1 and
+    ``dropped=True`` (masked no-op steps); deferred/retried events carry
+    their REALIZED staleness into the eq. (11) replay, whose tracker
+    skips fault-dropped uploads (the server never saw them)."""
+    from repro.core import faults as flt
+
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
     if algorithm == "afl_baseline":
@@ -141,38 +160,65 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
         sched = AFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
     else:
         raise ValueError(f"unknown AFL algorithm '{algorithm}'")
-    tracker = agg.StalenessTracker(momentum=mu_momentum)
     if events is None:
         events = sched.trace(iterations)
     elif len(events) != iterations:
         raise ValueError(f"precomputed timeline has {len(events)} events, "
                          f"expected {iterations}")
-    betas, bcast = [], []
-    for ev in events:
-        if algorithm == "afl_alpha":
-            one_minus_beta = float(alpha[ev.cid])
-        elif algorithm == "afl_baseline":
-            one_minus_beta = 1.0 - float(cycle_betas[(ev.j - 1) % M])
-        else:   # csmaafl, eq. (11) — tracker updated on EVERY event,
-            # dropped or not, exactly as the Python loop does
-            mu = tracker.update(ev.staleness)
-            one_minus_beta = agg.staleness_coefficient(ev.j, ev.i, mu, gamma)
-        if max_staleness is not None and ev.staleness > max_staleness:
-            one_minus_beta = 0.0
-        betas.append(1.0 - one_minus_beta)
-        bcast.append(algorithm == "afl_baseline" and ev.j % M == 0)
-    js = np.asarray([ev.j for ev in events], np.int32)
+    base_events = events
+    E = len(events)
+    fm = flt.resolve_faults(faults)
+    if fm is not None and fm.active():
+        real = flt.realize_events(base_events, fm, algorithm=algorithm,
+                                  M=M, tau_u=tau_u, seed=seed)
+        events = real.events
+        dropped, attempts, outcomes = real.dropped, real.attempts, \
+            real.outcomes
+    else:
+        dropped = np.zeros(E, bool)
+        attempts = np.ones(E, np.int32)
+        outcomes = np.zeros(E, np.int8)
+    js = np.fromiter((ev.j for ev in events), np.int64, E)
+    cids = np.fromiter((ev.cid for ev in events), np.int64, E)
+    iis = np.fromiter((ev.i for ev in events), np.int64, E)
+    stal = np.fromiter((ev.staleness for ev in events), np.int64, E)
+    # vectorized β replay (same float ops in the same order as the
+    # scalar loop in run_afl, elementwise)
+    omb = np.zeros(E, np.float64)
+    act = ~dropped
+    if algorithm == "afl_alpha":
+        omb[act] = alpha[cids[act]]
+    elif algorithm == "afl_baseline":
+        omb[act] = 1.0 - cycle_betas[(js[act] - 1) % M]
+    else:   # csmaafl, eq. (11) — tracker updated on every ACCEPTED
+        # event (incl. max_staleness drops, matching the Python loop);
+        # fault-dropped uploads never reach the server
+        s_act = np.maximum(stal[act].astype(np.float64), 1.0)
+        mu = agg.ema_sequence(s_act, mu_momentum)
+        ja = js[act].astype(np.float64)
+        ga = np.maximum(js[act] - iis[act], 1).astype(np.float64)
+        omb[act] = np.minimum(1.0, mu / (gamma * ja * ga))
+    stale_drop = np.zeros(E, bool)
+    if max_staleness is not None:
+        stale_drop = act & (stal > max_staleness)
+        omb[stale_drop] = 0.0
+    if algorithm == "afl_baseline":
+        bcast = js % M == 0
+    else:
+        bcast = np.zeros(E, bool)
     return EventTrace(
         events=events,
-        cids=np.asarray([ev.cid for ev in events], np.int32),
-        js=js,
-        staleness=np.asarray([ev.staleness for ev in events], np.int32),
-        betas=np.asarray(betas, np.float64),
+        cids=cids.astype(np.int32),
+        js=js.astype(np.int32),
+        staleness=stal.astype(np.int32),
+        betas=1.0 - omb,
         local_steps=np.asarray([ev.local_steps for ev in events], np.int32),
-        seeds=seed * 100003 + js.astype(np.int64),
+        seeds=seed * 100003 + js,
         t_complete=np.asarray([ev.t_complete for ev in events], np.float64),
-        broadcast=np.asarray(bcast, bool),
-        algorithm=algorithm, M=M, base_seed=seed)
+        broadcast=bcast,
+        algorithm=algorithm, M=M, base_seed=seed,
+        dropped=dropped, stale_drop=stale_drop, attempts=attempts,
+        outcomes=outcomes, base_events=base_events)
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +273,15 @@ def group_segments(buckets: Sequence[int], *, min_run: int = 16
 # ---------------------------------------------------------------------------
 # Shared segment builders (single-run and run-batched)
 # ---------------------------------------------------------------------------
+def _evmask(ev, a, o):
+    """``jnp.where(ev, a, o)`` with ``ev`` broadcast along ``a``'s
+    TRAILING axes — ``ev`` is a scalar in the single-run form and a
+    per-run ``(R,)`` vector in the run-batched form (faults give each
+    run its own drop pattern inside one structure-matched group)."""
+    e = jnp.reshape(ev, jnp.shape(ev) + (1,) * (jnp.ndim(a) - jnp.ndim(ev)))
+    return jnp.where(e, a, o)
+
+
 def make_scan_step(base_engine, scan_train, s_update, server_lr: float,
                    retrain: bool, *, run_batched: bool = False):
     """The per-event body shared by the compiled loop and the sweep
@@ -236,29 +291,38 @@ def make_scan_step(base_engine, scan_train, s_update, server_lr: float,
 
     With ``run_batched=True`` every array carries a leading run axis R —
     the blend goes through the engine's run-batched expressions
-    (``blend_runs_expr`` / ``delta_runs_expr``) and the retrain vmaps the
-    plane's scanned local SGD across runs; ``ev`` stays a scalar (within
-    a structure-matched group every run pads at the same positions)."""
+    (``blend_runs_expr`` / ``delta_runs_expr``), the retrain vmaps the
+    plane's scanned local SGD across runs, the server optimizer vmaps
+    its update across runs (each run owns its state slice, so per-run
+    fault drops freeze only that run's state), and ``ev`` is the per-run
+    ``(R,)`` validity vector (pad slots are invalid in every run;
+    fault-dropped slots only in their own run)."""
     if run_batched:
         blend = base_engine.blend_runs_expr
         delta = base_engine.delta_runs_expr
         train = jax.vmap(scan_train)
+        s_upd = (None if s_update is None
+                 else jax.vmap(s_update, in_axes=(0, 0, 0, None)))
     else:
         blend = base_engine.blend_row_expr
         delta = base_engine.delta_row_expr
         train = scan_train
+        s_upd = s_update
     lr = server_lr
 
     def step(g, opt, row, cf, ev, b, sv):
-        if s_update is None:
+        if s_upd is None:
+            # dropped/padded slots carry identity coefficients (β=1) —
+            # the blend is an exact no-op, no masking needed
             g2 = blend(g, row, cf)
         else:
             pg = delta(g, row, cf[..., 1])
-            g2, opt2 = s_update(g, pg, opt, lr)
-            # padded slots must not advance the optimizer state
-            g2 = jnp.where(ev, g2, g)
+            g2, opt2 = s_upd(g, pg, opt, lr)
+            # dropped/padded slots must not advance the global model or
+            # the optimizer state
+            g2 = _evmask(ev, g2, g)
             opt = jax.tree.map(
-                lambda a, o: jnp.where(ev, a, o), opt2, opt)
+                functools.partial(_evmask, ev), opt2, opt)
         new = train(g2, b, sv) if retrain else None
         return g2, opt, new
 
@@ -308,7 +372,8 @@ def make_segment_fn(step_fn, *, run_batched: bool = False):
             rows = gather(bufs, cid)
             g2, opt, new = step_fn(g, opt, rows, cf, ev, b, sv)
             if new is not None:
-                new = jnp.where(ev, new.astype(bufs.dtype), rows)
+                # ev is (R,): a fault-dropped slot keeps that run's row
+                new = _evmask(ev, new.astype(bufs.dtype), rows)
                 bufs = scatter(bufs, new, cid)
             return (bufs, g2, opt), None
         (bufs, g, opt), _ = jax.lax.scan(
@@ -360,7 +425,12 @@ def segment_inputs(trace: EventTrace, staged, s0: int, s1: int,
     coefs = np.concatenate(
         [coefs, np.tile(np.asarray([[1.0, 0.0]], np.float32),
                         (pad, 1))]).astype(np.float32)
-    evalid = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+    # fault-dropped events execute as masked no-op steps: identity
+    # coefs (β=1 from the replay) + evalid=False blocks the retrain
+    # write-back and the FedOpt state advance
+    live = (np.ones(L, bool) if trace.dropped is None
+            else ~trace.dropped[s0:s1])
+    evalid = np.concatenate([live, np.zeros(pad, bool)])
     return cids, coefs, evalid, batches, svalid
 
 
@@ -380,9 +450,12 @@ def stack_segment_inputs(traces: Sequence[EventTrace], stageds,
     cids = np.zeros((Lb, R), np.int32)
     coefs = np.empty((Lb, R, 2), np.float32)
     coefs[L:] = (1.0, 0.0)
-    evalid = np.zeros(Lb, bool)
-    evalid[:L] = True
+    # evalid is PER RUN (Lb, R): pads are invalid everywhere, fault
+    # drops only in their own run (each run has its own realization)
+    evalid = np.zeros((Lb, R), bool)
     for k, trace in enumerate(traces):
+        evalid[:L, k] = (True if trace.dropped is None
+                         else ~trace.dropped[s0:s1])
         cids[:L, k] = trace.cids[s0:s1]
         betas = trace.betas[s0:s1]
         cf0 = betas.astype(np.float32)
@@ -629,9 +702,45 @@ class CompiledLoopRunner:
         return stage_trace_events(self.plane, trace, start)
 
     # -- execution -----------------------------------------------------------
+    def _can_fold(self, trace) -> bool:
+        """§III-B blend-only segments collapse to ONE closed-form MAC
+        launch (``fold_sequential_blends``): the fleet rows are frozen
+        between broadcasts, so the sequential eq. (3) chain is exactly
+        c0·w + Σ_m cvec[m]·row_m.  Only when the per-event storage
+        rounding is unobservable (f32) and the blend is a plain chain on
+        one device — bf16 runs keep the scan so per-event rounding
+        matches the reference loop bit-for-bit within test bounds."""
+        return (not trace.per_event_retrain and self._s_update is None
+                and not self.sharded
+                and np.dtype(self.base_engine.storage_dtype)
+                == np.dtype(np.float32))
+
+    def _run_folded(self, trace, s0, s1, fleet_buf, g_flat, opt_state):
+        c0, coefs = agg.fold_sequential_blends(trace.betas[s0:s1])
+        cvec = np.zeros(trace.M, np.float64)
+        # same-client repeats sum their folded mass (rows are constant
+        # across the segment); dropped events have β=1 → zero mass
+        np.add.at(cvec, trace.cids[s0:s1], coefs)
+        key = ("fold", self._prog_ctx)
+        if key not in self._progs:
+            def fold(g, buf, c0_, cv):
+                acc = (c0_ * g.astype(jnp.float32)
+                       + jnp.tensordot(cv, buf.astype(jnp.float32), axes=1))
+                return acc.astype(g.dtype)
+            dn = (0,) if self.plane.donate else ()
+            self._progs[key] = jax.jit(fold, donate_argnums=dn)
+        self.launches += 1
+        self.segments += 1
+        g_flat = self._progs[key](g_flat, fleet_buf, np.float32(c0),
+                                  cvec.astype(np.float32))
+        return fleet_buf, g_flat, opt_state
+
     def _run_segment(self, trace, staged, s0, s1, s_bucket,
                      fleet_buf, g_flat, opt_state):
         retrain = trace.per_event_retrain
+        if self._can_fold(trace):
+            return self._run_folded(trace, s0, s1, fleet_buf, g_flat,
+                                    opt_state)
         cids, coefs, evalid, batches, svalid = segment_inputs(
             trace, staged, s0, s1, s_bucket,
             fedopt=self._s_update is not None)

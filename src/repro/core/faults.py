@@ -1,0 +1,439 @@
+"""Deterministic fault injection for the AFL timeline (docs/DESIGN.md §9).
+
+CSMAAFL's premise is heterogeneous, *unreliable* clients, yet the
+scheduler simulation (``core/scheduler.py``) is a perfect world: every
+scheduled client finishes, every upload lands.  This module injects the
+failure processes of a real edge deployment — availability windows,
+mid-flight dropouts, flaky uplinks — as a pure HOST-SIDE transform of
+the scheduler's event timeline, applied before ``compile_afl_trace``
+stages it:
+
+* **Availability** — each client runs an on/off Markov process (mean
+  exponential up/down durations) optionally multiplied by a diurnal
+  square wave (per-client random phase).  A client that is offline when
+  the channel would serve its upload *defers* to its next up-window
+  (inflating staleness) or, past the server timeout, *drops* the slot.
+* **Mid-flight failures** — with probability ``midflight_drop`` a
+  client goes offline between download and upload; it either drops its
+  update (server never sees it) or retries after an exponential-backoff
+  re-upload delay.
+* **Flaky uplinks** — each upload independently fails with
+  ``loss_prob`` per attempt; the client retries with exponential
+  backoff up to ``max_retries`` times, then the slot is lost.  The
+  server-side ``timeout`` additionally drops any upload whose total
+  accumulated delay exceeds it (the slot is re-scheduled: the AFL loop
+  keeps aggregating whatever arrives).
+
+The transform keeps the event SKELETON fixed — same events, same order,
+same uploader cids — so segment grouping, bucket plans and sweep
+run-stacking are unchanged: a dropped event compiles to a masked no-op
+step (identity blend β=1, ``evalid=False``), and a delayed event keeps
+its slot while its *realized* staleness (delay converted to global
+iterations via the clean completion times) feeds the β/StalenessTracker
+replay.  Every draw is keyed by a single fault seed (``FaultModel.seed``
+or, when None, the run seed), so the realization is bit-identical across
+the reference loop, the compiled loop, the sharded plane and run-stacked
+sweeps.
+
+Outcome codes ride the :class:`~repro.core.scheduler.UploadEvent`
+``attempt``/``outcome`` metadata that the trace export carries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import UploadEvent
+
+# UploadEvent.outcome codes (int8 in the dense trace arrays)
+OUTCOME_OK = 0
+OUTCOME_UNAVAIL = 1          # offline past the timeout at upload start
+OUTCOME_MIDFLIGHT = 2        # went offline between download and upload
+OUTCOME_LOSS = 3             # uplink lost every attempt up to max_retries
+OUTCOME_TIMEOUT = 4          # accumulated retry delay exceeded the timeout
+OUTCOME_NAMES = {
+    OUTCOME_OK: "ok",
+    OUTCOME_UNAVAIL: "drop_unavail",
+    OUTCOME_MIDFLIGHT: "drop_midflight",
+    OUTCOME_LOSS: "drop_loss",
+    OUTCOME_TIMEOUT: "drop_timeout",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Seeded description of one fault process (attached to a
+    ``Scenario`` via its ``faults`` field, or passed to ``run_afl`` /
+    ``compile_afl_trace`` directly).
+
+    ``seed=None`` derives the fault stream from the run seed (each seed
+    of a sweep sees an independent realization); a fixed value pins one
+    realization across runs.  All probabilities are per event."""
+
+    seed: Optional[int] = None
+    # on/off Markov availability: exponential up/down durations.  None
+    # mean_up (or zero mean_down) disables the process.
+    mean_up: Optional[float] = None
+    mean_down: float = 0.0
+    # probability the client STARTS offline (None = stationary fraction
+    # mean_down / (mean_up + mean_down))
+    start_down_prob: Optional[float] = None
+    # diurnal square wave: down for down_frac of every period, with a
+    # uniform per-client phase
+    diurnal_period: Optional[float] = None
+    diurnal_down_frac: float = 0.0
+    # mid-flight failure between download and upload
+    midflight_drop: float = 0.0
+    midflight_retry_prob: float = 0.5
+    # base re-upload delay; uplink attempt k waits backoff·2^(k-1)
+    retry_backoff: float = 0.0
+    # per-attempt uplink loss probability, bounded retries
+    loss_prob: float = 0.0
+    max_retries: int = 3
+    # server-side acceptance window for the total accumulated delay
+    timeout: Optional[float] = None
+
+    def active(self) -> bool:
+        return bool(
+            (self.mean_up is not None and self.mean_down > 0.0)
+            or (self.diurnal_period is not None
+                and self.diurnal_down_frac > 0.0)
+            or self.midflight_drop > 0.0 or self.loss_prob > 0.0)
+
+
+# named presets for ``--faults`` / ``Scenario.faults`` (values are
+# FaultModel kwargs; "clean" is the explicit no-faults entry)
+FAULT_PRESETS: Dict[str, Optional[Dict[str, Any]]] = {
+    "clean": None,
+    # ~20% dropout from a diurnal off-window (phase-shifted per client):
+    # events landing deep inside the down window time out, events near
+    # its end defer and come back staler
+    "diurnal20": dict(diurnal_period=8.0, diurnal_down_frac=0.3,
+                      timeout=0.5, retry_backoff=0.05),
+    # lossy uplink: mostly retry-inflated staleness, a small drop tail
+    "lossy": dict(loss_prob=0.25, max_retries=2, retry_backoff=0.1,
+                  timeout=2.0),
+    # churned fleet: Markov availability on top of a lossy uplink
+    "flaky": dict(mean_up=6.0, mean_down=2.0, loss_prob=0.15,
+                  max_retries=3, retry_backoff=0.1, timeout=1.0),
+    # degenerate 100%-loss network: every upload drops, the run must
+    # still terminate gracefully
+    "blackout": dict(loss_prob=1.0),
+}
+
+
+def resolve_faults(spec) -> Optional[FaultModel]:
+    """Normalize a fault spec: None / FaultModel / preset name / kwargs
+    dict (optionally ``{"preset": name, **overrides}``); a string
+    starting with ``{`` is parsed as a JSON dict (the CLI form)."""
+    if spec is None or isinstance(spec, FaultModel):
+        return spec
+    if isinstance(spec, str) and spec.lstrip().startswith("{"):
+        return resolve_faults(json.loads(spec))
+    if isinstance(spec, str):
+        try:
+            kw = FAULT_PRESETS[spec]
+        except KeyError:
+            raise KeyError(f"unknown fault preset '{spec}' — available: "
+                           f"{sorted(FAULT_PRESETS)}") from None
+        return None if kw is None else FaultModel(**kw)
+    if isinstance(spec, dict):
+        kw = dict(spec)
+        base = kw.pop("preset", None)
+        merged = dict(FAULT_PRESETS.get(base) or {}) if base else {}
+        merged.update(kw)
+        return FaultModel(**merged) if merged else None
+    raise TypeError(f"fault spec must be None, a FaultModel, a preset "
+                    f"name or a kwargs dict, got {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Availability processes (host-side interval algebra)
+# ---------------------------------------------------------------------------
+def _client_down_intervals(fm: FaultModel, cid: int, fault_seed: int,
+                           horizon: float) -> np.ndarray:
+    """Merged union of this client's Markov-down and diurnal-down
+    intervals covering [0, horizon].  Interval ENDS are exact even past
+    the horizon (the generating draw is completed), so a deferral always
+    lands on a true up-instant."""
+    iv: List[List[float]] = []
+    if fm.mean_up is not None and fm.mean_down > 0.0:
+        rng = np.random.default_rng([fault_seed, cid, 7])
+        p0 = fm.start_down_prob
+        if p0 is None:
+            p0 = fm.mean_down / (fm.mean_up + fm.mean_down)
+        down = bool(rng.random() < p0)
+        t = 0.0
+        while t <= horizon:
+            dur = float(rng.exponential(
+                fm.mean_down if down else fm.mean_up))
+            if down:
+                iv.append([t, t + dur])
+            t += dur
+            down = not down
+    if fm.diurnal_period is not None and fm.diurnal_down_frac > 0.0:
+        period = float(fm.diurnal_period)
+        dlen = min(float(fm.diurnal_down_frac), 1.0) * period
+        rng = np.random.default_rng([fault_seed, cid, 11])
+        phase = float(rng.uniform(0.0, period))
+        k = 0
+        while True:
+            s = k * period - phase
+            if s > horizon:
+                break
+            if s + dlen > 0.0:
+                iv.append([max(s, 0.0), s + dlen])
+            k += 1
+    if not iv:
+        return np.zeros((0, 2))
+    iv.sort()
+    merged = [iv[0]]
+    for s, e in iv[1:]:
+        if s <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], e)
+        else:
+            merged.append([s, e])
+    return np.asarray(merged, np.float64)
+
+
+def _availability_waits(fm: FaultModel, cids: np.ndarray,
+                        t_serve: np.ndarray, fault_seed: int) -> np.ndarray:
+    """Per-event wait until the uploader's next up-instant (0 = already
+    up).  Vectorized per client over the merged down-interval table."""
+    wait = np.zeros(len(cids), np.float64)
+    markov = fm.mean_up is not None and fm.mean_down > 0.0
+    diurnal = (fm.diurnal_period is not None
+               and fm.diurnal_down_frac > 0.0)
+    if not (markov or diurnal):
+        return wait
+    if diurnal and not markov:
+        # pure-diurnal fast path: t is inside the down window iff
+        # (t + phase) mod period < down-length — no interval tables
+        period = float(fm.diurnal_period)
+        dlen = min(float(fm.diurnal_down_frac), 1.0) * period
+        ids = np.unique(cids)
+        phase = np.zeros(int(ids.max()) + 1 if len(ids) else 1)
+        for c in ids:
+            rng = np.random.default_rng([fault_seed, int(c), 11])
+            phase[c] = rng.uniform(0.0, period)
+        pos = np.mod(t_serve + phase[cids], period)
+        down = pos < dlen
+        wait[down] = dlen - pos[down]
+        return wait
+    horizon = float(t_serve.max()) + 1.0 if len(t_serve) else 1.0
+    for c in np.unique(cids):
+        ivs = _client_down_intervals(fm, int(c), fault_seed, horizon)
+        if not len(ivs):
+            continue
+        idx = np.flatnonzero(cids == c)
+        ts = t_serve[idx]
+        pos = np.searchsorted(ivs[:, 0], ts, side="right") - 1
+        hit = pos >= 0
+        hit[hit] &= ts[hit] < ivs[pos[hit], 1]
+        wait[idx[hit]] = ivs[pos[hit], 1] - ts[hit]
+    return wait
+
+
+# ---------------------------------------------------------------------------
+# The realization: clean timeline -> realized timeline + drop masks
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FaultRealization:
+    """Realized view of one timeline under a :class:`FaultModel`.
+
+    ``events`` carry the REALIZED fields — ``t_complete`` shifted by the
+    accumulated delay, ``i``/``staleness`` replayed drop-aware (a client
+    whose upload dropped keeps its old model version, so its next upload
+    is staler), plus ``attempts``/``outcome`` metadata.  ``dropped`` is
+    the per-event fault-drop mask the planes compile to no-op steps."""
+
+    events: List[UploadEvent]
+    dropped: np.ndarray          # (E,) bool
+    outcomes: np.ndarray         # (E,) int8   OUTCOME_* codes
+    attempts: np.ndarray         # (E,) int32
+    delay: np.ndarray            # (E,) float64 accumulated deferral+retry
+    fault_seed: int
+
+
+def realize_events(events: Sequence[UploadEvent], fm: FaultModel, *,
+                   algorithm: str, M: int, tau_u: float,
+                   seed: int = 0) -> FaultRealization:
+    """Apply ``fm`` to a clean scheduler timeline.
+
+    The slot ORDER is preserved (the server consumes grants in the order
+    it issued them — what lets the compiled planes keep their staged
+    structure); a delayed upload is aggregated at its original slot with
+    its staleness inflated by the number of clean completions that fit
+    inside the delay window, and the model-version replay skips dropped
+    uploads (their clients never receive the fresh global model, while
+    the §III-B every-M broadcast still resets everyone).
+
+    Deterministic: every draw is keyed by ``fm.seed`` (or ``seed`` when
+    None) — two calls with the same timeline and model are bit-equal.
+    """
+    E = len(events)
+    fault_seed = int(fm.seed) if fm.seed is not None else int(seed)
+    js = np.fromiter((ev.j for ev in events), np.int64, E)
+    cids = np.fromiter((ev.cid for ev in events), np.int64, E)
+    t_clean = np.fromiter((ev.t_complete for ev in events), np.float64, E)
+    tmo = np.inf if fm.timeout is None else float(fm.timeout)
+
+    # one fixed-order draw block per process: the draw count never
+    # depends on earlier outcomes, so the stream is stable per seed
+    rng = np.random.default_rng([fault_seed, 0xFA])
+    u_mid = rng.random(E)
+    u_retry = rng.random(E)
+    if fm.loss_prob >= 1.0:
+        fails = np.full(E, np.inf)
+    elif fm.loss_prob > 0.0:
+        fails = rng.geometric(1.0 - fm.loss_prob, E) - 1.0
+    else:
+        fails = np.zeros(E)
+
+    outcomes = np.zeros(E, np.int8)
+    attempts = np.ones(E, np.int32)
+
+    # (1) availability at upload start (the channel-grant instant)
+    wait = _availability_waits(fm, cids, t_clean - tau_u, fault_seed)
+    unavail = wait > 0.0
+    drop = unavail & (wait > tmo)
+    outcomes[drop] = OUTCOME_UNAVAIL
+    delay = np.where(unavail & ~drop, wait, 0.0)
+
+    # (2) mid-flight failure: drop, or one backoff'd re-upload
+    mfail = ~drop & (u_mid < fm.midflight_drop)
+    m_drop = mfail & (u_retry >= fm.midflight_retry_prob)
+    outcomes[m_drop] = OUTCOME_MIDFLIGHT
+    m_retry = mfail & ~m_drop
+    delay += np.where(m_retry, fm.retry_backoff, 0.0)
+    attempts += m_retry.astype(np.int32)
+    drop |= m_drop
+
+    # (3) flaky uplink: k failed attempts cost backoff·(2^k − 1) total
+    l_drop = ~drop & (fails > fm.max_retries)
+    outcomes[l_drop] = OUTCOME_LOSS
+    attempts[l_drop] = np.int32(fm.max_retries + 1)
+    retried = ~drop & ~l_drop & (fails > 0)
+    fsafe = np.where(retried, fails, 0.0)
+    delay += np.where(retried, fm.retry_backoff * (2.0 ** fsafe - 1.0), 0.0)
+    attempts += fsafe.astype(np.int32)
+    drop |= l_drop
+
+    # (4) server timeout over the whole accumulated delay
+    t_drop = ~drop & (delay > tmo)
+    outcomes[t_drop] = OUTCOME_TIMEOUT
+    drop |= t_drop
+
+    # realized completion; staleness bump = clean completions that land
+    # inside the delay window (the global model advanced under the
+    # retrying client — t_clean is sorted, both schedulers serialize the
+    # channel)
+    t_real = np.where(drop, t_clean, t_clean + delay)
+    bump = np.zeros(E, np.int64)
+    late = ~drop & (delay > 0.0)
+    if late.any():
+        li = np.flatnonzero(late)
+        behind = np.searchsorted(t_clean, t_real[li], side="right")
+        bump[li] = np.maximum(behind - (li + 1), 0)
+
+    # drop-aware model-version replay: a client's version is the j of
+    # its last ACCEPTED upload (js increase, so a running max suffices);
+    # the §III-B broadcast resets everyone regardless of drops
+    acc = ~drop
+    if algorithm == "afl_baseline":
+        bj = np.where(js % M == 0, js, 0)
+        bcast_before = np.concatenate(([0], np.maximum.accumulate(bj)[:-1]))
+    else:
+        bcast_before = np.zeros(E, np.int64)
+    i_real = np.zeros(E, np.int64)
+    for c in np.unique(cids):
+        idx = np.flatnonzero(cids == c)
+        own = np.where(acc[idx], js[idx], 0)
+        prev = np.concatenate(([0], np.maximum.accumulate(own)[:-1]))
+        i_real[idx] = np.maximum(prev, bcast_before[idx])
+
+    # retry delay folds into the version gap (i ← i_real − bump) so that
+    # staleness == j − i everywhere downstream: the β replay, the
+    # tracker and eq. (11) all see the REALIZED staleness
+    i_eff = i_real - bump
+    stale = js - i_eff
+    # direct construction from pre-converted Python scalars, not
+    # dataclasses.replace: replace() re-derives the field list per call
+    # and per-element int()/float() casts dominate staging at 4k+ events
+    out = [UploadEvent(ev.j, ev.cid, i_, ev.t_request, t_, s_,
+                       ev.local_steps, a_, o_)
+           for ev, i_, t_, s_, a_, o_ in zip(
+               events, i_eff.tolist(), t_real.tolist(), stale.tolist(),
+               attempts.tolist(), outcomes.tolist())]
+    return FaultRealization(events=out, dropped=drop, outcomes=outcomes,
+                            attempts=attempts, delay=delay,
+                            fault_seed=fault_seed)
+
+
+# ---------------------------------------------------------------------------
+# Dropout-robustness metrics
+# ---------------------------------------------------------------------------
+def gini(x) -> float:
+    """Gini index of a nonnegative vector (0 = equal shares)."""
+    x = np.sort(np.asarray(x, np.float64))
+    n = x.size
+    s = float(x.sum())
+    if n == 0 or s <= 0.0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2.0 * float(cum.sum()) / s) / n)
+
+
+def participation_stats(cids, betas, dropped, stale_drop, M: int, *,
+                        attempts=None, outcomes=None,
+                        staleness=None) -> Dict[str, Any]:
+    """Per-run participation accounting shared by every execution path.
+
+    An event participates only if it was neither fault-dropped nor
+    ``max_staleness``-dropped — dropped events no longer inflate the
+    per-client tallies.  ``contribution`` weighs each accepted event by
+    its (1−β) aggregation mass; its Gini is the paper-grade
+    participation-bias signal under dropouts."""
+    cids = np.asarray(cids, np.int64)
+    betas = np.asarray(betas, np.float64)
+    E = len(cids)
+    dropped = (np.zeros(E, bool) if dropped is None
+               else np.asarray(dropped, bool))
+    stale_drop = (np.zeros(E, bool) if stale_drop is None
+                  else np.asarray(stale_drop, bool))
+    accepted = ~dropped & ~stale_drop
+    part = np.bincount(cids[accepted], minlength=M)
+    contrib = np.zeros(M, np.float64)
+    np.add.at(contrib, cids[accepted], 1.0 - betas[accepted])
+    stats: Dict[str, Any] = {
+        "events": E,
+        "accepted": int(accepted.sum()),
+        "fault_drops": int(dropped.sum()),
+        "stale_drops": int((stale_drop & ~dropped).sum()),
+        "drop_rate": float((~accepted).mean()) if E else 0.0,
+        "participation": part.tolist(),
+        "participation_min": int(part.min()) if M else 0,
+        "contribution_gini": gini(contrib),
+    }
+    if attempts is not None:
+        stats["mean_attempts"] = float(np.mean(attempts)) if E else 1.0
+    if outcomes is not None:
+        codes, counts = np.unique(np.asarray(outcomes), return_counts=True)
+        stats["outcomes"] = {OUTCOME_NAMES[int(c)]: int(n)
+                             for c, n in zip(codes, counts)}
+    if staleness is not None and E:
+        st = np.asarray(staleness, np.float64)
+        stats["realized_staleness_mean"] = float(st.mean())
+        stats["realized_staleness_max"] = int(st.max())
+    return stats
+
+
+def trace_stats(trace) -> Dict[str, Any]:
+    """:func:`participation_stats` over a compiled ``EventTrace``."""
+    return participation_stats(
+        trace.cids, trace.betas, trace.dropped, trace.stale_drop,
+        trace.M, attempts=trace.attempts, outcomes=trace.outcomes,
+        staleness=trace.staleness)

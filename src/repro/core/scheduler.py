@@ -58,6 +58,10 @@ class UploadEvent:
     t_complete: float           # when upload finished (aggregation instant)
     staleness: int              # j - i
     local_steps: int            # local iterations this round
+    # fault-injection metadata (core/faults.py); clean timelines keep the
+    # defaults: one attempt, outcome OK
+    attempts: int = 1           # upload attempts (retries included)
+    outcome: int = 0            # faults.OUTCOME_* code
 
 
 @dataclasses.dataclass

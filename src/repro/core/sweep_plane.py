@@ -49,7 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregation as agg
 from repro.core import event_trace as et
+from repro.core import faults as flt
 from repro.core.agg_engine import pow2_bucket
 from repro.core.scheduler import ClientSpec, make_fleet
 from repro.core.sfl import FLHistory
@@ -91,6 +93,11 @@ class Scenario:
     # fleet randomness in the figures AND lets the sweep plane compile
     # the scheduler simulation once per scenario instead of once per run
     fleet_seed: Optional[int] = None
+    # fault injection (core/faults.py, DESIGN.md §9): a FaultModel,
+    # preset name ("diurnal20", "lossy", ...) or kwargs dict; None =
+    # the clean perfect-world timeline.  With FaultModel.seed=None each
+    # run realizes its own fault pattern from the run seed.
+    faults: Optional[Any] = None
 
     def make_fleet(self, samples_per_client: Sequence[int],
                    seed: int) -> List[ClientSpec]:
@@ -157,6 +164,11 @@ register_scenario(Scenario("dirichlet_skew", partitioner="dirichlet",
 register_scenario(Scenario("uplink_bound", tau_u=0.4, tau_d=0.05))
 register_scenario(Scenario("adaptive_k", adaptive=True, max_steps=4))
 register_scenario(Scenario("baseline_cycle", algorithm="afl_baseline"))
+# the fault-injection grid (DESIGN.md §9): a clean control plus the two
+# degradation axes the robustness sweep compares against it
+register_scenario(Scenario("clean_network", faults=None))
+register_scenario(Scenario("diurnal_dropout", faults="diurnal20"))
+register_scenario(Scenario("lossy_uplink", faults="lossy"))
 
 
 # ---------------------------------------------------------------------------
@@ -217,9 +229,11 @@ def build_task_runs(task, scenarios: Sequence, seeds: Sequence[int], *,
                 tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
                 mu_momentum=sc.mu_momentum,
                 max_staleness=sc.max_staleness, seed=seed,
-                events=shared_events)
+                events=shared_events, faults=sc.faults)
             if sc.fleet_seed is not None:
-                shared_events = trace.events
+                # share the CLEAN timeline — faults realize per run
+                # inside compile (per-seed patterns, never re-applied)
+                shared_events = trace.base_events
             g0 = plane.engine.flatten(task.init_params(seed))
             runs.append(SweepRun(sc, seed, plane, trace, g0,
                                  label=f"{sc.name}/s{seed}"))
@@ -239,6 +253,11 @@ class SweepResult:
     def run_index(self) -> Dict[Tuple[str, int], int]:
         return {(r.scenario.name, r.seed): i
                 for i, r in enumerate(self.runs)}
+
+    def fault_stats(self) -> List[Dict[str, Any]]:
+        """Per-run dropout-robustness accounting (realized participation
+        histogram, contribution Gini, drop rates — ``core.faults``)."""
+        return [flt.trace_stats(r.trace) for r in self.runs]
 
 
 class SweepRunner:
@@ -407,13 +426,41 @@ class SweepRunner:
                 r.history.add(float(r.trace.t_complete[i]),
                               int(r.trace.js[i]), m)
 
+    def _fold_prog(self, plane):
+        """Run-batched twin of the compiled-loop fold: the group's
+        blend-only segment collapses to one per-run MAC over the fleet
+        buffers (``fold_sequential_blends`` per run)."""
+        cache = plane.__dict__.setdefault("_sweep_progs", {})
+        key = ("fold-runs",)
+        prog = cache.get(key)
+        if prog is None:
+            def fold(gs, bufs, c0s, cvs):
+                acc = (c0s[:, None] * gs.astype(jnp.float32)
+                       + jnp.einsum("rm,rmn->rn", cvs,
+                                    bufs.astype(jnp.float32)))
+                return acc.astype(gs.dtype)
+            dn = (0,) if plane.donate else ()
+            prog = jax.jit(fold, donate_argnums=dn)
+            cache[key] = prog
+        return prog
+
     def _execute(self, runs_g: List[SweepRun]) -> None:
         plane = runs_g[0].plane
         trace0 = runs_g[0].trace
         retrain = trace0.per_event_retrain
         fedopt = self._s_update is not None
+        base = getattr(plane.engine, "base", plane.engine)
+        # §III-B blend-only stretches fold to closed form when per-event
+        # storage rounding is unobservable (mirrors the compiled-loop
+        # runner's gate)
+        can_fold = (not retrain and not fedopt
+                    and np.dtype(base.storage_dtype)
+                    == np.dtype(np.float32))
         g = jnp.stack([jnp.asarray(r.g0_flat) for r in runs_g])
-        opt = self._s_init(g) if fedopt else ()
+        # per-run optimizer state: vmap the init so every leaf (incl.
+        # adam's scalar step count) carries the run axis — per-run fault
+        # drops then freeze only that run's slice
+        opt = jax.vmap(self._s_init)(g) if fedopt else ()
         if self.eval_flat is not None:
             # the t=0 point evaluates the runs' initial models, exactly
             # as run_afl records eval_fn(params0) before any event
@@ -427,6 +474,20 @@ class SweepRunner:
         stageds = [r.staged for r in runs_g]
         for a, b, segs in runs_g[0].plan:
             for s0, s1, bucket in segs:
+                if can_fold:
+                    R = len(runs_g)
+                    c0s = np.empty(R, np.float32)
+                    cvs = np.zeros((R, plane.M), np.float64)
+                    for k, t in enumerate(traces):
+                        c0, coefs = agg.fold_sequential_blends(
+                            t.betas[s0:s1])
+                        c0s[k] = c0
+                        np.add.at(cvs[k], t.cids[s0:s1], coefs)
+                    g = self._fold_prog(plane)(
+                        g, bufs, c0s, cvs.astype(np.float32))
+                    self.launches += 1
+                    self.segments += 1
+                    continue
                 cids, coefs, evalid, batches, svalid = \
                     et.stack_segment_inputs(traces, stageds, s0, s1,
                                             bucket, fedopt=fedopt)

@@ -36,11 +36,15 @@ Checks (all gated at 1e-5):
   * an M not divisible by the device count (padded rows masked out);
   * the compiled event-trace loop (DESIGN.md §7) on the sharded plane
     matches the single-device windowed loop, in O(#buckets) launches;
+  * fault injection (DESIGN.md §9): the ``diurnal20`` degraded
+    timeline realizes bit-identically on the sharded compiled loop vs
+    the single-device windowed loop (same drop masks/outcomes/
+    participation, history parity <= 1e-5);
   * optional ``--smoke-M 1000``: a large-fleet run stays finite and
     compiles O(log) program variants, not one per event.
 
-``--checks addressing,cnn,bf16,compiled`` narrows the run (subprocess
-callers bound their runtime with it).
+``--checks addressing,cnn,bf16,compiled,faults`` narrows the run
+(subprocess callers bound their runtime with it).
 
 Used by ``tests/test_sharded_plane.py`` (as a subprocess, so tier-1 can
 exercise 8 simulated devices without forcing them on the whole suite)
@@ -218,6 +222,42 @@ def check_compiled(report: dict, M: int, iterations: int) -> None:
     report["compiled_variants"] = r_comp.stats["variants"]
 
 
+def check_faults(report: dict, M: int, iterations: int) -> None:
+    """Fault-injection plane (core/faults.py, DESIGN.md §9) on the
+    sharded fleet: a diurnal-dropout timeline through the compiled
+    sharded loop must match the single-device windowed loop ≤1e-5 AND
+    realize the exact same fault pattern (drop counts, outcome mix,
+    participation histogram) — the fault transform is host-side and
+    seed-keyed, so sharding must not perturb it at all."""
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=128,
+                   batch_size=1, local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=2, seed=0)
+    p0 = task.init_params()
+    base = task.client_plane(fleet)
+    sharded = task.client_plane(fleet, sharded=True)
+    kw = dict(algorithm="csmaafl", iterations=iterations,
+              tau_u=0.1, tau_d=0.1, gamma=0.4, faults="diurnal20", seed=7)
+    r_ref = run_afl(p0, fleet, None, client_plane=base, **kw)
+    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
+                     compiled_loop=True, **kw)
+    report["faults_sharded_parity"] = _maxdiff(r_comp.params, r_ref.params)
+    fs_ref, fs_comp = r_ref.stats["faults"], r_comp.stats["faults"]
+    report["faults_drop_rate"] = fs_comp["drop_rate"]
+    report["faults_outcomes"] = fs_comp["outcomes"]
+    report["faults_realization_match"] = bool(
+        fs_ref["fault_drops"] == fs_comp["fault_drops"]
+        and fs_ref["outcomes"] == fs_comp["outcomes"]
+        and fs_ref["participation"] == fs_comp["participation"])
+
+
 def check_smoke(report: dict, M: int) -> None:
     """Large-fleet smoke: finite result, bounded program-variant count."""
     import jax
@@ -264,7 +304,7 @@ def main(argv=None) -> int:
     ap.add_argument("--iterations", type=int, default=48)
     ap.add_argument("--smoke-M", type=int, default=0, dest="smoke_m",
                     help="also smoke-run a toy fleet this large (0: skip)")
-    ap.add_argument("--checks", default="addressing,cnn,bf16,compiled",
+    ap.add_argument("--checks", default="addressing,cnn,bf16,compiled,faults",
                     help="comma list of checks to run (subprocess callers "
                          "narrow this to bound their runtime)")
     ap.add_argument("--json", default=None, help="write the report here")
@@ -286,14 +326,24 @@ def main(argv=None) -> int:
         check_toy_bf16(report)
     if "compiled" in checks:
         check_compiled(report, args.M, args.iterations)
+    if "faults" in checks:
+        check_faults(report, args.M, args.iterations)
     if args.smoke_m:
         check_smoke(report, args.smoke_m)
 
     bound = 1e-5
     failures = [k for k in ("addressing_max_diff", "afl_f32_parity",
                             "fedavg_f32_parity", "afl_bf16_parity",
-                            "compiled_sharded_parity")
+                            "compiled_sharded_parity",
+                            "faults_sharded_parity")
                 if k in report and report[k] > bound]
+    if "faults" in checks:
+        if not report["faults_realization_match"]:
+            failures.append("faults_realization_match")
+        # the preset must actually degrade the timeline, otherwise this
+        # check silently tests the clean path twice
+        if report["faults_drop_rate"] <= 0.0:
+            failures.append("faults_drop_rate")
     if "compiled" in checks:
         # O(#buckets) launches (+init +eval/broadcast boundaries), never
         # one launch per event window

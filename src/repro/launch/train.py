@@ -98,6 +98,10 @@ def run_fleet_plane(cfg, args, params) -> None:
             raise SystemExit("--loop compiled / --resume apply to the AFL "
                              "event loop; fedavg rounds are already one "
                              "launch each")
+        if args.faults:
+            raise SystemExit("--faults rewrites the AFL upload timeline; "
+                             "fedavg's synchronous rounds have no timeline "
+                             "to degrade")
         final, hist = run_fedavg(
             params, fleet, None, rounds=args.steps, tau_u=0.05, tau_d=0.05,
             eval_fn=task.eval_fn, eval_every=every, client_plane=plane)
@@ -118,12 +122,18 @@ def run_fleet_plane(cfg, args, params) -> None:
             iterations=args.steps, tau_u=0.05, tau_d=0.05,
             gamma=args.gamma, eval_fn=task.eval_fn, eval_every=every,
             client_plane=plane, compiled_loop=(args.loop == "compiled"),
-            resume_state=resume_state)
+            resume_state=resume_state, faults=args.faults)
         final, hist, state = res.params, res.history, res.state
-        if res.stats is not None:
+        if res.stats is not None and "launches" in res.stats:
             print(f"compiled loop: {res.stats['launches']} launches, "
                   f"{res.stats['segments']} segments, "
                   f"{res.stats['variants']} program variants")
+        if res.stats is not None and args.faults:
+            fs = res.stats["faults"]
+            print(f"faults[{args.faults}]: {fs['fault_drops']} dropped / "
+                  f"{fs['events']} events ({fs['drop_rate']:.1%}), "
+                  f"gini={fs['contribution_gini']:.3f}, "
+                  f"mean_attempts={fs['mean_attempts']:.2f}")
     for it, m in zip(hist.iterations, hist.metrics):
         print(f"iter {it:4d} loss={m['loss']:.4f}")
     print(f"{args.steps} events in {time.time()-t0:.1f}s")
@@ -188,10 +198,15 @@ def run_sweep_grid(args) -> None:
           f"({res.stats['segments']} segments, {res.stats['groups']} "
           f"group(s), {res.stats['eval_launches']} eval launches) "
           f"in {wall:.1f}s")
-    for r in res.runs:
+    fstats = res.fault_stats()
+    for r, fs in zip(res.runs, fstats):
         final = r.history.metrics[-1] if r.history.metrics else {}
-        print(f"  {r.label:24s} " + " ".join(
-            f"{k}={v:.4f}" for k, v in final.items()))
+        line = "  " + f"{r.label:24s} " + " ".join(
+            f"{k}={v:.4f}" for k, v in final.items())
+        if fs["fault_drops"]:
+            line += (f"  drops={fs['fault_drops']}/{fs['events']} "
+                     f"gini={fs['contribution_gini']:.3f}")
+        print(line)
 
     worst_parity = None
     if args.check_parity:
@@ -209,7 +224,7 @@ def run_sweep_grid(args) -> None:
                 mu_momentum=sc.mu_momentum,
                 max_staleness=sc.max_staleness, eval_fn=task.eval_fn,
                 eval_every=eval_every, client_plane=r.plane,
-                compiled_loop=True, seed=r.seed)
+                compiled_loop=True, seed=r.seed, faults=sc.faults)
             if r.history.times != solo.history.times:
                 raise SystemExit(f"sweep parity: {r.label} eval "
                                  "timeline diverged from the solo run")
@@ -220,12 +235,22 @@ def run_sweep_grid(args) -> None:
             worst_parity = max(worst_parity, run_drift)
             print(f"sweep parity: {r.label} drift {run_drift:.2e}")
 
+    # robustness summary: the accuracy-vs-drop-rate curve the fault
+    # grids plot — one point per run, plus per-scenario aggregates
+    acc_vs_drop = [{
+        "scenario": r.scenario.name, "seed": r.seed,
+        "drop_rate": fs["drop_rate"],
+        "final_accuracy": (r.history.metrics[-1].get("accuracy")
+                           if r.history.metrics else None),
+    } for r, fs in zip(res.runs, fstats)]
+
     out_path = args.sweep_out
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
     payload = {
         "config": cfg, "host": socket.gethostname(), "wall_s": wall,
         "stats": res.stats, "parity_checked": args.check_parity,
         "parity_max_abs_drift": worst_parity,
+        "accuracy_vs_drop_rate": acc_vs_drop,
         "runs": [{
             "scenario": r.scenario.name, "seed": r.seed,
             "scenario_config": r.scenario.to_dict(),
@@ -234,13 +259,47 @@ def run_sweep_grid(args) -> None:
             "metrics": {k: r.history.series(k).tolist()
                         for k in (r.history.metrics[0] if
                                   r.history.metrics else {})},
-        } for r in res.runs],
+            "faults": fs,
+        } for r, fs in zip(res.runs, fstats)],
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"sweep: convergence grid written to {out_path}")
     if worst_parity is not None and worst_parity > 1e-5:
         raise SystemExit(f"sweep parity drift {worst_parity:.2e} > 1e-5")
+
+    # tolerance-band assertions from the grid config ("expect": a map of
+    # scenario name -> bands) — the nightly fault grid gates on these
+    failures: List[str] = []
+    for name, bands in (cfg.get("expect") or {}).items():
+        sel = [(r, fs) for r, fs in zip(res.runs, fstats)
+               if r.scenario.name == name]
+        if not sel:
+            failures.append(f"{name}: no runs in grid")
+            continue
+        drop = float(np.mean([fs["drop_rate"] for _, fs in sel]))
+        gini = max(fs["contribution_gini"] for _, fs in sel)
+        accs = [r.history.metrics[-1]["accuracy"] for r, _ in sel
+                if r.history.metrics]
+        acc = float(np.mean(accs)) if accs else float("nan")
+        print(f"expect[{name}]: drop_rate={drop:.3f} gini={gini:.3f} "
+              f"accuracy={acc:.3f}")
+        if "drop_rate" in bands:
+            lo, hi = bands["drop_rate"]
+            if not (lo <= drop <= hi):
+                failures.append(f"{name}: drop_rate {drop:.3f} outside "
+                                f"[{lo}, {hi}]")
+        if "contribution_gini_max" in bands and \
+                gini > bands["contribution_gini_max"]:
+            failures.append(f"{name}: contribution_gini {gini:.3f} > "
+                            f"{bands['contribution_gini_max']}")
+        if "final_accuracy_min" in bands and \
+                not acc >= bands["final_accuracy_min"]:
+            failures.append(f"{name}: final accuracy {acc:.3f} < "
+                            f"{bands['final_accuracy_min']}")
+    if failures:
+        raise SystemExit("sweep expectation bands violated:\n  "
+                         + "\n  ".join(failures))
 
 
 def main(argv=None) -> None:
@@ -287,6 +346,15 @@ def main(argv=None) -> None:
                     default=0, metavar="N",
                     help="--sweep: re-run N grid cells as individual "
                          "compiled runs and fail on >1e-5 history drift")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection preset for the fleet-plane AFL "
+                         "run (core/faults.py: diurnal20, lossy, flaky, "
+                         "blackout) or an inline JSON dict of FaultModel "
+                         "overrides, e.g. '{\"preset\": \"lossy\", "
+                         "\"loss_prob\": 0.4}'; rewrites the scheduler "
+                         "timeline with availability windows, mid-flight "
+                         "dropouts and flaky-uplink retries before the "
+                         "loop runs")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--clients", type=int, default=4,
@@ -323,6 +391,10 @@ def main(argv=None) -> None:
     if args.loop != "window" or args.resume:
         ap.error("--loop compiled / --resume ride the fleet plane's AFL "
                  "event loop; use --data-plane fleet")
+    if args.faults:
+        ap.error("--faults degrades the fleet plane's AFL event timeline; "
+                 "use --data-plane fleet (or a --sweep grid with fault "
+                 "scenarios)")
 
     fed = FederatedConfig(num_clients=args.clients, algorithm=args.algorithm,
                           gamma=args.gamma, lr=args.lr)

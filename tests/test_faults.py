@@ -1,0 +1,383 @@
+"""Tests for the fault-injection plane (core/faults.py, DESIGN.md §9):
+
+* spec resolution (presets / kwargs / preset+overrides) and the
+  FaultModel activity predicate;
+* the realization transform: event skeleton preserved, bit-identical
+  under one fault seed, drop mask ⇒ identity-β, realized staleness
+  consistency (staleness == j − i after the drop-aware replay);
+* THE acceptance path: a ~20%-dropout diurnal scenario through the
+  reference windowed loop, the compiled event-trace loop and the
+  run-batched sweep plane — identical fault realizations, history and
+  final-params parity ≤ 1e-5 (the 8-device sharded leg runs as a
+  ``fleet_check --checks faults`` subprocess);
+* degenerate cases: a client offline at t=0, the 100%-loss blackout run
+  (windowed, compiled AND threaded-async) terminating gracefully,
+  retry-inflated staleness tripping ``max_staleness``;
+* participation accounting excludes fault- and staleness-dropped events;
+* the §III-B blend-only closed-form fold (satellite): baseline f32
+  segments collapse to the single-MAC program, same math;
+* ``ema_sequence`` == the sequential ``StalenessTracker`` recurrence.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import event_trace as et
+from repro.core import faults as flt
+from repro.core import sweep_plane as sp
+from repro.core.afl import run_afl
+from repro.core.agg_engine import AggEngine
+from repro.core.client_plane import ClientPlane
+from repro.core.scheduler import AFLScheduler, make_fleet
+from repro.core.tasks import CNNTask
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _toy_plane(M=6, n=97, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    w0 = jnp.asarray(rng.normal(size=n), dtype)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m for m in range(M)],
+                       seed=seed)
+
+    def batch_fn(cid, num_steps, seed_):
+        r = np.random.default_rng((seed_ * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(num_steps, n)), dtype)
+
+    def step(flat, target):
+        return (flat.astype(jnp.float32)
+                - 0.25 * (flat.astype(jnp.float32)
+                          - target.astype(jnp.float32))).astype(dtype)
+
+    plane = ClientPlane(AggEngine(w0, storage_dtype=dtype), fleet, step,
+                        batch_fn)
+    return w0, fleet, plane
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+def test_resolve_faults_specs():
+    assert flt.resolve_faults(None) is None
+    assert flt.resolve_faults("clean") is None
+    fm = flt.resolve_faults("diurnal20")
+    assert isinstance(fm, flt.FaultModel) and fm.active()
+    assert fm.diurnal_period == 8.0
+    # kwargs dict, and preset + overrides
+    fm2 = flt.resolve_faults({"loss_prob": 0.5, "max_retries": 1})
+    assert fm2.loss_prob == 0.5 and fm2.max_retries == 1
+    fm3 = flt.resolve_faults({"preset": "lossy", "loss_prob": 0.9})
+    assert fm3.loss_prob == 0.9
+    assert fm3.timeout == flt.FAULT_PRESETS["lossy"]["timeout"]
+    # passthrough and the activity predicate
+    assert flt.resolve_faults(fm) is fm
+    assert not flt.FaultModel().active()
+    assert flt.FaultModel(loss_prob=1.0).active()
+    with pytest.raises(KeyError, match="unknown fault preset"):
+        flt.resolve_faults("nope")
+    with pytest.raises(TypeError, match="fault spec"):
+        flt.resolve_faults(42)
+
+
+def test_fault_scenarios_registered():
+    assert {"clean_network", "diurnal_dropout", "lossy_uplink"} \
+        <= set(sp.SCENARIOS)
+    assert sp.get_scenario("clean_network").faults is None
+    assert sp.get_scenario("diurnal_dropout").faults == "diurnal20"
+
+
+# ---------------------------------------------------------------------------
+# The realization transform
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("preset", ["diurnal20", "lossy", "flaky"])
+def test_realization_deterministic_and_skeleton_preserving(preset):
+    M = 8
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[100] * M, seed=2)
+    sched = AFLScheduler(fleet, tau_u=0.1, tau_d=0.1)
+    events = sched.trace(6 * M)
+    fm = flt.resolve_faults(preset)
+    r1 = flt.realize_events(events, fm, algorithm="csmaafl", M=M,
+                            tau_u=0.1, seed=5)
+    r2 = flt.realize_events(events, fm, algorithm="csmaafl", M=M,
+                            tau_u=0.1, seed=5)
+    # bit-identical under one fault seed
+    np.testing.assert_array_equal(r1.dropped, r2.dropped)
+    np.testing.assert_array_equal(r1.outcomes, r2.outcomes)
+    np.testing.assert_array_equal(r1.delay, r2.delay)
+    # skeleton preserved: same slots, same order, same uploaders
+    assert [e.j for e in r1.events] == [e.j for e in events]
+    assert [e.cid for e in r1.events] == [e.cid for e in events]
+    for ev, clean in zip(r1.events, events):
+        assert ev.staleness == ev.j - ev.i
+        assert ev.t_complete >= clean.t_complete - 1e-12
+        assert ev.attempts >= 1
+    # a different seed realizes a different pattern (all presets here
+    # are stochastic enough at 48 events to see it)
+    r3 = flt.realize_events(events, fm, algorithm="csmaafl", M=M,
+                            tau_u=0.1, seed=6)
+    assert (not np.array_equal(r1.dropped, r3.dropped)
+            or not np.array_equal(r1.delay, r3.delay))
+    # a pinned FaultModel.seed ignores the run seed
+    fmp = flt.resolve_faults({"preset": preset, "seed": 123})
+    p1 = flt.realize_events(events, fmp, algorithm="csmaafl", M=M,
+                            tau_u=0.1, seed=5)
+    p2 = flt.realize_events(events, fmp, algorithm="csmaafl", M=M,
+                            tau_u=0.1, seed=99)
+    np.testing.assert_array_equal(p1.dropped, p2.dropped)
+    np.testing.assert_array_equal(p1.delay, p2.delay)
+
+
+def test_compile_trace_clean_preset_identical_to_no_faults():
+    _, fleet, _ = _toy_plane()
+    t0 = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=24,
+                              tau_u=0.1, tau_d=0.1, seed=3)
+    t1 = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=24,
+                              tau_u=0.1, tau_d=0.1, seed=3, faults="clean")
+    np.testing.assert_array_equal(t0.betas, t1.betas)
+    np.testing.assert_array_equal(t0.staleness, t1.staleness)
+    assert not t1.dropped.any()
+    assert flt.trace_stats(t1)["drop_rate"] == 0.0
+
+
+def test_compile_trace_dropped_events_have_identity_beta():
+    _, fleet, _ = _toy_plane(M=8)
+    tr = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=48,
+                              tau_u=0.1, tau_d=0.1, seed=3,
+                              faults="diurnal20")
+    assert tr.dropped.any()                      # the preset actually bites
+    np.testing.assert_array_equal(tr.betas[tr.dropped], 1.0)
+    # realized staleness stays the j − i identity the planes replay
+    np.testing.assert_array_equal(
+        tr.staleness, [e.j - e.i for e in tr.events])
+    fs = flt.trace_stats(tr)
+    assert fs["fault_drops"] == int(tr.dropped.sum())
+    assert fs["accepted"] + fs["fault_drops"] + fs["stale_drops"] \
+        == fs["events"]
+
+
+def test_client_offline_at_t_zero():
+    """A client down from t=0 past the timeout drops its first slots as
+    OUTCOME_UNAVAIL — and the run still executes."""
+    w0, fleet, plane = _toy_plane(M=4)
+    fm = flt.FaultModel(mean_up=0.5, mean_down=50.0, start_down_prob=1.0,
+                        timeout=0.2)
+    res = run_afl(w0, fleet, None, algorithm="csmaafl", iterations=12,
+                  tau_u=0.1, tau_d=0.1, gamma=0.4, client_plane=plane,
+                  faults=fm, seed=0)
+    fs = res.stats["faults"]
+    assert fs["outcomes"].get("drop_unavail", 0) > 0
+    assert np.isfinite(np.asarray(res.params, np.float32)).all()
+
+
+def test_blackout_terminates_gracefully():
+    """100% uplink loss: every slot drops, the model never moves, and
+    all three simulator paths still terminate."""
+    w0, fleet, plane = _toy_plane(M=4)
+    r_win = run_afl(w0, fleet, None, algorithm="csmaafl", iterations=12,
+                    tau_u=0.1, tau_d=0.1, gamma=0.4, client_plane=plane,
+                    faults="blackout", seed=0)
+    fs = r_win.stats["faults"]
+    assert fs["accepted"] == 0 and fs["drop_rate"] == 1.0
+    assert _maxdiff(r_win.params, w0) == 0.0     # nothing ever aggregated
+    r_comp = run_afl(w0, fleet, None, algorithm="csmaafl", iterations=12,
+                     tau_u=0.1, tau_d=0.1, gamma=0.4, client_plane=plane,
+                     faults="blackout", seed=0, compiled_loop=True)
+    assert r_comp.stats["faults"]["accepted"] == 0
+    assert _maxdiff(r_comp.params, r_win.params) == 0.0
+
+
+def test_blackout_async_runtime_terminates():
+    from repro.core.async_runtime import run_async
+
+    w0, fleet, plane = _toy_plane(M=3)
+    params, server, stats = run_async(
+        w0, fleet, None, rounds_per_client=2, time_scale=0.001,
+        client_plane=plane, faults="blackout")
+    assert server.drops == 3 * 2                 # every upload dropped
+    assert server.j == 0                         # no iteration ever spent
+    assert _maxdiff(params, w0) == 0.0
+
+
+def test_retry_staleness_trips_max_staleness():
+    """Huge retry backoff inflates realized staleness past the
+    max_staleness cap: the event is ACCEPTED-but-zero-weight
+    (stale_drop), distinct from a fault drop."""
+    _, fleet, _ = _toy_plane(M=6)
+    fm = flt.FaultModel(loss_prob=0.45, max_retries=4, retry_backoff=3.0)
+    tr = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=36,
+                              tau_u=0.1, tau_d=0.1, max_staleness=3,
+                              seed=1, faults=fm)
+    fs = flt.trace_stats(tr)
+    assert tr.staleness.max() > 3                # inflation really happened
+    assert fs["stale_drops"] > 0
+    # stale-dropped events carry β=1 but are NOT fault drops
+    sd = tr.stale_drop & ~tr.dropped
+    np.testing.assert_array_equal(tr.betas[sd], 1.0)
+    clean = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=36,
+                                 tau_u=0.1, tau_d=0.1, max_staleness=3,
+                                 seed=1)
+    assert tr.staleness.max() > clean.staleness.max()
+
+
+def test_participation_stats_excludes_drops():
+    cids = [0, 1, 0, 2, 1, 0]
+    betas = [0.5, 0.7, 1.0, 1.0, 0.8, 0.6]
+    dropped = [False, False, True, False, False, False]
+    stale = [False, False, False, True, False, False]
+    fs = flt.participation_stats(cids, betas, dropped, stale, 3)
+    assert fs["events"] == 6 and fs["accepted"] == 4
+    assert fs["fault_drops"] == 1 and fs["stale_drops"] == 1
+    assert fs["participation"] == [2, 2, 0]      # drops don't count
+    assert fs["participation_min"] == 0
+    assert fs["drop_rate"] == pytest.approx(2 / 6)
+    # gini: equal shares -> 0, one-client concentration -> (M-1)/M
+    assert flt.gini([1.0, 1.0, 1.0, 1.0]) == pytest.approx(0.0)
+    assert flt.gini([0.0, 0.0, 0.0, 5.0]) == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: diurnal ~20% dropout, identical across execution paths
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def faulty_cnn():
+    from repro.configs.paper_cnn import CNNConfig
+
+    M = 8
+    task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=64,
+                   batch_size=1, local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(), seed=0)
+    return task, fleet, task.client_plane(fleet)
+
+
+def test_diurnal_windowed_vs_compiled_parity(faulty_cnn):
+    task, fleet, plane = faulty_cnn
+    kw = dict(algorithm="csmaafl", iterations=32, tau_u=0.1, tau_d=0.1,
+              gamma=0.4, client_plane=plane, faults="diurnal20", seed=3,
+              eval_fn=task.eval_fn, eval_every=8)
+    r_win = run_afl(task.init_params(), fleet, None, **kw)
+    r_comp = run_afl(task.init_params(), fleet, None, compiled_loop=True,
+                     **kw)
+    f_win, f_comp = r_win.stats["faults"], r_comp.stats["faults"]
+    # the realization is bit-identical, not merely statistically alike
+    assert f_win["fault_drops"] == f_comp["fault_drops"] > 0
+    assert f_win["outcomes"] == f_comp["outcomes"]
+    assert f_win["participation"] == f_comp["participation"]
+    assert 0.05 <= f_comp["drop_rate"] <= 0.45   # the ~20% design point
+    assert _maxdiff(r_comp.params, r_win.params) <= 1e-5
+    assert r_comp.history.times == r_win.history.times
+    np.testing.assert_allclose(r_comp.history.series("accuracy"),
+                               r_win.history.series("accuracy"),
+                               atol=1e-5)
+
+
+def test_diurnal_sweep_plane_matches_solo(faulty_cnn):
+    task, fleet, plane = faulty_cnn
+    runs = sp.build_task_runs(task, ["clean_network", "diurnal_dropout"],
+                              [3, 4], iterations=24)
+    res = sp.SweepRunner(runs).run()
+    for r in res.runs:
+        sc = r.scenario
+        solo = run_afl(task.init_params(r.seed), r.plane.fleet, None,
+                       algorithm=sc.algorithm, iterations=24,
+                       tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
+                       mu_momentum=sc.mu_momentum,
+                       max_staleness=sc.max_staleness,
+                       client_plane=r.plane, faults=sc.faults,
+                       seed=r.seed)
+        assert _maxdiff(r.params, solo.params) <= 1e-5, r.label
+        # the sweep trace realized the same fault pattern as the solo run
+        fs, solo_fs = flt.trace_stats(r.trace), solo.stats["faults"]
+        assert fs["fault_drops"] == solo_fs["fault_drops"], r.label
+        assert fs["participation"] == solo_fs["participation"], r.label
+    stats = res.fault_stats()
+    drops = {r.scenario.name: fs["drop_rate"]
+             for r, fs in zip(res.runs, stats)}
+    assert drops["clean_network"] == 0.0
+    assert drops["diurnal_dropout"] > 0.0
+    # per-run seeds realize INDEPENDENT fault patterns (seed=None model)
+    d_runs = [fs for r, fs in zip(res.runs, stats)
+              if r.scenario.name == "diurnal_dropout"]
+    assert d_runs[0]["participation"] != d_runs[1]["participation"] \
+        or d_runs[0]["outcomes"] != d_runs[1]["outcomes"]
+
+
+def test_faults_8dev_subprocess():
+    """The sharded leg of the acceptance criterion: the diurnal scenario
+    through the compiled loop on 8 SIMULATED devices matches the
+    single-device windowed loop with the exact same realization."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    env.pop("XLA_FLAGS", None)                   # fleet_check sets it
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fleet_check",
+         "--devices", "8", "--M", "16", "--iterations", "48",
+         "--checks", "faults"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["devices"] == 8
+    assert report["faults_sharded_parity"] <= 1e-5
+    assert report["faults_realization_match"] is True
+    assert report["faults_drop_rate"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: §III-B blend-only segments fold to one closed-form MAC
+# ---------------------------------------------------------------------------
+def test_baseline_f32_fold_same_math_fewer_scans():
+    w0, fleet, plane = _toy_plane(M=6, n=113)
+    kw = dict(algorithm="afl_baseline", iterations=18, tau_u=0.1,
+              tau_d=0.1, client_plane=plane, seed=0)
+    r_win = run_afl(w0, fleet, None, **kw)
+    r_comp = run_afl(w0, fleet, None, compiled_loop=True, **kw)
+    assert _maxdiff(r_comp.params, r_win.params) <= 1e-5
+    # the fold program (not the scan) executed the blend-only segments
+    assert any(k[0] == "fold" for k in plane._compiled_progs)
+    # and under faults the dropped events carry zero folded mass
+    r_f = run_afl(w0, fleet, None, compiled_loop=True, faults="diurnal20",
+                  **{**kw, "seed": 2})
+    r_fw = run_afl(w0, fleet, None, faults="diurnal20",
+                   **{**kw, "seed": 2})
+    assert r_f.stats["faults"]["fault_drops"] > 0
+    assert _maxdiff(r_f.params, r_fw.params) <= 1e-5
+
+
+def test_bf16_baseline_keeps_the_scan():
+    """bf16 storage rounds per event — the fold gate must stay OFF so
+    the compiled loop matches the reference bit-for-bit within bounds."""
+    w0, fleet, plane = _toy_plane(M=5, n=97, dtype=jnp.bfloat16)
+    tr = et.compile_afl_trace(fleet, algorithm="afl_baseline",
+                              iterations=10, tau_u=0.1, tau_d=0.1)
+    runner = et.CompiledLoopRunner(plane)
+    assert not runner._can_fold(tr)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized μ replay == the sequential tracker
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("momentum", [0.9, 0.3, 0.0, 1.0])
+def test_ema_sequence_matches_tracker(momentum):
+    rng = np.random.default_rng(0)
+    vals = np.maximum(rng.integers(1, 20, size=4000).astype(np.float64),
+                      1.0)
+    out = agg.ema_sequence(vals, momentum)
+    tr = agg.StalenessTracker(momentum=momentum)
+    seq = np.array([tr.update(v) for v in vals])
+    np.testing.assert_allclose(out, seq, rtol=0, atol=1e-12)
