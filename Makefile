@@ -2,8 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test lint format format-check bench bench-agg bench-client \
-	bench-sharded bench-compiled bench-sweep bench-faults bench-gate \
-	bench-record
+	bench-sharded bench-compiled bench-sweep bench-faults bench-guards \
+	bench-gate bench-record
 
 test:
 	python -m pytest -x -q
@@ -53,7 +53,12 @@ bench-sweep:
 bench-faults:
 	python -m benchmarks.run --only faults
 
-# all 6 gated benches; fail on >1.3x slowdown vs benchmarks/
+# the recovery-plane bench (in-scan guard + crash-safe autosave
+# overhead on the compiled run, DESIGN.md §10)
+bench-guards:
+	python -m benchmarks.run --only guards
+
+# all 7 gated benches; fail on >1.3x slowdown vs benchmarks/
 # baseline_*.json (or below the acceptance floors / parity >1e-5 — see
 # benchmarks/check_regression.py).  Baselines are keyed by HOST KEY
 # (REPRO_BENCH_HOST_KEY / github-runner / hostname): an unrecorded host
@@ -61,7 +66,7 @@ bench-faults:
 # experiments/bench/local/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards \
 		--gate --seed 0
 
 # rerun the gated benches on THIS host and fold the fresh results into
@@ -70,6 +75,6 @@ bench-gate:
 # tracked experiments/bench/*.json records (--record).
 bench-record:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards \
 		--seed 0 --record
 	python -m benchmarks.check_regression --record-baselines

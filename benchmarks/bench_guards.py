@@ -1,0 +1,128 @@
+"""Recovery-plane overhead benchmark (docs/DESIGN.md §10): what the
+in-scan update guards and the crash-safe autosaves cost a compiled run.
+
+Both features ride the hot loop — the guard adds one float32 norm +
+``where``-mask cascade per scan step, the autosave adds a durable
+(tmp+fsync+rename, SHA-256) state write every ``AUTOSAVE`` events at
+segment boundaries — so both are gated as SAME-RUN ratios against the
+plain compiled run on the paper-CNN CPU-budget workload
+(``bench_compiled_loop``'s geometry):
+
+* ``speedup = plain_s / guarded_s`` must stay ≥ 1/1.15 (the ISSUE's
+  "guarded ≤ 1.15x unguarded" bound; floor 0.87).  A collapse (guard
+  state falling off the scan carry into per-event host hops, a
+  per-event device→host sync on the verdict) lands far below.
+* ``autosave_overhead = autosave_s / plain_s − 1`` must stay ≤ 5% at
+  ``--autosave 64`` (checked as an extra bound by
+  ``benchmarks/check_regression.py``).  A collapse (checkpointing every
+  event, serializing inside the scan, fsync per leaf) lands far above.
+
+Also records guards-on/guards-off parity on the final params — over
+clean data the guard is a BITWISE no-op (``row_eff`` is the original
+row object when clipping is off), so the recorded parity is 0.0, gated
+≤1e-5 — and the guard counters (all zero on clean data) as context.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, bench_seed, emit, save_result
+
+M = 64
+K = 1                      # local iterations per upload
+LOCAL_BATCHES = 2          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 256           # upload events per timed run
+AUTOSAVE = 64              # events between durable autosaves
+REPS = 3                   # median-of-REPS end-to-end runs per variant
+
+
+def bench_guards() -> None:
+    import jax
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    seed = bench_seed()
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE,
+                   local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=seed)
+    p0 = task.init_params()
+    plane = task.client_plane(fleet)
+    ckdir = os.path.join(RESULTS_DIR, "bench_guards_ck")
+
+    def one(**kw):
+        return run_afl(p0, fleet, None, algorithm="csmaafl",
+                       iterations=ITERATIONS, tau_u=0.1, tau_d=0.1,
+                       gamma=0.4, client_plane=plane, compiled_loop=True,
+                       seed=seed, **kw)
+
+    def timed(**kw):
+        r = one(**kw)                  # warmup compiles the variant
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        ts = []
+        for _ in range(REPS):
+            if "autosave_dir" in kw:   # each rep writes a fresh family
+                shutil.rmtree(ckdir, ignore_errors=True)
+            t0 = time.perf_counter()
+            r = one(**kw)
+            jax.block_until_ready(jax.tree.leaves(r.params)[0])
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), r
+
+    try:
+        t_plain, r_plain = timed()
+        t_grd, r_grd = timed(guards="default")
+        t_save, _ = timed(autosave_every=AUTOSAVE, autosave_dir=ckdir)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    speedup = t_plain / t_grd
+    overhead = t_save / t_plain - 1.0
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_grd.params),
+                                 jax.tree.leaves(r_plain.params)))
+    counters = {k: v for k, v in r_grd.stats["faults"].items()
+                if k.startswith("guard_")}
+    emit("guards.run_afl.plain", t_plain * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_plain:.1f} events/s (compiled, unguarded)")
+    emit("guards.run_afl.guarded", t_grd * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_grd:.1f} events/s; {1 / speedup:.3f}x plain "
+         f"(bound 1.15x); parity {parity:.2e}; "
+         f"rejects={counters.get('guard_rejects', 0)}")
+    emit("guards.run_afl.autosave", t_save * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_save:.1f} events/s; {overhead * 100:+.1f}% "
+         f"overhead at --autosave {AUTOSAVE} (bound +5%)")
+    save_result("guards", {
+        "model": "paper_cnn_cpu_budget", "M": M, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS, "autosave_every": AUTOSAVE,
+        "seed": seed, "mode": plane.engine.mode,
+        "plain_s": t_plain, "guarded_s": t_grd, "autosave_s": t_save,
+        "events_per_s_plain": ITERATIONS / t_plain,
+        "events_per_s_guarded": ITERATIONS / t_grd,
+        "events_per_s_autosave": ITERATIONS / t_save,
+        "guard_counters": counters,
+        "speedup": speedup, "autosave_overhead": overhead,
+        "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    bench_guards()
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                  compiled runs (docs/DESIGN.md §8)
   faults         fault-injection staging cost vs the clean trace +
                  realization determinism (docs/DESIGN.md §9)
+  guards         in-scan update-guard + crash-safe autosave overhead on
+                 the compiled run (docs/DESIGN.md §10)
   roofline       §Roofline table from the dry-run records
 
 Results land in the GITIGNORED ``experiments/bench/local/``; pass
@@ -27,10 +29,10 @@ host record (so casual local runs never dirty the tree).
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
 gated benchmark THIS invocation produced and fails on a >1.3x slowdown
-vs the committed baselines (``make bench-gate`` runs all five gated
+vs the committed baselines (``make bench-gate`` runs all seven gated
 benches; ``make bench-agg`` / ``make bench-client`` / ``make
-bench-sharded`` / ``make bench-compiled`` / ``make bench-sweep`` run
-ungated).  Gate results also land in ``experiments/bench/local/
+bench-sharded`` / ``make bench-compiled`` / ``make bench-sweep`` /
+``make bench-faults`` / ``make bench-guards`` run ungated).  Gate results also land in ``experiments/bench/local/
 gate_report.json`` (machine-readable, one record per gate).
 
 CI-friendliness: ``--seed N`` pins every bench's fleet/batch draws
@@ -48,7 +50,7 @@ import sys
 import traceback
 
 GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop",
-         "sweep_plane", "faults")
+         "sweep_plane", "faults", "guards")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
@@ -57,6 +59,7 @@ RESULT_FILES = {
     "compiled_loop": "compiled_loop.json",
     "sweep_plane": "sweep_plane.json",
     "faults": "faults.json",
+    "guards": "guards.json",
 }
 
 
@@ -65,7 +68,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,client_plane,sharded_plane,"
-                         "compiled_loop,sweep_plane,faults,roofline")
+                         "compiled_loop,sweep_plane,faults,guards,"
+                         "roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -89,8 +93,8 @@ def main(argv=None) -> int:
         os.environ["REPRO_BENCH_RECORD"] = "1"
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
-              "compiled_loop", "sweep_plane", "faults", "kernels",
-              "convergence", "roofline"])
+              "compiled_loop", "sweep_plane", "faults", "guards",
+              "kernels", "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
@@ -123,6 +127,9 @@ def main(argv=None) -> int:
                 b.main()
             elif name == "faults":
                 from benchmarks import bench_faults as b
+                b.main()
+            elif name == "guards":
+                from benchmarks import bench_guards as b
                 b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b

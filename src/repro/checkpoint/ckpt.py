@@ -1,22 +1,43 @@
-"""Msgpack-based pytree checkpointing (no orbax offline).
+"""Msgpack-based pytree checkpointing (no orbax offline) — durable.
 
 Stores the tree structure as a path→tensor map; tensors serialized as
 (dtype, shape, raw bytes).  Restore is sharding-aware: pass a target of
 ShapeDtypeStructs with shardings and leaves are ``jax.device_put`` to them.
 
-Layout:  <dir>/<name>.ckpt        (msgpack payload)
-         <dir>/<name>.meta.json   (step, user metadata)
+Layout:  <dir>/<name>.ckpt            (msgpack payload)
+         <dir>/<name>.ckpt.meta.json  (step, user metadata, sha256)
+
+Durability contract (docs/DESIGN.md §10): every write goes tmp-file →
+fsync → atomic ``os.replace``, the meta record lands BEFORE the payload
+becomes visible and carries the payload's SHA-256, so a reader never
+observes a half-written pair — a crash mid-save leaves either the old
+checkpoint or an orphaned ``.tmp`` that :func:`latest_valid` skips.
+``load``/``load_afl_state`` verify the checksum and raise a typed
+:class:`CorruptCheckpointError` on truncation or bit rot;
+``save(..., keep_last=N)`` rotates step-stamped autosave families.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any, Dict, Optional
+import re
+import signal
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+class CheckpointError(Exception):
+    """A checkpoint pair could not be read (missing files, bad meta)."""
+
+
+class CorruptCheckpointError(CheckpointError):
+    """Payload failed integrity verification (truncated / flipped bits /
+    checksum mismatch against the meta record)."""
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
@@ -52,8 +73,70 @@ def _encode_leaf(x) -> Dict[str, Any]:
             "data": arr.tobytes()}
 
 
+def _atomic_write(path: str, data: bytes) -> None:
+    """tmp + fsync + rename: after this returns the file is either the
+    new content or (crash) the old one — never a prefix."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _fsync_dir(path: str) -> None:
+    # make the renames themselves durable (POSIX; best-effort elsewhere)
+    d = os.path.dirname(os.path.abspath(path))
+    try:
+        fd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+# rotation recognizes step-stamped autosave families: <prefix>-<step>.ckpt
+_FAMILY_RE = re.compile(r"^(.*)-(\d+)\.ckpt$")
+
+# crash-injection hook for the recovery tests (the checkpoint plane
+# dogfoods PR 6's philosophy: the recovery machinery ships with its own
+# fault injector).  REPRO_CKPT_KILL_AFTER=<k> SIGKILLs the process right
+# after the k-th completed durable save — the surviving files must then
+# resume bit-exactly.
+_completed_saves = 0
+
+
+def _crash_test_hook() -> None:
+    global _completed_saves
+    k = os.environ.get("REPRO_CKPT_KILL_AFTER")
+    if not k:
+        return
+    _completed_saves += 1
+    if _completed_saves >= int(k):
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+def autosave_path(directory: str, step: int, prefix: str = "state") -> str:
+    """The rotation-recognized path for an autosave at ``step``."""
+    return os.path.join(directory, f"{prefix}-{step:09d}.ckpt")
+
+
 def save(path: str, tree: Any, *, step: int = 0,
-         metadata: Optional[Dict[str, Any]] = None) -> None:
+         metadata: Optional[Dict[str, Any]] = None,
+         keep_last: Optional[int] = None) -> None:
+    """Durably write ``tree`` to ``path`` (+ ``path``.meta.json).
+
+    Ordering: payload → tmp+fsync, meta (with the payload SHA-256) →
+    atomic replace, THEN the payload's atomic replace — the ckpt only
+    becomes visible with its meta already in place, so there is no
+    half-written pair to misread.  ``keep_last`` prunes older members of
+    a step-stamped ``<prefix>-<step>.ckpt`` family (see
+    :func:`autosave_path`); it is ignored for non-family paths.
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     payload = {}
@@ -62,17 +145,131 @@ def save(path: str, tree: Any, *, step: int = 0,
             payload[k] = v
         else:
             payload[k] = _encode_leaf(v)
-    with open(path, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    with open(path + ".meta.json", "w") as f:
-        json.dump({"step": step, "metadata": metadata or {}}, f)
+    blob = msgpack.packb(payload, use_bin_type=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    meta = {"step": int(step), "metadata": metadata or {},
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "bytes": len(blob)}
+    _atomic_write(path + ".meta.json",
+                  json.dumps(meta).encode("utf-8"))
+    os.replace(tmp, path)
+    _fsync_dir(path)
+    if keep_last is not None:
+        prune_family(path, keep_last)
+    _crash_test_hook()
 
 
-def load(path: str, template: Any, *, shardings: Any = None) -> Any:
+def prune_family(path: str, keep_last: int) -> List[str]:
+    """Delete older step-stamped siblings of ``path`` beyond the newest
+    ``keep_last`` (the just-written one included).  Returns the removed
+    paths.  No-op when ``path`` is not ``<prefix>-<step>.ckpt``-shaped."""
+    m = _FAMILY_RE.match(os.path.basename(path))
+    if m is None or keep_last < 1:
+        return []
+    d = os.path.dirname(os.path.abspath(path))
+    prefix = m.group(1)
+    members = []
+    for name in os.listdir(d):
+        fm = _FAMILY_RE.match(name)
+        if fm is not None and fm.group(1) == prefix:
+            members.append((int(fm.group(2)), os.path.join(d, name)))
+    members.sort()
+    removed = []
+    for _, p in members[:-keep_last]:
+        for victim in (p, p + ".meta.json", p + ".tmp"):
+            try:
+                os.remove(victim)
+            except FileNotFoundError:
+                pass
+        removed.append(p)
+    return removed
+
+
+def _read_payload_bytes(path: str, *, verify: bool = True) -> bytes:
+    try:
+        with open(path, "rb") as f:
+            blob = f.read()
+    except FileNotFoundError:
+        raise CheckpointError(f"no checkpoint payload at {path}") from None
+    if verify:
+        meta = load_metadata(path)
+        want = meta.get("sha256")
+        if want is not None:
+            if meta.get("bytes") not in (None, len(blob)):
+                raise CorruptCheckpointError(
+                    f"{path}: payload is {len(blob)} bytes, meta records "
+                    f"{meta['bytes']} — truncated or partial write")
+            got = hashlib.sha256(blob).hexdigest()
+            if got != want:
+                raise CorruptCheckpointError(
+                    f"{path}: payload sha256 {got[:12]}… does not match "
+                    f"the meta record {want[:12]}… — corrupt checkpoint")
+    return blob
+
+
+def _unpack_payload(path: str, blob: bytes) -> Dict[str, Any]:
+    try:
+        payload = msgpack.unpackb(blob, raw=False)
+    except Exception as e:       # truncated / garbage msgpack framing
+        raise CorruptCheckpointError(
+            f"{path}: payload is not a valid msgpack record ({e})") from e
+    if not isinstance(payload, dict):
+        raise CorruptCheckpointError(f"{path}: unexpected payload layout")
+    return payload
+
+
+def verify(path: str) -> bool:
+    """True iff the (payload, meta) pair at ``path`` is complete and the
+    checksum matches — the :func:`latest_valid` admission test."""
+    try:
+        _unpack_payload(path, _read_payload_bytes(path, verify=True))
+        return True
+    except CheckpointError:
+        return False
+
+
+def latest_valid(directory: str, prefix: Optional[str] = None
+                 ) -> Optional[str]:
+    """Newest checkpoint in ``directory`` that passes :func:`verify` —
+    corrupt or partially-written files (a crash mid-save, a torn rename)
+    are skipped back to the last good one.  ``prefix`` narrows to one
+    step-stamped family; ordering is by family step when present, else
+    mtime.  Returns None when nothing valid exists."""
+    if not os.path.isdir(directory):
+        return None
+    cands = []
+    for name in os.listdir(directory):
+        if not name.endswith(".ckpt"):
+            continue
+        m = _FAMILY_RE.match(name)
+        if prefix is not None and (m is None or m.group(1) != prefix):
+            continue
+        p = os.path.join(directory, name)
+        step = int(m.group(2)) if m is not None else -1
+        try:
+            mtime = os.path.getmtime(p)
+        except OSError:
+            continue
+        cands.append((step, mtime, p))
+    for _, _, p in sorted(cands, reverse=True):
+        if verify(p):
+            return p
+    return None
+
+
+def load(path: str, template: Any, *, shardings: Any = None,
+         verify_checksum: bool = True) -> Any:
     """Restore into the structure of ``template``.  ``shardings`` (same
-    structure) device_puts each leaf to its NamedSharding."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+    structure) device_puts each leaf to its NamedSharding.  Raises
+    :class:`CorruptCheckpointError` when the payload fails its meta
+    checksum (set ``verify_checksum=False`` to skip for pre-durability
+    checkpoints without a recorded hash)."""
+    payload = _unpack_payload(
+        path, _read_payload_bytes(path, verify=verify_checksum))
 
     def decode(k: str):
         e = payload[k]
@@ -92,43 +289,35 @@ def load(path: str, template: Any, *, shardings: Any = None) -> Any:
 
 
 def load_metadata(path: str) -> Dict[str, Any]:
-    with open(path + ".meta.json") as f:
-        return json.load(f)
+    mpath = path + ".meta.json"
+    try:
+        with open(mpath) as f:
+            raw = f.read()
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"no meta record at {mpath} — the checkpoint pair is missing "
+            "or was half-written (the durable writer lands the meta "
+            "before the payload, so a bare payload means a torn save or "
+            "a pre-durability file)") from None
+    try:
+        return json.loads(raw)
+    except ValueError as e:
+        raise CorruptCheckpointError(
+            f"{mpath}: meta record is not valid JSON ({e})") from e
 
 
-# ---------------------------------------------------------------------------
-# AFL run state (the flat-buffer engine's device state + trace cursor)
-# ---------------------------------------------------------------------------
-def save_afl_state(path: str, state: Dict[str, Any], *, step: int = 0,
-                   metadata: Optional[Dict[str, Any]] = None) -> None:
-    """Persist a plane run's raw device state — ``{"fleet_buf" (M, n),
-    "g_flat" (n,), "opt_state" <pytree>, "cursor" <int>}`` (an
-    ``AFLResult.state``) — so a compiled run can resume mid-timeline:
-    the trace is recompiled deterministically from (fleet, seed) and
-    execution restarts at ``cursor`` (docs/DESIGN.md §7)."""
-    payload = {"fleet_buf": state["fleet_buf"], "g_flat": state["g_flat"],
-               "opt_state": state.get("opt_state", ()),
-               "cursor": np.int64(state["cursor"])}
-    meta = dict(metadata or {})
-    # the opt-state STRUCTURE is needed to unflatten at load time; AFL
-    # opt states are dicts of flat arrays + scalars, so a path list plus
-    # the tuple/list markers _flatten already emits reconstructs it
-    save(path, payload, step=step, metadata=meta)
-
-
-def load_afl_state(path: str) -> Dict[str, Any]:
-    """Restore :func:`save_afl_state` output.  The opt-state structure is
-    rebuilt from the stored path map (dicts/lists/tuples of arrays — the
-    shapes ``repro.optim.optimizers`` produce on flat buffers)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+def load_tree(path: str, *, verify_checksum: bool = True) -> Any:
+    """Template-free restore: rebuild the nested dict/list/tuple
+    structure from the '/'-separated path keys and the
+    ``__type__``/``__len__`` markers :func:`save` wrote.  Leaves come
+    back as numpy arrays."""
+    payload = _unpack_payload(
+        path, _read_payload_bytes(path, verify=verify_checksum))
 
     def decode(e):
         return np.frombuffer(e["data"],
                              dtype=np.dtype(e["dtype"])).reshape(e["shape"])
 
-    # rebuild the nested structure from the '/'-separated path keys and
-    # the __type__/__len__ markers _flatten wrote
     root: Dict[str, Any] = {}
     types: Dict[str, str] = {}
     lens: Dict[str, int] = {}
@@ -156,11 +345,68 @@ def load_afl_state(path: str) -> Dict[str, Any]:
         return {k: materialize(v, f"{prefix}{k}/")
                 for k, v in node.items()}
 
-    state = materialize(root)
+    # zero-length containers leave no child keys, only markers — make
+    # sure they still materialize at the root and at marked prefixes
+    for prefix in lens:
+        if lens[prefix] == 0 and prefix:
+            node = root
+            for p in prefix.rstrip("/").split("/")[:-1]:
+                node = node.setdefault(p, {})
+            node.setdefault(prefix.rstrip("/").split("/")[-1], {})
+    return materialize(root)
+
+
+# ---------------------------------------------------------------------------
+# AFL run state (the flat-buffer engine's device state + trace cursor)
+# ---------------------------------------------------------------------------
+def save_afl_state(path: str, state: Dict[str, Any], *, step: int = 0,
+                   metadata: Optional[Dict[str, Any]] = None,
+                   keep_last: Optional[int] = None) -> None:
+    """Persist a plane run's raw device state — ``{"fleet_buf" (M, n),
+    "g_flat" (n,), "opt_state" <pytree>, "cursor" <int>}`` (an
+    ``AFLResult.state``) — so a run can resume mid-timeline: the trace
+    is recompiled deterministically from (fleet, seed) and execution
+    restarts at ``cursor`` (docs/DESIGN.md §7/§10).  Optional entries
+    round-trip too: ``guard_state`` (the in-scan update-guard carry,
+    ``core/guards.py``) and ``history`` (the eval curve recorded so far,
+    as ``{"times", "iterations", "metrics": {name: series}}`` arrays) —
+    so a resumed run continues both the guard accounting and the curve
+    instead of restarting them."""
+    payload = {"fleet_buf": state["fleet_buf"], "g_flat": state["g_flat"],
+               "opt_state": state.get("opt_state", ()),
+               "cursor": np.int64(state["cursor"])}
+    for extra in ("guard_state", "history"):
+        if state.get(extra) is not None:
+            payload[extra] = state[extra]
+    if state.get("windowed"):
+        # loop marker: run_afl routes this state back to the windowed
+        # loop (compiled-loop states omit it)
+        payload["windowed"] = np.asarray(True)
+    meta = dict(metadata or {})
+    # the opt-state STRUCTURE is needed to unflatten at load time; AFL
+    # opt states are dicts of flat arrays + scalars, so a path list plus
+    # the tuple/list markers _flatten already emits reconstructs it
+    save(path, payload, step=step, metadata=meta, keep_last=keep_last)
+
+
+def load_afl_state(path: str, *, verify_checksum: bool = True
+                   ) -> Dict[str, Any]:
+    """Restore :func:`save_afl_state` output (checksum-verified).  The
+    opt-state structure is rebuilt from the stored path map
+    (dicts/lists/tuples of arrays — the shapes
+    ``repro.optim.optimizers`` produce on flat buffers)."""
+    state = load_tree(path, verify_checksum=verify_checksum)
     out = {
         "fleet_buf": jnp.asarray(state["fleet_buf"]),
         "g_flat": jnp.asarray(state["g_flat"]),
         "opt_state": jax.tree.map(jnp.asarray, state.get("opt_state", ())),
         "cursor": int(np.asarray(state["cursor"])),
     }
+    if "guard_state" in state:
+        out["guard_state"] = jax.tree.map(jnp.asarray,
+                                          state["guard_state"])
+    if "history" in state:
+        out["history"] = state["history"]     # numpy; consumer rebuilds
+    if "windowed" in state:
+        out["windowed"] = bool(np.asarray(state["windowed"]))
     return out

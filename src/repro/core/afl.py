@@ -20,13 +20,45 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import faults as flt
+from repro.core import guards as grd
 from repro.core.agg_engine import engine_for
+from repro.core.event_trace import RunInterrupted  # noqa: F401 (re-export)
 from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
                                   ClientSpec, UploadEvent)
 from repro.core.sfl import EvalFn, FLHistory, LocalTrainFn
+
+
+def history_to_state(hist: Optional[FLHistory]) -> Optional[Dict[str, Any]]:
+    """Dense-array view of an FLHistory so it can ride a checkpoint
+    payload (``ckpt.save_afl_state``).  None when there is nothing to
+    save."""
+    if hist is None or not hist.times:
+        return None
+    keys = sorted(hist.metrics[0]) if hist.metrics else []
+    return {"times": np.asarray(hist.times, np.float64),
+            "iterations": np.asarray(hist.iterations, np.int64),
+            "metrics": {k: np.asarray([m[k] for m in hist.metrics],
+                                      np.float64) for k in keys}}
+
+
+def history_from_state(state: Optional[Dict[str, Any]]) -> FLHistory:
+    """Rebuild an FLHistory from :func:`history_to_state` output (or an
+    empty one from None) — the resume side of the round-trip."""
+    hist = FLHistory()
+    if not state:
+        return hist
+    times = np.asarray(state.get("times", ()), np.float64)
+    iters = np.asarray(state.get("iterations", ()), np.int64)
+    metrics = state.get("metrics", {}) or {}
+    for k in range(times.size):
+        hist.add(float(times[k]), int(iters[k]),
+                 {name: float(np.asarray(v)[k])
+                  for name, v in metrics.items()})
+    return hist
 
 
 @dataclasses.dataclass
@@ -60,7 +92,11 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             client_plane=None, use_client_plane: bool = True,
             compiled_loop: bool = False,
             resume_state: Optional[Dict[str, Any]] = None,
-            faults=None,
+            faults=None, guards=None,
+            autosave_every: Optional[int] = None,
+            autosave_dir: Optional[str] = None,
+            autosave_keep_last: Optional[int] = 3,
+            stop_flag=None,
             seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
 
@@ -112,6 +148,27 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     Fault-dropped events are no-ops (no tracker update, no blend, no
     retrain — the client keeps its stale model); deferred/retried events
     carry retry-inflated staleness into eq. (11).
+
+    ``guards`` (``core.guards``: a ``GuardConfig``, preset name, True,
+    or kwargs dict; requires a client plane) arms the in-scan update
+    guards: non-finite rows and update-norm outliers are rejected as
+    identity steps — no model advance, no retrain write-back — with the
+    SAME float32 decision expression on the windowed, compiled, sharded
+    and sweep paths; rejection counters land in ``stats["faults"]``
+    (``guard_rejects`` / ``guard_nonfinite`` / ``guard_norm_outliers`` /
+    ``guard_clipped``).  The β replay and staleness tracker are
+    metadata-derived and unperturbed by rejections (DESIGN.md §10).
+
+    ``autosave_every`` + ``autosave_dir`` (plane runs, windowed or
+    compiled) periodically write crash-safe checkpoints
+    (``ckpt.save_afl_state`` → ``autosave_dir/state-<cursor>.ckpt``,
+    rotated to ``autosave_keep_last``); ``resume_state`` restarts either
+    loop mid-timeline from such a checkpoint (the windowed loop
+    fast-forwards the host-side coefficient bookkeeping and resumes the
+    device work at the cursor — histories and final params match the
+    uninterrupted run).  ``stop_flag`` (nullary callable) requests a
+    graceful stop: the loop writes one final consistent autosave and
+    raises :class:`RunInterrupted`.
     """
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
@@ -124,7 +181,20 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
         from repro.optim import optimizers as _opt
         s_init, s_update = _opt.get_optimizer(server_opt)
 
-    if compiled_loop or resume_state is not None:
+    gcfg = grd.resolve_guards(guards)
+    if plane is None:
+        if gcfg is not None:
+            raise ValueError("guards require a client plane")
+        if autosave_dir is not None or resume_state is not None:
+            raise ValueError("autosave/resume require a client plane")
+    if (autosave_every is not None) != (autosave_dir is not None):
+        raise ValueError("autosave_every and autosave_dir go together")
+
+    # a windowed autosave tags its state with ``windowed`` — resuming it
+    # re-enters THIS loop; untagged (compiled) states resume compiled
+    windowed_resume = (resume_state is not None
+                       and bool(resume_state.get("windowed")))
+    if compiled_loop or (resume_state is not None and not windowed_resume):
         if plane is None:
             raise ValueError("compiled_loop requires a client plane")
         return _run_compiled(params0, fleet, plane, algorithm=algorithm,
@@ -135,7 +205,10 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
                              server_lr=server_lr, s_init=s_init,
                              max_staleness=max_staleness,
                              resume_state=resume_state, faults=faults,
-                             seed=seed)
+                             guards=gcfg, autosave_every=autosave_every,
+                             autosave_dir=autosave_dir,
+                             autosave_keep_last=autosave_keep_last,
+                             stop_flag=stop_flag, seed=seed)
 
     if algorithm == "afl_baseline":
         sched = BaselineAFLScheduler(fleet, tau_u=tau_u, tau_d=tau_d)
@@ -149,17 +222,35 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     tracker = agg.StalenessTracker(momentum=mu_momentum)
     global_params = params0
     engine = g_flat = fleet_buf = opt_state = None
+    start = 0
+    wguard = None if gcfg is None else grd.WindowedGuard(plane, gcfg)
     if plane is not None:
         # fleet-resident mode: global model AND every client model live
         # as flat device buffers; pytrees materialize only for eval
         engine = plane.engine
-        g_flat = engine.flatten(params0)
-        if server_opt is not None:
-            opt_state = s_init(g_flat)
-        # every client immediately trains on the initial broadcast w_0 —
-        # ONE vmapped launch over the (M, n) buffer
-        fleet_buf = plane.init_fleet(g_flat, seed * 100003)
         global_params = None
+        if windowed_resume:
+            g_flat = resume_state["g_flat"]
+            fleet_buf = resume_state["fleet_buf"]
+            opt_state = (resume_state.get("opt_state", ())
+                         if server_opt is not None else None)
+            start = int(resume_state["cursor"])
+            if start > iterations:
+                raise ValueError(
+                    f"resume cursor {start} beyond the {iterations}-event "
+                    "run — was the run saved with fewer iterations?")
+            if wguard is not None \
+                    and resume_state.get("guard_state") is not None:
+                import jax as _jax
+                wguard.state = _jax.tree.map(jnp.asarray,
+                                             resume_state["guard_state"])
+        else:
+            g_flat = engine.flatten(params0)
+            if server_opt is not None:
+                opt_state = s_init(g_flat)
+            # every client immediately trains on the initial broadcast
+            # w_0 — ONE vmapped launch over the (M, n) buffer
+            fleet_buf = plane.init_fleet(g_flat, seed * 100003)
     else:
         if use_engine:
             # the global model lives in the engine's contiguous flat
@@ -210,12 +301,13 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
         if cap is not None and len(pending) >= cap:
             flush_pending()
 
-    hist = FLHistory()
+    hist = history_from_state(resume_state.get("history")) \
+        if windowed_resume else FLHistory()
     events: List[UploadEvent] = []
     betas: List[float] = []
     stale_flags: List[bool] = []
-    if eval_fn is not None:
-        hist.add(0.0, 0, eval_fn(params0))
+    if eval_fn is not None and start == 0 and not hist.times:
+        hist.add(0.0, 0, eval_fn(cur_params()))
 
     # fault injection: realize the timeline ONCE (same transform the
     # event-trace compiler applies, keyed by the same seed — the drop
@@ -229,7 +321,24 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     else:
         event_stream = sched.events(iterations)
 
-    for ev in event_stream:
+    def snapshot_state(cursor: int) -> Dict[str, Any]:
+        st = {"fleet_buf": fleet_buf, "g_flat": g_flat,
+              "opt_state": opt_state if opt_state is not None else (),
+              "cursor": cursor, "windowed": True}
+        if wguard is not None:
+            st["guard_state"] = wguard.state
+        h = history_to_state(hist)
+        if h is not None:
+            st["history"] = h
+        return st
+
+    last_save = start
+    for idx, ev in enumerate(event_stream):
+        # resume fast-forward: events before the cursor replay ONLY the
+        # host-side coefficient bookkeeping (the staleness tracker is a
+        # scalar recurrence over the metadata stream) — the device state
+        # they produced came back from the checkpoint
+        replay = idx < start
         events.append(ev)
         accepted = ev.outcome == flt.OUTCOME_OK
         if not accepted:
@@ -259,16 +368,35 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             betas.append(beta)
 
             # ---- eq. (3): w_{j+1} = β w_j + (1-β) w_i^m ----
-            if plane is not None:
+            guard_ok, row_eff = True, None
+            if replay:
+                pass
+            elif plane is not None:
                 if ev.cid in pending_cids:
                     # this uploader's pending retrain feeds this blend
                     flush_pending()
-                if server_opt is None:
-                    g_flat = engine.blend_row_flat(g_flat, fleet_buf,
-                                                   ev.cid, beta)
+                if wguard is not None:
+                    guard_ok, row_eff = wguard.check(g_flat, fleet_buf,
+                                                     ev.cid)
+                clip = (wguard is not None
+                        and wguard.cfg.clip_norm is not None)
+                if not guard_ok:
+                    # in-scan reject, host-driven: identity step — no
+                    # model advance, no opt advance, no retrain below
+                    # (DESIGN.md §10); β bookkeeping above is untouched
+                    pass
+                elif server_opt is None:
+                    if clip:
+                        g_flat = wguard.blend(g_flat, row_eff, beta)
+                    else:
+                        g_flat = engine.blend_row_flat(g_flat, fleet_buf,
+                                                       ev.cid, beta)
                 else:
-                    pg = engine.delta_row_flat(g_flat, fleet_buf, ev.cid,
-                                               one_minus_beta)
+                    if clip:
+                        pg = wguard.delta(g_flat, row_eff, one_minus_beta)
+                    else:
+                        pg = engine.delta_row_flat(g_flat, fleet_buf,
+                                                   ev.cid, one_minus_beta)
                     g_flat, opt_state = s_update(g_flat, pg, opt_state,
                                                  server_lr)
             elif server_opt is None:
@@ -298,7 +426,7 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
                     global_params, pseudo_grad, opt_state, server_lr)
 
             # ---- §II-B: only the uploader receives w_{j+1} (eq. 4) ----
-            if algorithm != "afl_baseline":
+            if not replay and guard_ok and algorithm != "afl_baseline":
                 if plane is not None:
                     queue_retrain(ev.cid, ev.local_steps,
                                   seed * 100003 + ev.j)
@@ -306,6 +434,9 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
                     client_models[ev.cid] = local_train_fn(
                         global_params, ev.cid, ev.local_steps,
                         seed * 100003 + ev.j)
+
+        if replay:
+            continue
 
         # ---- §III-B requirement (c): broadcast to *all* clients every
         # M iterations (fires on schedule even if this slot dropped);
@@ -321,29 +452,56 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
 
         if eval_fn is not None and ev.j % eval_every == 0:
             hist.add(ev.t_complete, ev.j, eval_fn(cur_params()))
+
+        # ---- crash-safe autosave + graceful stop (plane runs) --------
+        if plane is not None and (autosave_dir is not None
+                                  or stop_flag is not None):
+            cursor = idx + 1
+            want_stop = stop_flag is not None and stop_flag()
+            want_save = (autosave_dir is not None and autosave_every
+                         and cursor - last_save >= autosave_every
+                         and cursor < iterations)
+            if want_stop or want_save:
+                # pending retrain snapshots were taken at queue time, so
+                # flushing early is value-identical to flushing late
+                flush_pending()
+                if autosave_dir is not None:
+                    from repro.checkpoint import ckpt as _ckpt
+                    _ckpt.save_afl_state(
+                        _ckpt.autosave_path(autosave_dir, cursor),
+                        snapshot_state(cursor), step=cursor,
+                        keep_last=autosave_keep_last,
+                        metadata={"algorithm": algorithm,
+                                  "loop": "windowed"})
+                last_save = cursor
+                if want_stop:
+                    raise RunInterrupted(cursor)
     if plane is not None:
         flush_pending()       # leave the fleet buffer fully retrained
     state = None
     if plane is not None:
-        state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
-                 "opt_state": opt_state if opt_state is not None else (),
-                 "cursor": len(events)}
+        state = snapshot_state(len(events))
     stats = {"faults": flt.participation_stats(
         [e.cid for e in events], betas,
         [e.outcome != flt.OUTCOME_OK for e in events], stale_flags, M,
         attempts=[e.attempts for e in events],
         outcomes=[e.outcome for e in events],
-        staleness=[e.staleness for e in events])}
+        staleness=[e.staleness for e in events],
+        guards=None if wguard is None else wguard.counts())}
     return AFLResult(cur_params(), hist, events, betas, state, stats)
 
 
 def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
                   tau_d, gamma, mu_momentum, eval_fn, eval_every,
                   server_opt, server_lr, s_init, max_staleness,
-                  resume_state, faults, seed) -> AFLResult:
+                  resume_state, faults, seed, guards=None,
+                  autosave_every=None, autosave_dir=None,
+                  autosave_keep_last=3, stop_flag=None) -> AFLResult:
     """The ``compiled_loop=True`` body: compile the whole timeline once,
     then execute it as bucket-grouped donated scan segments
-    (``core.event_trace``, DESIGN.md §7)."""
+    (``core.event_trace``, DESIGN.md §7).  Guards ride the scan carry;
+    autosaves fire at segment boundaries through the runner's
+    ``autosave_fn`` hook (DESIGN.md §10)."""
     from repro.core import event_trace as _et
 
     trace = _et.compile_afl_trace(
@@ -351,12 +509,13 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
         tau_d=tau_d, gamma=gamma, mu_momentum=mu_momentum,
         max_staleness=max_staleness, faults=faults, seed=seed)
     runner = _et.CompiledLoopRunner(plane, server_opt=server_opt,
-                                    server_lr=server_lr)
+                                    server_lr=server_lr, guards=guards)
     engine = plane.engine
-    hist = FLHistory()
     if resume_state is None:
+        hist = FLHistory()
         g_flat = engine.flatten(params0)
         opt_state = s_init(g_flat) if server_opt is not None else ()
+        guard_state = runner.init_guard_state()
         # every client trains on the initial broadcast w_0 — ONE launch
         fleet_buf = plane.init_fleet(g_flat, seed * 100003)
         runner.count_launch()
@@ -364,21 +523,54 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
         if eval_fn is not None:
             hist.add(0.0, 0, eval_fn(params0))
     else:
+        hist = history_from_state(resume_state.get("history"))
         g_flat = resume_state["g_flat"]
         fleet_buf = resume_state["fleet_buf"]
         opt_state = resume_state.get("opt_state", ())
+        guard_state = resume_state.get("guard_state")
+        if guard_state is None:
+            guard_state = runner.init_guard_state()
         start = int(resume_state["cursor"])
         if start > len(trace):
             raise ValueError(
                 f"resume cursor {start} beyond the {len(trace)}-event "
                 "trace — was the run compiled with fewer iterations?")
-    fleet_buf, g_flat, opt_state = runner.run(
-        trace, fleet_buf, g_flat, opt_state, start=start,
-        eval_fn=eval_fn, eval_every=eval_every, hist=hist)
+        if start == 0 and not hist.times and eval_fn is not None:
+            hist.add(0.0, 0, eval_fn(engine.unflatten(g_flat)))
+
+    autosave_fn = None
+    if autosave_dir is not None:
+        from repro.checkpoint import ckpt as _ckpt
+
+        def autosave_fn(st):
+            sd = {"fleet_buf": st["fleet_buf"], "g_flat": st["g_flat"],
+                  "opt_state": st["opt_state"], "cursor": st["cursor"]}
+            if runner.guards is not None:
+                sd["guard_state"] = st["guard_state"]
+            h = history_to_state(st["hist"])
+            if h is not None:
+                sd["history"] = h
+            _ckpt.save_afl_state(
+                _ckpt.autosave_path(autosave_dir, st["cursor"]), sd,
+                step=st["cursor"], keep_last=autosave_keep_last,
+                metadata={"algorithm": algorithm, "loop": "compiled"})
+
+    fleet_buf, g_flat, opt_state, guard_state = runner.run(
+        trace, fleet_buf, g_flat, opt_state, guard_state, start=start,
+        eval_fn=eval_fn, eval_every=eval_every, hist=hist,
+        autosave_fn=autosave_fn, autosave_every=autosave_every,
+        stop_flag=stop_flag)
     state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
              "opt_state": opt_state, "cursor": len(trace)}
+    gcounts = None
+    if runner.guards is not None:
+        state["guard_state"] = guard_state
+        gcounts = grd.state_counts(guard_state)
+    h = history_to_state(hist)
+    if h is not None:
+        state["history"] = h
     stats = {"launches": runner.launches, "segments": runner.segments,
              "variants": runner.variants(),
-             "faults": flt.trace_stats(trace)}
+             "faults": flt.trace_stats(trace, guards=gcounts)}
     return AFLResult(engine.unflatten(g_flat), hist, trace.events[start:],
                      [float(b) for b in trace.betas[start:]], state, stats)

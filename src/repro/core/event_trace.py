@@ -65,10 +65,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.core import guards as _guards
 from repro.core.agg_engine import pow2_bucket
 from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
                                   ClientSpec, UploadEvent)
 from repro.kernels.weighted_agg.weighted_agg import weighted_agg_flat2d
+
+
+class RunInterrupted(RuntimeError):
+    """Raised by the compiled-loop runner / windowed loop when a
+    ``stop_flag`` fires mid-run: the run state has already been flushed
+    through the autosave hook, so the caller can exit (or re-enter with
+    ``--resume``) without losing progress.  ``cursor`` is the number of
+    events durably consumed."""
+
+    def __init__(self, cursor: int):
+        super().__init__(
+            f"run interrupted at event {cursor} (state saved)")
+        self.cursor = int(cursor)
 
 
 # ---------------------------------------------------------------------------
@@ -283,20 +297,31 @@ def _evmask(ev, a, o):
 
 
 def make_scan_step(base_engine, scan_train, s_update, server_lr: float,
-                   retrain: bool, *, run_batched: bool = False):
+                   retrain: bool, *, run_batched: bool = False,
+                   guards: Optional[_guards.GuardConfig] = None):
     """The per-event body shared by the compiled loop and the sweep
-    plane: blend the carried global(s) against the uploader's (already
-    gathered) row(s), optionally retrain.  Returns
-    ``step(g, opt, row, cf, ev, b, sv) -> (g_new, opt_new, row_new|None)``.
+    plane: (optionally) guard the uploader's (already gathered) row(s),
+    blend the carried global(s) against them, optionally retrain.
+    Returns ``step(g, opt, gs, row, cf, ev, b, sv) ->
+    (g_new, opt_new, gs_new, row_new|None, ev_eff)`` — ``ev_eff`` is the
+    write-back / state-advance mask (``ev & guard_ok``; just ``ev`` when
+    guards are off, and ``gs`` passes through untouched).
+
+    A guard rejection is the PR 6 drop mechanism applied device-side:
+    the global model and optimizer state come back through
+    ``where``-masks keyed on ``ev_eff`` (identity step), and the caller
+    masks the retrain write-back with ``ev_eff`` so the rejected row
+    never lands in the fleet either.
 
     With ``run_batched=True`` every array carries a leading run axis R —
     the blend goes through the engine's run-batched expressions
     (``blend_runs_expr`` / ``delta_runs_expr``), the retrain vmaps the
     plane's scanned local SGD across runs, the server optimizer vmaps
     its update across runs (each run owns its state slice, so per-run
-    fault drops freeze only that run's state), and ``ev`` is the per-run
-    ``(R,)`` validity vector (pad slots are invalid in every run;
-    fault-dropped slots only in their own run)."""
+    fault drops freeze only that run's state), the guard vmaps its
+    decision (each run owns its median tracker and counters), and ``ev``
+    is the per-run ``(R,)`` validity vector (pad slots are invalid in
+    every run; fault-dropped slots only in their own run)."""
     if run_batched:
         blend = base_engine.blend_runs_expr
         delta = base_engine.delta_runs_expr
@@ -309,52 +334,70 @@ def make_scan_step(base_engine, scan_train, s_update, server_lr: float,
         train = scan_train
         s_upd = s_update
     lr = server_lr
+    gupd = None
+    if guards is not None:
+        gupd = functools.partial(_guards.guard_update, guards)
+        if run_batched:
+            gupd = jax.vmap(gupd)
 
-    def step(g, opt, row, cf, ev, b, sv):
+    def step(g, opt, gs, row, cf, ev, b, sv):
+        if gupd is None:
+            eve, row_eff = ev, row
+        else:
+            ok, row_eff, gs = gupd(g, row, gs, ev)
+            eve = ev & ok
         if s_upd is None:
             # dropped/padded slots carry identity coefficients (β=1) —
-            # the blend is an exact no-op, no masking needed
-            g2 = blend(g, row, cf)
+            # the blend is an exact no-op, no masking needed; guard
+            # rejections DO need the mask (a NaN row poisons the blend
+            # output even under identity-adjacent coefficients)
+            g2 = blend(g, row_eff, cf)
+            if gupd is not None:
+                g2 = _evmask(eve, g2, g)
         else:
-            pg = delta(g, row, cf[..., 1])
+            pg = delta(g, row_eff, cf[..., 1])
             g2, opt2 = s_upd(g, pg, opt, lr)
-            # dropped/padded slots must not advance the global model or
-            # the optimizer state
-            g2 = _evmask(ev, g2, g)
+            # dropped/padded/rejected slots must not advance the global
+            # model or the optimizer state
+            g2 = _evmask(eve, g2, g)
             opt = jax.tree.map(
-                functools.partial(_evmask, ev), opt2, opt)
+                functools.partial(_evmask, eve), opt2, opt)
         new = train(g2, b, sv) if retrain else None
-        return g2, opt, new
+        return g2, opt, gs, new, eve
 
     return step
 
 
 def make_segment_fn(step_fn, *, run_batched: bool = False):
     """One scan segment over a trace slice as a traceable function of
-    ``(fleet_buf, g_flat, opt_state, cids, coefs, evalid, batches,
-    svalid)``.  The single-run form carries ``((M, n), (n,), opt)`` and
-    per-event xs with leading axis L; the run-batched form carries
-    ``((R, M, n), (R, n), opt)`` with xs of shape (L, R, ...) — the SAME
-    event order executes for R runs at once, and ``donate_argnums=(0, 1)``
-    on the jitted wrapper donates the whole stacked run axis."""
+    ``(fleet_buf, g_flat, opt_state, gstate, cids, coefs, evalid,
+    batches, svalid)``.  ``gstate`` is the guard carry (``()`` when
+    guards are off — it rides the scan carry either way so the segment
+    signature is uniform).  The single-run form carries
+    ``((M, n), (n,), opt, gs)`` and per-event xs with leading axis L;
+    the run-batched form carries ``((R, M, n), (R, n), opt, gs)`` with
+    xs of shape (L, R, ...) — the SAME event order executes for R runs
+    at once, and ``donate_argnums=(0, 1)`` on the jitted wrapper donates
+    the whole stacked run axis."""
     if not run_batched:
 
-        def seg(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
-                batches, svalid):
+        def seg(fleet_buf, g_flat, opt_state, gstate, cids, coefs,
+                evalid, batches, svalid):
             def step(carry, xs):
-                buf, g, opt = carry
+                buf, g, opt, gs = carry
                 cid, cf, ev, b, sv = xs
                 row = jax.lax.dynamic_slice_in_dim(buf, cid, 1, axis=0)[0]
-                g2, opt, new = step_fn(g, opt, row, cf, ev, b, sv)
+                g2, opt, gs, new, eve = step_fn(
+                    g, opt, gs, row, cf, ev, b, sv)
                 if new is not None:
-                    new = jnp.where(ev, new.astype(buf.dtype), row)
+                    new = jnp.where(eve, new.astype(buf.dtype), row)
                     buf = jax.lax.dynamic_update_slice_in_dim(
                         buf, new[None], cid, axis=0)
-                return (buf, g2, opt), None
-            (buf, g, opt), _ = jax.lax.scan(
-                step, (fleet_buf, g_flat, opt_state),
+                return (buf, g2, opt, gs), None
+            (buf, g, opt, gs), _ = jax.lax.scan(
+                step, (fleet_buf, g_flat, opt_state, gstate),
                 (cids, coefs, evalid, batches, svalid))
-            return buf, g, opt
+            return buf, g, opt, gs
 
         return seg
 
@@ -364,22 +407,23 @@ def make_segment_fn(step_fn, *, run_batched: bool = False):
         lambda bu, nr, c: jax.lax.dynamic_update_slice_in_dim(
             bu, nr[None], c, axis=0))
 
-    def seg_runs(fleet_bufs, g_flats, opt_state, cids, coefs, evalid,
-                 batches, svalid):
+    def seg_runs(fleet_bufs, g_flats, opt_state, gstate, cids, coefs,
+                 evalid, batches, svalid):
         def step(carry, xs):
-            bufs, g, opt = carry
+            bufs, g, opt, gs = carry
             cid, cf, ev, b, sv = xs
             rows = gather(bufs, cid)
-            g2, opt, new = step_fn(g, opt, rows, cf, ev, b, sv)
+            g2, opt, gs, new, eve = step_fn(g, opt, gs, rows, cf, ev, b, sv)
             if new is not None:
-                # ev is (R,): a fault-dropped slot keeps that run's row
-                new = _evmask(ev, new.astype(bufs.dtype), rows)
+                # eve is (R,): a fault-dropped or guard-rejected slot
+                # keeps that run's row
+                new = _evmask(eve, new.astype(bufs.dtype), rows)
                 bufs = scatter(bufs, new, cid)
-            return (bufs, g2, opt), None
-        (bufs, g, opt), _ = jax.lax.scan(
-            step, (fleet_bufs, g_flats, opt_state),
+            return (bufs, g2, opt, gs), None
+        (bufs, g, opt, gs), _ = jax.lax.scan(
+            step, (fleet_bufs, g_flats, opt_state, gstate),
             (cids, coefs, evalid, batches, svalid))
-        return bufs, g, opt
+        return bufs, g, opt, gs
 
     return seg_runs
 
@@ -570,7 +614,7 @@ class CompiledLoopRunner:
     """
 
     def __init__(self, plane, *, server_opt: Optional[str] = None,
-                 server_lr: float = 1.0, min_run: int = 16):
+                 server_lr: float = 1.0, min_run: int = 16, guards=None):
         self.plane = plane
         self.engine = plane.engine
         # the base AggEngine (the sharded plane wraps it) fixes the blend
@@ -580,6 +624,7 @@ class CompiledLoopRunner:
         self.server_lr = server_lr
         self.min_run = min_run
         self.sharded = getattr(plane, "mesh", None) is not None
+        self.guards = _guards.resolve_guards(guards)
         self._s_update = None
         if server_opt is not None:
             from repro.optim import optimizers as _opt
@@ -587,11 +632,13 @@ class CompiledLoopRunner:
         # compiled segment programs live ON THE PLANE (shared by every
         # runner over it, like the plane's own train programs), so a
         # second compiled run reuses the compiled scan instead of paying
-        # trace+compile again; keys carry (server_opt, server_lr) since
-        # the optimizer update is closed over
+        # trace+compile again; keys carry (server_opt, server_lr, guard
+        # cfg) since the optimizer update / guard expression are closed
+        # over
         self._progs: Dict[Any, Any] = plane.__dict__.setdefault(
             "_compiled_progs", {})
-        self._prog_ctx = (server_opt, float(server_lr))
+        self._prog_ctx = (server_opt, float(server_lr),
+                          None if self.guards is None else self.guards.key())
         self.launches = 0
         self.segments = 0
 
@@ -611,7 +658,8 @@ class CompiledLoopRunner:
     # -- program builders ----------------------------------------------------
     def _scan_step(self, retrain: bool):
         return make_scan_step(self.base_engine, self.plane._scan_train,
-                              self._s_update, self.server_lr, retrain)
+                              self._s_update, self.server_lr, retrain,
+                              guards=self.guards)
 
     def _build_prog(self, retrain: bool):
         seg = make_segment_fn(self._scan_step(retrain))
@@ -635,11 +683,12 @@ class CompiledLoopRunner:
         ax = FLEET_AXIS
         s_update, lr = self._s_update, self.server_lr
         scan_train = plane._scan_train
+        guards = self.guards
 
-        def body(fleet_buf, g_flat, opt_state, cids, coefs, evalid,
-                 batches, svalid):
+        def body(fleet_buf, g_flat, opt_state, gstate, cids, coefs,
+                 evalid, batches, svalid):
             def step(carry, xs):
-                buf, g, opt = carry
+                buf, g, opt, gs = carry
                 cid, cf, ev, b, sv = xs
                 shard = cid // m_loc
                 lrow = cid - shard * m_loc
@@ -649,34 +698,47 @@ class CompiledLoopRunner:
                 # the fleet is never gathered (ShardedRowEngine's trick)
                 row = jax.lax.psum(
                     jnp.where(mine, cur[0].astype(jnp.float32), 0.0), ax)
+                if guards is None:
+                    eve, row_eff = ev, row
+                else:
+                    # row is already the f32 gather — the exact operand
+                    # guard_update would cast to, so verdicts match the
+                    # unsharded paths
+                    ok, row_eff, gs = _guards.guard_update(
+                        guards, g, row, gs, ev)
+                    eve = ev & ok
                 if s_update is None:
                     if use_kernel:
-                        g2 = kern(g, row.astype(storage)[None], cf)
+                        g2 = kern(g, row_eff.astype(storage)[None], cf)
                     else:
                         g2 = (cf[0] * g.astype(jnp.float32)
-                              + cf[1] * row).astype(g.dtype)
+                              + cf[1] * row_eff).astype(g.dtype)
+                    if guards is not None:
+                        g2 = jnp.where(eve, g2, g)
                 else:
-                    pg = cf[1] * (g.astype(jnp.float32) - row)
+                    pg = cf[1] * (g.astype(jnp.float32) - row_eff)
                     g2, opt2 = s_update(g, pg, opt, lr)
-                    g2 = jnp.where(ev, g2, g)
+                    g2 = jnp.where(eve, g2, g)
                     opt = jax.tree.map(
-                        lambda a, o: jnp.where(ev, a, o), opt2, opt)
+                        lambda a, o: jnp.where(eve, a, o), opt2, opt)
                 if retrain:
                     new = scan_train(g2, b, sv)
-                    write = jnp.where(ev & mine,
+                    write = jnp.where(eve & mine,
                                       new[None].astype(buf.dtype), cur)
                     buf = jax.lax.dynamic_update_slice_in_dim(
                         buf, write, lrow, axis=0)
-                return (buf, g2, opt), None
-            (buf, g, opt), _ = jax.lax.scan(
-                step, (fleet_buf, g_flat, opt_state),
+                return (buf, g2, opt, gs), None
+            (buf, g, opt, gs), _ = jax.lax.scan(
+                step, (fleet_buf, g_flat, opt_state, gstate),
                 (cids, coefs, evalid, batches, svalid))
-            return buf, g, opt
+            return buf, g, opt, gs
 
         rep = lambda t: jax.tree.map(lambda _: P(), t)   # noqa: E731
-        in_specs = (fleet_buffer_spec(), P(), rep(opt_proto), P(), P(),
-                    P(), rep(batches_proto), P())
-        out_specs = (fleet_buffer_spec(), P(), rep(opt_proto))
+        gs_proto = () if guards is None else _guards.init_state(guards)
+        in_specs = (fleet_buffer_spec(), P(), rep(opt_proto),
+                    rep(gs_proto), P(), P(), P(), rep(batches_proto), P())
+        out_specs = (fleet_buffer_spec(), P(), rep(opt_proto),
+                     rep(gs_proto))
         f = shard_map_compat(body, mesh=plane.mesh, in_specs=in_specs,
                              out_specs=out_specs)
         dn = (0, 1) if plane.donate else ()
@@ -711,11 +773,12 @@ class CompiledLoopRunner:
         one device — bf16 runs keep the scan so per-event rounding
         matches the reference loop bit-for-bit within test bounds."""
         return (not trace.per_event_retrain and self._s_update is None
-                and not self.sharded
+                and not self.sharded and self.guards is None
                 and np.dtype(self.base_engine.storage_dtype)
                 == np.dtype(np.float32))
 
-    def _run_folded(self, trace, s0, s1, fleet_buf, g_flat, opt_state):
+    def _run_folded(self, trace, s0, s1, fleet_buf, g_flat, opt_state,
+                    gstate):
         c0, coefs = agg.fold_sequential_blends(trace.betas[s0:s1])
         cvec = np.zeros(trace.M, np.float64)
         # same-client repeats sum their folded mass (rows are constant
@@ -733,36 +796,53 @@ class CompiledLoopRunner:
         self.segments += 1
         g_flat = self._progs[key](g_flat, fleet_buf, np.float32(c0),
                                   cvec.astype(np.float32))
-        return fleet_buf, g_flat, opt_state
+        return fleet_buf, g_flat, opt_state, gstate
 
     def _run_segment(self, trace, staged, s0, s1, s_bucket,
-                     fleet_buf, g_flat, opt_state):
+                     fleet_buf, g_flat, opt_state, gstate):
         retrain = trace.per_event_retrain
         if self._can_fold(trace):
             return self._run_folded(trace, s0, s1, fleet_buf, g_flat,
-                                    opt_state)
+                                    opt_state, gstate)
         cids, coefs, evalid, batches, svalid = segment_inputs(
             trace, staged, s0, s1, s_bucket,
             fedopt=self._s_update is not None)
         prog = self._prog_for(retrain, batches, opt_state)
         self.launches += 1
         self.segments += 1
-        fleet_buf, g_flat, opt_state = prog(
-            fleet_buf, g_flat, opt_state, cids, coefs, evalid,
+        fleet_buf, g_flat, opt_state, gstate = prog(
+            fleet_buf, g_flat, opt_state, gstate, cids, coefs, evalid,
             batches, svalid)
-        return fleet_buf, g_flat, opt_state
+        return fleet_buf, g_flat, opt_state, gstate
 
-    def run(self, trace: EventTrace, fleet_buf, g_flat, opt_state=(), *,
-            start: int = 0, eval_fn=None, eval_every: int = 10,
-            hist=None):
+    def init_guard_state(self):
+        """Fresh guard carry for this runner's config (``()`` when
+        guards are off)."""
+        return () if self.guards is None else _guards.init_state(self.guards)
+
+    def run(self, trace: EventTrace, fleet_buf, g_flat, opt_state=(),
+            guard_state=None, *, start: int = 0, eval_fn=None,
+            eval_every: int = 10, hist=None, autosave_fn=None,
+            autosave_every: Optional[int] = None, stop_flag=None):
         """Execute ``trace[start:]`` from the given device state.  Eval
         points and baseline broadcasts split the run into chunks (one
         launch per boundary action); everything between boundaries runs
         as bucket-grouped donated scan segments.  Returns the final
-        ``(fleet_buf, g_flat, opt_state)``."""
+        ``(fleet_buf, g_flat, opt_state, guard_state)``.
+
+        ``autosave_fn`` (called with ``{"fleet_buf", "g_flat",
+        "opt_state", "guard_state", "cursor", "hist"}``) fires every
+        ``autosave_every`` consumed events — but only at cursors where
+        every boundary action (broadcast, eval) up to the cursor has
+        already run, so a resume from the saved state replays nothing
+        and skips nothing.  ``stop_flag`` (a nullary callable) is polled
+        at the same points; when it reads true the runner saves and
+        raises :class:`RunInterrupted`."""
         E = len(trace)
+        gstate = guard_state if guard_state is not None \
+            else self.init_guard_state()
         if start >= E:
-            return fleet_buf, g_flat, opt_state
+            return fleet_buf, g_flat, opt_state, gstate
         if trace.per_event_retrain:
             staged = self._stage_events(trace, start)
         else:
@@ -771,15 +851,35 @@ class CompiledLoopRunner:
         cuts = boundary_cuts(
             trace, start=start,
             eval_every=eval_every if eval_fn is not None else None)
+        last_save = start
+
+        def _save(cursor):
+            nonlocal last_save
+            if autosave_fn is not None:
+                autosave_fn({"fleet_buf": fleet_buf, "g_flat": g_flat,
+                             "opt_state": opt_state, "guard_state": gstate,
+                             "cursor": int(cursor), "hist": hist})
+            last_save = int(cursor)
+
         a = start
         for b in cuts:
             if b <= a:
                 continue
             for s0, s1, bucket in group_segments(
                     trace.s_buckets[a:b], min_run=self.min_run):
-                fleet_buf, g_flat, opt_state = self._run_segment(
+                fleet_buf, g_flat, opt_state, gstate = self._run_segment(
                     trace, staged, a + s0, a + s1, bucket,
-                    fleet_buf, g_flat, opt_state)
+                    fleet_buf, g_flat, opt_state, gstate)
+                cur = a + s1
+                # mid-chunk cursors are safe save points: resume's
+                # boundary_cuts(start=cur) re-derives every boundary
+                # action at i >= cur, none of which has run yet
+                if cur < b:
+                    if stop_flag is not None and stop_flag():
+                        _save(cur)
+                        raise RunInterrupted(cur)
+                    if autosave_every and cur - last_save >= autosave_every:
+                        _save(cur)
             i = b - 1
             if trace.broadcast[i]:
                 fleet_buf = self.plane.train_all(
@@ -790,4 +890,13 @@ class CompiledLoopRunner:
                 hist.add(float(trace.t_complete[i]), int(trace.js[i]),
                          eval_fn(self.engine.unflatten(g_flat)))
             a = b
-        return fleet_buf, g_flat, opt_state
+            # at a chunk boundary the save must come AFTER the boundary
+            # actions: a cursor saved at b with the broadcast/eval still
+            # pending would skip them both on resume
+            if a < E:
+                if stop_flag is not None and stop_flag():
+                    _save(a)
+                    raise RunInterrupted(a)
+                if autosave_every and a - last_save >= autosave_every:
+                    _save(a)
+        return fleet_buf, g_flat, opt_state, gstate

@@ -389,14 +389,21 @@ def gini(x) -> float:
 
 def participation_stats(cids, betas, dropped, stale_drop, M: int, *,
                         attempts=None, outcomes=None,
-                        staleness=None) -> Dict[str, Any]:
+                        staleness=None, guards=None) -> Dict[str, Any]:
     """Per-run participation accounting shared by every execution path.
 
     An event participates only if it was neither fault-dropped nor
     ``max_staleness``-dropped — dropped events no longer inflate the
     per-client tallies.  ``contribution`` weighs each accepted event by
     its (1−β) aggregation mass; its Gini is the paper-grade
-    participation-bias signal under dropouts."""
+    participation-bias signal under dropouts.
+
+    ``guards`` (a ``core.guards.state_counts`` dict) merges the in-scan
+    update-guard rejection counters in.  Guard rejections are a THIRD
+    drop class, orthogonal to the two above: the event was scheduled and
+    accepted by the timeline, but its payload was rejected device-side
+    (DESIGN.md §10) — the per-client participation tallies here are
+    timeline-level and deliberately unchanged by them."""
     cids = np.asarray(cids, np.int64)
     betas = np.asarray(betas, np.float64)
     E = len(cids)
@@ -428,12 +435,16 @@ def participation_stats(cids, betas, dropped, stale_drop, M: int, *,
         st = np.asarray(staleness, np.float64)
         stats["realized_staleness_mean"] = float(st.mean())
         stats["realized_staleness_max"] = int(st.max())
+    if guards is not None:
+        stats.update({k: int(v) for k, v in guards.items()})
     return stats
 
 
-def trace_stats(trace) -> Dict[str, Any]:
-    """:func:`participation_stats` over a compiled ``EventTrace``."""
+def trace_stats(trace, *, guards=None) -> Dict[str, Any]:
+    """:func:`participation_stats` over a compiled ``EventTrace``
+    (``guards`` — the run's guard counters — merges in like the
+    windowed loop's)."""
     return participation_stats(
         trace.cids, trace.betas, trace.dropped, trace.stale_drop,
         trace.M, attempts=trace.attempts, outcomes=trace.outcomes,
-        staleness=trace.staleness)
+        staleness=trace.staleness, guards=guards)

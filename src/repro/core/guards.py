@@ -1,0 +1,284 @@
+"""In-scan update guards — data-dependent rejection inside the jitted scan.
+
+The PR 6 fault plane (``core/faults.py``) perturbs the *timeline* on the
+host: dropouts, deferrals and retries are all metadata, so
+``compile_afl_trace`` can realize them before anything touches a device.
+This module handles the faults the host transform *cannot* precompute,
+because they live in the update payload itself:
+
+* **non-finite client rows** — a NaN/Inf anywhere in an uploaded row
+  would poison the global model through the very first blend;
+* **update-norm outliers** — a row whose update norm ``‖row − g‖₂``
+  exceeds ``norm_outlier ×`` a running median of accepted norms
+  (divergent client state, corrupted payloads, fp blow-ups);
+* optionally, **norm clipping** — surviving updates are shrunk to
+  ``clip_norm`` via :func:`repro.optim.optimizers.clip_by_global_norm`
+  instead of (or in addition to) being rejected.
+
+Rejection uses the PR 6 drop *mechanism*, applied device-side: the event
+keeps its slot in the scan, but the global model, server-optimizer state
+and the uploader's fleet row all pass through ``where``-masks keyed on
+``evalid & ok`` — a β=1 identity blend with no model advance and no
+retrain write-back.  The β replay and the eq. (11) staleness tracker are
+**metadata-derived** (computed on the host before any payload exists), so
+a guard rejection does not perturb the coefficient stream of later
+events; DESIGN.md §10 spells out how that composes with fault-drops and
+stale-drops in the accounting.
+
+The decision expression :func:`guard_update` is ONE traceable function
+shared verbatim by every execution path — the windowed loop (jitted
+gather + decide per event), the compiled single-device scan, the sharded
+``shard_map`` scan and the run-batched sweep scan (``jax.vmap`` over the
+run axis) — with all comparison math in float32, so the accept/reject
+stream and the rejection counters agree across paths.  The counters ride
+the scan carry and surface through
+``faults.participation_stats(..., guards=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import clip_by_global_norm
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """What the in-scan guard checks and how.
+
+    ``nonfinite``      reject rows whose update norm is NaN/Inf.
+    ``norm_outlier``   reject rows with ``‖row − g‖ > norm_outlier · med``
+                       where ``med`` is a running median of accepted
+                       norms (None disables the check).
+    ``warmup``         accepted events before the outlier check arms —
+                       the median estimate needs a few samples first.
+    ``median_eta``     step of the multiplicative median tracker
+                       (``med ·= 1 ± eta``), the classic streaming
+                       median-approximation recurrence.
+    ``clip_norm``      if set, surviving updates are clipped to this
+                       global norm (``optim.optimizers``); rows that are
+                       merely large-but-inlier are shrunk, not dropped.
+    """
+    nonfinite: bool = True
+    norm_outlier: Optional[float] = 10.0
+    warmup: int = 8
+    median_eta: float = 0.05
+    clip_norm: Optional[float] = None
+
+    def active(self) -> bool:
+        return (self.nonfinite or self.norm_outlier is not None
+                or self.clip_norm is not None)
+
+    def key(self):
+        """Hashable identity for jitted-program cache keys."""
+        return (self.nonfinite, self.norm_outlier, self.warmup,
+                self.median_eta, self.clip_norm)
+
+
+GUARD_PRESETS: Dict[str, Optional[GuardConfig]] = {
+    "default": GuardConfig(),
+    "strict": GuardConfig(norm_outlier=5.0, warmup=4, median_eta=0.1),
+    "nonfinite": GuardConfig(norm_outlier=None),
+    "clip": GuardConfig(clip_norm=1.0),
+}
+
+
+def resolve_guards(spec) -> Optional[GuardConfig]:
+    """Normalize a guard spec (None/bool/preset name/kwargs dict/
+    GuardConfig) to a GuardConfig, or None when guarding is off."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return GuardConfig()
+    if isinstance(spec, GuardConfig):
+        return spec if spec.active() else None
+    if isinstance(spec, str):
+        name = spec.strip().lower()
+        if name in ("off", "none", ""):
+            return None
+        if name not in GUARD_PRESETS:
+            raise ValueError(
+                f"unknown guard preset '{spec}' "
+                f"(have: {', '.join(sorted(GUARD_PRESETS))}, off)")
+        return GUARD_PRESETS[name]
+    if isinstance(spec, dict):
+        cfg = GuardConfig(**spec)
+        return cfg if cfg.active() else None
+    raise TypeError(f"cannot resolve guard spec of type {type(spec)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Guard state (rides the scan carry; checkpoints via ckpt.save_afl_state)
+# ---------------------------------------------------------------------------
+def init_state(cfg: Optional[GuardConfig] = None) -> Dict[str, jnp.ndarray]:
+    """Fresh guard-carry state: the running-median tracker plus the
+    rejection counters.  The structure is cfg-independent so checkpoints
+    round-trip regardless of which checks are armed."""
+    return {
+        "med": jnp.zeros((), jnp.float32),
+        "count": jnp.zeros((), jnp.int32),
+        "nonfinite": jnp.zeros((), jnp.int32),
+        "norm_outliers": jnp.zeros((), jnp.int32),
+        "clipped": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state_runs(cfg: Optional[GuardConfig], runs: int
+                    ) -> Dict[str, jnp.ndarray]:
+    """Run-stacked guard state for the sweep plane: every leaf gains a
+    leading (R,) axis; each run tracks its own median and counters."""
+    return {k: jnp.zeros((runs,) + v.shape, v.dtype)
+            for k, v in init_state(cfg).items()}
+
+
+def state_counts(state, index: Optional[int] = None) -> Dict[str, int]:
+    """Host-side counter view of a guard state (one run's slice when
+    ``index`` is given), keyed the way ``participation_stats`` reports
+    them."""
+    def pick(x):
+        a = np.asarray(x)
+        return int(a) if index is None else int(a[index])
+    nf = pick(state["nonfinite"])
+    no = pick(state["norm_outliers"])
+    return {"guard_rejects": nf + no, "guard_nonfinite": nf,
+            "guard_norm_outliers": no, "guard_clipped":
+            pick(state["clipped"])}
+
+
+# ---------------------------------------------------------------------------
+# The decision expression (traceable; shared by every execution path)
+# ---------------------------------------------------------------------------
+def guard_update(cfg: GuardConfig, g, row, state, ev):
+    """Decide one upload: ``(ok, row_eff, new_state)``.
+
+    All comparison math is float32 regardless of the storage dtype, so
+    the windowed loop, the compiled scan, the sharded scan and the
+    run-batched sweep scan reach identical verdicts.  ``ev`` masks pad /
+    fault-dropped slots out of the tracker and the counters.  When
+    ``clip_norm`` is unset, ``row_eff`` is the *original* row object —
+    a guards-on run over clean data blends bit-identically to guards-off.
+    The median tracker advances only on ACCEPTED finite events, so a
+    rejected spike cannot drag the baseline it was judged against.
+    """
+    f32 = jnp.float32
+    g32 = g.astype(f32)
+    row32 = row.astype(f32)
+    delta = row32 - g32
+    norm = jnp.sqrt(jnp.sum(delta * delta))
+    finite = jnp.isfinite(norm)          # catches NaN/Inf anywhere in row
+    med, cnt = state["med"], state["count"]
+    ok = jnp.full_like(finite, True)
+    outlier = jnp.full_like(finite, False)
+    if cfg.nonfinite:
+        ok = ok & finite
+    if cfg.norm_outlier is not None:
+        outlier = ((cnt >= jnp.int32(cfg.warmup)) & finite
+                   & (norm > f32(cfg.norm_outlier) * med))
+        ok = ok & ~outlier
+    row_eff = row
+    clip_hit = jnp.full_like(finite, False)
+    if cfg.clip_norm is not None:
+        delta_c, _ = clip_by_global_norm(delta, cfg.clip_norm)
+        row_eff = g32 + delta_c
+        clip_hit = finite & (norm > f32(cfg.clip_norm))
+    acc = ev & ok & finite
+    eta = f32(cfg.median_eta)
+    med2 = jnp.where(cnt == 0, norm,
+                     jnp.where(norm > med, med * (1 + eta),
+                               med * (1 - eta)))
+    i32 = jnp.int32
+    new_state = {
+        "med": jnp.where(acc, med2, med),
+        "count": cnt + acc.astype(i32),
+        "nonfinite": state["nonfinite"]
+        + ((ev & ~finite).astype(i32) if cfg.nonfinite
+           else jnp.zeros_like(state["nonfinite"])),
+        "norm_outliers": state["norm_outliers"] + (ev & outlier).astype(i32),
+        "clipped": state["clipped"] + (ev & ok & clip_hit).astype(i32),
+    }
+    return ok, row_eff, new_state
+
+
+# ---------------------------------------------------------------------------
+# Windowed-loop twin (host-driven, one jitted decide per accepted event)
+# ---------------------------------------------------------------------------
+def _sharded_gather(plane):
+    """One-row f32 psum gather over the fleet mesh — the exact row the
+    sharded compiled scan hands to :func:`guard_update`."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import shard_map_compat
+    from repro.sharding.specs import FLEET_AXIS, fleet_buffer_spec
+
+    m_loc = plane.layout.rows_per_shard
+
+    def body(buf, cid):
+        shard = cid // m_loc
+        lrow = cid - shard * m_loc
+        cur = jax.lax.dynamic_slice_in_dim(buf, lrow, 1, axis=0)
+        mine = jax.lax.axis_index(FLEET_AXIS) == shard
+        return jax.lax.psum(
+            jnp.where(mine, cur[0].astype(jnp.float32), 0.0), FLEET_AXIS)
+
+    f = shard_map_compat(body, mesh=plane.mesh,
+                         in_specs=(fleet_buffer_spec(), P()),
+                         out_specs=P())
+    return jax.jit(f)
+
+
+class WindowedGuard:
+    """The windowed loop's guard: same :func:`guard_update` expression,
+    driven from the host with one jitted gather + decide per accepted
+    event (a ``bool()`` sync on the verdict — the windowed loop already
+    syncs per event, so this adds no new round-trip class)."""
+
+    def __init__(self, plane, cfg: GuardConfig):
+        self.cfg = cfg
+        self.plane = plane
+        self.base = getattr(plane.engine, "base", plane.engine)
+        self.state = init_state(cfg)
+        if getattr(plane, "mesh", None) is not None:
+            self._gather = _sharded_gather(plane)
+        else:
+            self._gather = jax.jit(
+                lambda buf, cid: jax.lax.dynamic_slice_in_dim(
+                    buf, cid, 1, axis=0)[0].astype(jnp.float32))
+        self._decide = jax.jit(functools.partial(guard_update, cfg))
+        # clip-path blends take the CLIPPED f32 row instead of the fleet
+        # row — the same engine expressions the compiled scan inlines
+        self._blend = jax.jit(lambda g, row, cf:
+                              self.base.blend_row_expr(g, row, cf))
+        self._delta = jax.jit(lambda g, row, sc:
+                              self.base.delta_row_expr(g, row, sc))
+
+    def check(self, g_flat, fleet_buf, cid: int):
+        """Gather the uploader's current row and decide.  Returns
+        ``(ok, row_eff)`` with ``ok`` synced to a host bool; mutates the
+        carried guard state exactly like one in-scan step."""
+        row32 = self._gather(fleet_buf, jnp.int32(cid))
+        ok, row_eff, self.state = self._decide(
+            g_flat, row32, self.state, jnp.asarray(True))
+        return bool(ok), row_eff
+
+    def blend(self, g_flat, row_eff, beta: float):
+        """eq. (3) blend against the clipped row (coefficients staged
+        exactly like ``event_trace.segment_inputs``)."""
+        cf0 = np.float32(beta)
+        cf = jnp.asarray(np.stack([cf0, np.float32(1.0) - cf0]))
+        return self._blend(g_flat, row_eff, cf)
+
+    def delta(self, g_flat, row_eff, one_minus_beta: float):
+        """FedOpt pseudo-gradient against the clipped row."""
+        return self._delta(g_flat, row_eff,
+                           jnp.float32(np.float32(one_minus_beta)))
+
+    def counts(self) -> Dict[str, int]:
+        return state_counts(self.state)

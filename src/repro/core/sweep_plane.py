@@ -52,9 +52,13 @@ import numpy as np
 from repro.core import aggregation as agg
 from repro.core import event_trace as et
 from repro.core import faults as flt
+from repro.core import guards as grd
+from repro.core.afl import history_from_state, history_to_state
 from repro.core.agg_engine import pow2_bucket
+from repro.core.event_trace import RunInterrupted
 from repro.core.scheduler import ClientSpec, make_fleet
 from repro.core.sfl import FLHistory
+from repro.checkpoint import ckpt as _ckpt
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +102,10 @@ class Scenario:
     # the clean perfect-world timeline.  With FaultModel.seed=None each
     # run realizes its own fault pattern from the run seed.
     faults: Optional[Any] = None
+    # in-scan update guards (core/guards.py, DESIGN.md §10): a
+    # GuardConfig, preset name ("default", "strict", ...) or kwargs
+    # dict.  None inherits the sweep-wide setting; "off" forces clean.
+    guards: Optional[Any] = None
 
     def make_fleet(self, samples_per_client: Sequence[int],
                    seed: int) -> List[ClientSpec]:
@@ -200,6 +208,7 @@ class SweepRun:
     history: Optional[FLHistory] = None
     g_final: Any = None
     params: Any = None
+    guard_counts: Optional[Dict[str, int]] = None
 
 
 def build_task_runs(task, scenarios: Sequence, seeds: Sequence[int], *,
@@ -256,8 +265,10 @@ class SweepResult:
 
     def fault_stats(self) -> List[Dict[str, Any]]:
         """Per-run dropout-robustness accounting (realized participation
-        histogram, contribution Gini, drop rates — ``core.faults``)."""
-        return [flt.trace_stats(r.trace) for r in self.runs]
+        histogram, contribution Gini, drop rates — ``core.faults``),
+        joined by the in-scan guard rejection counters when armed."""
+        return [flt.trace_stats(r.trace, guards=r.guard_counts)
+                for r in self.runs]
 
 
 class SweepRunner:
@@ -283,7 +294,11 @@ class SweepRunner:
     def __init__(self, runs: Sequence[SweepRun], *,
                  server_opt: Optional[str] = None, server_lr: float = 1.0,
                  eval_flat=None, eval_every: int = 10,
-                 sub_batch: Optional[int] = None, min_run: int = 16):
+                 sub_batch: Optional[int] = None, min_run: int = 16,
+                 guards: Optional[Any] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 autosave_every: Optional[int] = None,
+                 keep_last: int = 3, stop_flag=None):
         if not runs:
             raise ValueError("sweep needs at least one run")
         self.runs = list(runs)
@@ -314,6 +329,20 @@ class SweepRunner:
                            else jax.jit(jax.vmap(eval_flat)))
         self.sub_batch = sub_batch
         self.min_run = min_run
+        # sweep-wide guard default; scenarios override per cell via
+        # Scenario.guards (runs with differing configs land in separate
+        # structure groups, so each group's program has ONE guard cfg)
+        self.guards = grd.resolve_guards(guards)
+        if autosave_every is not None and checkpoint_dir is None:
+            raise ValueError("autosave_every needs a checkpoint_dir to "
+                             "write sweep checkpoints into")
+        self.checkpoint_dir = checkpoint_dir
+        self.autosave_every = autosave_every
+        self.keep_last = keep_last
+        self.stop_flag = stop_flag
+        self._events_done = 0
+        self._last_save = 0
+        self._finalized: List[int] = []
         self.launches = 0
         self.segments = 0
         self.eval_launches = 0
@@ -388,24 +417,35 @@ class SweepRunner:
                     batch_sig = None
                 seg_sigs.append((s0, s1, bk, pow2_bucket(s1 - s0),
                                  batch_sig))
+        gcfg = self._run_guards(run)
         return (plane.M, eng.n, str(eng.storage_dtype), eng.mode,
                 trace.per_event_retrain, run.cuts,
                 tuple(sorted(run.bcast_staged)),
                 self._tree_sig(run.init_staged, lead_axes=0),
-                tuple(seg_sigs))
+                tuple(seg_sigs),
+                None if gcfg is None else gcfg.key())
+
+    def _run_guards(self, run: SweepRun) -> Optional[grd.GuardConfig]:
+        """A run's effective guard config: the scenario's own spec when
+        set (``"off"`` forces clean), else the sweep-wide default."""
+        sg = run.scenario.guards
+        return self.guards if sg is None else grd.resolve_guards(sg)
 
     # -- programs ------------------------------------------------------------
-    def _seg_prog(self, plane, retrain: bool):
+    def _seg_prog(self, plane, retrain: bool,
+                  gcfg: Optional[grd.GuardConfig] = None):
         # cached ON the group's plane (like the compiled-loop programs),
         # so a rebuilt runner over the same planes reuses compiled code
         cache = plane.__dict__.setdefault("_sweep_progs", {})
-        key = ("seg-runs", retrain, self.server_opt, self.server_lr)
+        key = ("seg-runs", retrain, self.server_opt, self.server_lr,
+               None if gcfg is None else gcfg.key())
         prog = cache.get(key)
         if prog is None:
             base = getattr(plane.engine, "base", plane.engine)
             step = et.make_scan_step(base, plane._scan_train,
                                      self._s_update, self.server_lr,
-                                     retrain, run_batched=True)
+                                     retrain, run_batched=True,
+                                     guards=gcfg)
             seg = et.make_segment_fn(step, run_batched=True)
             dn = (0, 1) if plane.donate else ()
             prog = jax.jit(seg, donate_argnums=dn)
@@ -444,38 +484,63 @@ class SweepRunner:
             cache[key] = prog
         return prog
 
-    def _execute(self, runs_g: List[SweepRun]) -> None:
+    def _execute(self, runs_g: List[SweepRun], *,
+                 cell: Tuple[int, int] = (0, 0),
+                 flight: Optional[Dict[str, Any]] = None) -> None:
         plane = runs_g[0].plane
         trace0 = runs_g[0].trace
         retrain = trace0.per_event_retrain
         fedopt = self._s_update is not None
         base = getattr(plane.engine, "base", plane.engine)
+        gcfg = self._run_guards(runs_g[0])
+        R = len(runs_g)
         # §III-B blend-only stretches fold to closed form when per-event
         # storage rounding is unobservable (mirrors the compiled-loop
-        # runner's gate)
-        can_fold = (not retrain and not fedopt
+        # runner's gate); guards must observe every row, so folding is
+        # off whenever they are armed
+        can_fold = (not retrain and not fedopt and gcfg is None
                     and np.dtype(base.storage_dtype)
                     == np.dtype(np.float32))
-        g = jnp.stack([jnp.asarray(r.g0_flat) for r in runs_g])
-        # per-run optimizer state: vmap the init so every leaf (incl.
-        # adam's scalar step count) carries the run axis — per-run fault
-        # drops then freeze only that run's slice
-        opt = jax.vmap(self._s_init)(g) if fedopt else ()
-        if self.eval_flat is not None:
-            # the t=0 point evaluates the runs' initial models, exactly
-            # as run_afl records eval_fn(params0) before any event
-            self._record_eval(runs_g, g)
-        init_b = jax.tree.map(lambda *xs: np.stack(xs),
-                              *[r.init_staged[0] for r in runs_g])
-        init_v = np.stack([r.init_staged[1] for r in runs_g])
-        bufs = plane.train_all_runs(g, init_b, init_v)
-        self.launches += 1
+        start_chunk = 0
+        if flight is not None:
+            # mid-cell resume: the checkpointed device state picks up at
+            # the recorded chunk boundary; fleet init and the t=0 eval
+            # already happened in the interrupted process and live in
+            # the restored buffers / histories
+            start_chunk = int(np.asarray(flight["chunk"]))
+            g = jnp.asarray(flight["g"])
+            bufs = jnp.asarray(flight["bufs"])
+            opt = (jax.tree.map(jnp.asarray, flight["opt"])
+                   if fedopt else ())
+            gs = (jax.tree.map(jnp.asarray, flight["gstate"])
+                  if gcfg is not None else ())
+            fh = flight.get("hist") or {}
+            for k, r in enumerate(runs_g):
+                r.history = history_from_state(fh.get(str(k)))
+        else:
+            g = jnp.stack([jnp.asarray(r.g0_flat) for r in runs_g])
+            # per-run optimizer state: vmap the init so every leaf
+            # (incl. adam's scalar step count) carries the run axis —
+            # per-run fault drops then freeze only that run's slice
+            opt = jax.vmap(self._s_init)(g) if fedopt else ()
+            gs = grd.init_state_runs(gcfg, R) if gcfg is not None else ()
+            if self.eval_flat is not None:
+                # the t=0 point evaluates the runs' initial models, as
+                # run_afl records eval_fn(params0) before any event
+                self._record_eval(runs_g, g)
+            init_b = jax.tree.map(lambda *xs: np.stack(xs),
+                                  *[r.init_staged[0] for r in runs_g])
+            init_v = np.stack([r.init_staged[1] for r in runs_g])
+            bufs = plane.train_all_runs(g, init_b, init_v)
+            self.launches += 1
         traces = [r.trace for r in runs_g]
         stageds = [r.staged for r in runs_g]
-        for a, b, segs in runs_g[0].plan:
+        plan = runs_g[0].plan
+        for ci, (a, b, segs) in enumerate(plan):
+            if ci < start_chunk:
+                continue
             for s0, s1, bucket in segs:
                 if can_fold:
-                    R = len(runs_g)
                     c0s = np.empty(R, np.float32)
                     cvs = np.zeros((R, plane.M), np.float64)
                     for k, t in enumerate(traces):
@@ -491,9 +556,9 @@ class SweepRunner:
                 cids, coefs, evalid, batches, svalid = \
                     et.stack_segment_inputs(traces, stageds, s0, s1,
                                             bucket, fedopt=fedopt)
-                prog = self._seg_prog(plane, retrain)
-                bufs, g, opt = prog(bufs, g, opt, cids, coefs, evalid,
-                                    batches, svalid)
+                prog = self._seg_prog(plane, retrain, gcfg)
+                bufs, g, opt, gs = prog(bufs, g, opt, gs, cids, coefs,
+                                        evalid, batches, svalid)
                 self.launches += 1
                 self.segments += 1
             i = b - 1
@@ -506,12 +571,116 @@ class SweepRunner:
             if self.eval_flat is not None and \
                     trace0.js[i] % self.eval_every == 0:
                 self._record_eval(runs_g, g, i)
+            # the chunk boundary is a consistent cut: boundary actions
+            # done, next chunk untouched — the only legal mid-cell save
+            # point (mirrors the compiled runner's two-phase protocol)
+            self._events_done += (b - a) * R
+            if self.checkpoint_dir is not None and ci + 1 < len(plan):
+                stop = self.stop_flag is not None and self.stop_flag()
+                due = (self.autosave_every is not None
+                       and self._events_done - self._last_save
+                       >= self.autosave_every)
+                if stop or due:
+                    self._save_ckpt(cell, flight=self._flight_state(
+                        ci + 1, runs_g, bufs, g, opt, gs, fedopt, gcfg))
+                if stop:
+                    raise RunInterrupted(self._events_done)
         for k, r in enumerate(runs_g):
             r.g_final = g[k]
             r.params = plane.engine.unflatten(g[k])
+            r.guard_counts = (grd.state_counts(gs, index=k)
+                              if gcfg is not None else None)
 
-    def run(self) -> SweepResult:
+    # -- checkpoint / resume -------------------------------------------------
+    def _flight_state(self, chunk: int, runs_g: List[SweepRun], bufs, g,
+                      opt, gs, fedopt: bool, gcfg) -> Dict[str, Any]:
+        """The in-flight cell's device state at a chunk boundary — what
+        :meth:`_execute` needs to re-enter the cell at ``chunk``."""
+        fl = {"chunk": np.int64(chunk), "bufs": np.asarray(bufs),
+              "g": np.asarray(g)}
+        if fedopt:
+            fl["opt"] = jax.tree.map(np.asarray, opt)
+        if gcfg is not None:
+            fl["gstate"] = jax.tree.map(np.asarray, gs)
+        hist = {str(k): history_to_state(r.history)
+                for k, r in enumerate(runs_g)}
+        hist = {k: v for k, v in hist.items() if v is not None}
+        if hist:
+            fl["hist"] = hist
+        return fl
+
+    def _save_ckpt(self, cell: Tuple[int, int],
+                   flight: Optional[Dict[str, Any]] = None) -> None:
+        """Durably persist the grid cursor, every finalized run's
+        payload, and (mid-cell) the in-flight device state.  Strings —
+        run labels, the grid fingerprint — ride the JSON meta record;
+        the msgpack payload is arrays only."""
+        gi, si = cell
+        state: Dict[str, Any] = {
+            "cursor": {"group": np.int64(gi), "sub": np.int64(si),
+                       "events": np.int64(self._events_done)}}
+        done: Dict[str, Any] = {}
+        for i in self._finalized:
+            r = self.runs[i]
+            d: Dict[str, Any] = {"g": np.asarray(r.g_final)}
+            h = history_to_state(r.history)
+            if h is not None:
+                d["history"] = h
+            if r.guard_counts is not None:
+                d["counts"] = {k: np.int64(v)
+                               for k, v in r.guard_counts.items()}
+            done[str(i)] = d
+        if done:
+            state["done"] = done
+        if flight is not None:
+            state["flight"] = flight
+        meta = {"kind": "sweep", "labels": [r.label for r in self.runs],
+                "finalized": len(self._finalized)}
+        _ckpt.save(
+            _ckpt.autosave_path(self.checkpoint_dir, self._events_done,
+                                prefix="sweep"),
+            state, step=self._events_done, metadata=meta,
+            keep_last=self.keep_last)
+        self._last_save = self._events_done
+
+    def _load_resume(self) -> Optional[tuple]:
+        path = _ckpt.latest_valid(self.checkpoint_dir, prefix="sweep")
+        if path is None:
+            return None
+        meta = _ckpt.load_metadata(path).get("metadata", {})
+        labels = [r.label for r in self.runs]
+        if meta.get("labels") != labels:
+            raise _ckpt.CheckpointError(
+                f"{path}: checkpoint belongs to a different sweep grid "
+                f"(saved {meta.get('labels')!r}, this runner has "
+                f"{labels!r}) — point --resume at the matching "
+                "checkpoint directory or start fresh")
+        state = _ckpt.load_tree(path)
+        cur = {k: int(np.asarray(v)) for k, v in state["cursor"].items()}
+        return cur, state.get("done") or {}, state.get("flight")
+
+    def _restore_done(self, sel: List[int], done: Dict[str, Any]) -> None:
+        for i in sel:
+            d = (done or {}).get(str(i))
+            if d is None:
+                raise _ckpt.CheckpointError(
+                    f"sweep checkpoint cursor skips run "
+                    f"{self.runs[i].label!r} but carries no payload for "
+                    "it — inconsistent checkpoint")
+            r = self.runs[i]
+            r.g_final = jnp.asarray(d["g"])
+            r.params = r.plane.engine.unflatten(r.g_final)
+            r.history = history_from_state(d.get("history"))
+            c = d.get("counts")
+            r.guard_counts = (None if c is None else
+                              {k: int(np.asarray(v))
+                               for k, v in c.items()})
+            self._finalized.append(i)
+
+    def run(self, *, resume: bool = False) -> SweepResult:
         self.launches = self.segments = self.eval_launches = 0
+        self._events_done = self._last_save = 0
+        self._finalized = []
         for r in self.runs:
             self._prepare(r)
         groups: List[List[int]] = []
@@ -525,14 +694,48 @@ class SweepRunner:
                 groups.append([i])
         self.groups = len(groups)
         self.group_sizes = [len(g) for g in groups]
-        for ids in groups:
+        cursor = done = flight = None
+        if resume and self.checkpoint_dir is not None:
+            loaded = self._load_resume()
+            if loaded is not None:
+                cursor, done, flight = loaded
+                self._events_done = self._last_save = cursor["events"]
+        for gi, ids in enumerate(groups):
             sub = self.sub_batch or len(ids)
-            for j in range(0, len(ids), sub):
-                self._execute([self.runs[i] for i in ids[j:j + sub]])
+            for si, j in enumerate(range(0, len(ids), sub)):
+                sel = ids[j:j + sub]
+                fl = None
+                if cursor is not None:
+                    at = (cursor["group"], cursor["sub"])
+                    if (gi, si) < at:
+                        # cell completed before the crash: its runs'
+                        # payloads come straight off the checkpoint
+                        self._restore_done(sel, done)
+                        continue
+                    if (gi, si) == at:
+                        fl = flight
+                self._execute([self.runs[i] for i in sel],
+                              cell=(gi, si), flight=fl)
+                self._finalized.extend(sel)
+                if self.checkpoint_dir is not None:
+                    stop = (self.stop_flag is not None
+                            and self.stop_flag())
+                    due = (self.autosave_every is not None
+                           and self._events_done - self._last_save
+                           >= self.autosave_every)
+                    if stop or due:
+                        self._save_ckpt((gi, si + 1))
+                    if stop:
+                        raise RunInterrupted(self._events_done)
         stats = {"launches": self.launches, "segments": self.segments,
                  "eval_launches": self.eval_launches,
                  "groups": self.groups, "runs": len(self.runs),
                  "variants": self.variants()}
+        if any(r.guard_counts for r in self.runs):
+            for k in ("guard_rejects", "guard_nonfinite",
+                      "guard_norm_outliers", "guard_clipped"):
+                stats[k] = sum((r.guard_counts or {}).get(k, 0)
+                               for r in self.runs)
         return SweepResult(self.runs, [r.params for r in self.runs],
                            [r.history for r in self.runs], stats)
 
@@ -540,15 +743,25 @@ class SweepRunner:
 def run_sweep(task, scenarios: Sequence, seeds: Sequence[int], *,
               iterations: int, eval_every: int = 10, with_eval: bool = True,
               sub_batch: Optional[int] = None,
-              server_opt: Optional[str] = None, server_lr: float = 1.0
-              ) -> SweepResult:
+              server_opt: Optional[str] = None, server_lr: float = 1.0,
+              guards: Optional[Any] = None,
+              checkpoint_dir: Optional[str] = None,
+              autosave_every: Optional[int] = None, keep_last: int = 3,
+              resume: bool = False, stop_flag=None) -> SweepResult:
     """One-call grid execution: build the runs, bind the task's flat
     eval, run the batched plane.  The convenience wrapper behind
-    ``launch/train.py --sweep`` and the nightly smoke."""
+    ``launch/train.py --sweep`` and the nightly smoke.  With a
+    ``checkpoint_dir`` the grid autosaves every ``autosave_every``
+    events and ``resume=True`` restarts mid-grid from the newest valid
+    checkpoint (completed cells restored, the in-flight cell re-entered
+    at its last chunk boundary)."""
     runs = build_task_runs(task, scenarios, seeds, iterations=iterations)
     eval_flat = (task.eval_flat_fn(runs[0].plane.engine)
                  if with_eval else None)
     runner = SweepRunner(runs, eval_flat=eval_flat, eval_every=eval_every,
                          sub_batch=sub_batch, server_opt=server_opt,
-                         server_lr=server_lr)
-    return runner.run()
+                         server_lr=server_lr, guards=guards,
+                         checkpoint_dir=checkpoint_dir,
+                         autosave_every=autosave_every,
+                         keep_last=keep_last, stop_flag=stop_flag)
+    return runner.run(resume=resume)

@@ -258,6 +258,63 @@ def check_faults(report: dict, M: int, iterations: int) -> None:
         and fs_ref["participation"] == fs_comp["participation"])
 
 
+def check_guards(report: dict, M: int, iterations: int) -> None:
+    """In-scan update guards (core/guards.py, DESIGN.md §10) on the
+    sharded fleet: poison one client row with NaN and another with a
+    huge norm spike, then require the sharded compiled scan and the
+    single-device windowed loop to reject the SAME events (identical
+    guard counters), agree ≤1e-5 on the final model, and keep it
+    finite — the guard math is shared f32 expressions, so sharding must
+    not perturb a single verdict."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.afl import run_afl
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=128,
+                   batch_size=1, local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=2, seed=0)
+    p0 = task.init_params()
+    base = task.client_plane(fleet)
+    sharded = task.client_plane(fleet, sharded=True)
+    kw = dict(algorithm="csmaafl", iterations=iterations,
+              tau_u=0.1, tau_d=0.1, gamma=0.4, seed=7,
+              guards={"norm_outlier": 5.0, "warmup": 2})
+
+    def poisoned(plane, windowed: bool):
+        g = plane.engine.flatten(p0)
+        buf = plane.init_fleet(g, seed=11)
+        buf = buf.at[1].set(jnp.nan)        # non-finite upload
+        buf = buf.at[3].add(50.0)           # update-norm spike
+        st = {"fleet_buf": buf, "g_flat": g, "opt_state": (), "cursor": 0}
+        if windowed:
+            st["windowed"] = True
+        return st
+
+    r_ref = run_afl(p0, fleet, None, client_plane=base,
+                    resume_state=poisoned(base, True), **kw)
+    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
+                     compiled_loop=True,
+                     resume_state=poisoned(sharded, False), **kw)
+    report["guards_sharded_parity"] = _maxdiff(r_comp.params, r_ref.params)
+    gkeys = ("guard_rejects", "guard_nonfinite", "guard_norm_outliers",
+             "guard_clipped")
+    gs_ref = {k: r_ref.stats["faults"][k] for k in gkeys}
+    gs_comp = {k: r_comp.stats["faults"][k] for k in gkeys}
+    report["guards_counters"] = gs_comp
+    report["guards_counter_match"] = gs_ref == gs_comp
+    report["guards_finite"] = all(
+        bool(np.isfinite(np.asarray(x, np.float32)).all())
+        for r in (r_ref, r_comp) for x in jax.tree.leaves(r.params))
+
+
 def check_smoke(report: dict, M: int) -> None:
     """Large-fleet smoke: finite result, bounded program-variant count."""
     import jax
@@ -304,7 +361,8 @@ def main(argv=None) -> int:
     ap.add_argument("--iterations", type=int, default=48)
     ap.add_argument("--smoke-M", type=int, default=0, dest="smoke_m",
                     help="also smoke-run a toy fleet this large (0: skip)")
-    ap.add_argument("--checks", default="addressing,cnn,bf16,compiled,faults",
+    ap.add_argument("--checks",
+                    default="addressing,cnn,bf16,compiled,faults,guards",
                     help="comma list of checks to run (subprocess callers "
                          "narrow this to bound their runtime)")
     ap.add_argument("--json", default=None, help="write the report here")
@@ -328,6 +386,8 @@ def main(argv=None) -> int:
         check_compiled(report, args.M, args.iterations)
     if "faults" in checks:
         check_faults(report, args.M, args.iterations)
+    if "guards" in checks:
+        check_guards(report, args.M, args.iterations)
     if args.smoke_m:
         check_smoke(report, args.smoke_m)
 
@@ -335,8 +395,19 @@ def main(argv=None) -> int:
     failures = [k for k in ("addressing_max_diff", "afl_f32_parity",
                             "fedavg_f32_parity", "afl_bf16_parity",
                             "compiled_sharded_parity",
-                            "faults_sharded_parity")
+                            "faults_sharded_parity",
+                            "guards_sharded_parity")
                 if k in report and report[k] > bound]
+    if "guards" in checks:
+        # same verdict stream on both paths, at least one NaN and one
+        # norm-spike actually rejected, and a finite global model
+        if not report["guards_counter_match"]:
+            failures.append("guards_counter_match")
+        if not (report["guards_counters"]["guard_nonfinite"] > 0
+                and report["guards_counters"]["guard_norm_outliers"] > 0):
+            failures.append("guards_rejections")
+        if not report["guards_finite"]:
+            failures.append("guards_finite")
     if "faults" in checks:
         if not report["faults_realization_match"]:
             failures.append("faults_realization_match")

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import time
 from typing import List
 
@@ -50,6 +51,31 @@ from repro.core import distributed as dist
 from repro.core.scheduler import AFLScheduler, make_fleet
 from repro.data.synthetic import TokenStream
 from repro.models import transformer as tmod
+
+
+def _install_stop_handlers(stop: dict):
+    """SIGTERM/SIGINT flip the stop flag; the running loop finishes its
+    current boundary, writes a final durable autosave and raises
+    ``RunInterrupted`` — a preempted job loses at most one chunk.
+    Returns the previous handlers so callers can restore them."""
+    def _sig(signum, frame):
+        if stop["flag"]:
+            raise KeyboardInterrupt   # second signal: give up immediately
+        stop["flag"] = True
+        print(f"signal {signum}: finishing current boundary, saving "
+              "state, then exiting (send again to abort hard)")
+    prev = {}
+    for s in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev[s] = signal.signal(s, _sig)
+        except ValueError:            # non-main thread (tests)
+            pass
+    return prev
+
+
+def _restore_handlers(prev: dict) -> None:
+    for s, h in prev.items():
+        signal.signal(s, h)
 
 
 def build_mesh(name: str):
@@ -77,7 +103,7 @@ def run_fleet_plane(cfg, args, params) -> None:
     AFL device state (``<path>.state``: fleet buffer + global flat model
     + server-opt state + trace cursor) and ``--resume <path>.state``
     restarts a compiled run mid-timeline."""
-    from repro.core.afl import run_afl
+    from repro.core.afl import RunInterrupted, run_afl
     from repro.core.sfl import run_fedavg
     from repro.core.tasks import LMTask
 
@@ -94,10 +120,11 @@ def run_fleet_plane(cfg, args, params) -> None:
     every = max(args.steps // 10, 1)
     state = None
     if args.algorithm == "fedavg":
-        if args.loop == "compiled" or args.resume:
-            raise SystemExit("--loop compiled / --resume apply to the AFL "
-                             "event loop; fedavg rounds are already one "
-                             "launch each")
+        if args.loop == "compiled" or args.resume or args.autosave \
+                or args.guards:
+            raise SystemExit("--loop compiled / --resume / --autosave / "
+                             "--guards apply to the AFL event loop; "
+                             "fedavg rounds are already one launch each")
         if args.faults:
             raise SystemExit("--faults rewrites the AFL upload timeline; "
                              "fedavg's synchronous rounds have no timeline "
@@ -108,22 +135,66 @@ def run_fleet_plane(cfg, args, params) -> None:
     else:
         resume_state = None
         if args.resume:
-            # a resume replays the compiled trace from its cursor — the
-            # windowed loop has no cursor; refuse rather than silently
-            # running a different loop than the banner announced
-            if args.loop != "compiled":
-                raise SystemExit("--resume replays the compiled event "
-                                 "trace; pass --loop compiled")
-            resume_state = ckpt.load_afl_state(args.resume)
-            print(f"resuming from {args.resume} at trace cursor "
-                  f"{resume_state['cursor']}")
-        res = run_afl(
-            params, fleet, None, algorithm="csmaafl",
-            iterations=args.steps, tau_u=0.05, tau_d=0.05,
-            gamma=args.gamma, eval_fn=task.eval_fn, eval_every=every,
-            client_plane=plane, compiled_loop=(args.loop == "compiled"),
-            resume_state=resume_state, faults=args.faults)
+            # "--resume" with no value picks the newest VALID checkpoint
+            # in --ckpt-dir (corrupt / torn saves are skipped); a path
+            # resumes that exact .state file.  run_afl routes the state
+            # to the loop that wrote it (windowed states carry a marker)
+            path = (ckpt.latest_valid(args.ckpt_dir)
+                    if args.resume == "auto" else args.resume)
+            if path is None:
+                print(f"no valid checkpoint under {args.ckpt_dir}; "
+                      "starting fresh")
+            else:
+                resume_state = ckpt.load_afl_state(path)
+                print(f"resuming from {path} at trace cursor "
+                      f"{resume_state['cursor']}")
+        autosave_dir = args.ckpt_dir if args.autosave else None
+        stop = {"flag": False}
+        prev = _install_stop_handlers(stop)
+        attempt = 0
+        try:
+            while True:
+                try:
+                    res = run_afl(
+                        params, fleet, None, algorithm="csmaafl",
+                        iterations=args.steps, tau_u=0.05, tau_d=0.05,
+                        gamma=args.gamma, eval_fn=task.eval_fn,
+                        eval_every=every, client_plane=plane,
+                        compiled_loop=(args.loop == "compiled"),
+                        resume_state=resume_state, faults=args.faults,
+                        guards=args.guards, autosave_every=args.autosave,
+                        autosave_dir=autosave_dir,
+                        autosave_keep_last=args.keep_last,
+                        stop_flag=(lambda: stop["flag"])
+                        if autosave_dir else None)
+                    break
+                except RunInterrupted as e:
+                    print(f"interrupted at event {e.cursor}; resume with "
+                          f"--resume (checkpoints in {autosave_dir})")
+                    return
+                except (KeyboardInterrupt, SystemExit):
+                    raise
+                except Exception as e:
+                    # the watchdog: crash-restart from the newest valid
+                    # autosave, up to --max-restarts times
+                    attempt += 1
+                    if autosave_dir is None or attempt > args.max_restarts:
+                        raise
+                    p = ckpt.latest_valid(autosave_dir)
+                    resume_state = ckpt.load_afl_state(p) if p else None
+                    at = (resume_state["cursor"] if resume_state else 0)
+                    print(f"run crashed ({type(e).__name__}: {e}); "
+                          f"restart {attempt}/{args.max_restarts} from "
+                          f"event {at}")
+        finally:
+            _restore_handlers(prev)
         final, hist, state = res.params, res.history, res.state
+        gs = (res.stats or {}).get("faults") or {}
+        if args.guards and "guard_rejects" in gs:
+            print(f"guards[{args.guards}]: {gs['guard_rejects']} "
+                  f"rejected ({gs['guard_nonfinite']} non-finite, "
+                  f"{gs['guard_norm_outliers']} norm outliers), "
+                  f"{gs['guard_clipped']} clipped")
         if res.stats is not None and "launches" in res.stats:
             print(f"compiled loop: {res.stats['launches']} launches, "
                   f"{res.stats['segments']} segments, "
@@ -163,7 +234,7 @@ def run_sweep_grid(args) -> None:
 
     from repro.configs.paper_cnn import CNNConfig
     from repro.core import sweep_plane as sp
-    from repro.core.afl import run_afl
+    from repro.core.afl import RunInterrupted, run_afl
     from repro.core.tasks import CNNTask
 
     with open(args.sweep) as f:
@@ -187,12 +258,41 @@ def run_sweep_grid(args) -> None:
     print(f"sweep: {len(scenarios)} scenario(s) x {len(seeds)} seed(s) "
           f"= {len(scenarios) * len(seeds)} runs, M={len(task.clients)}, "
           f"{iterations} events each")
+    guards = args.guards if args.guards is not None else cfg.get("guards")
+    ckdir = args.ckpt_dir if (args.autosave or args.resume) else None
+    stop = {"flag": False}
+    prev = _install_stop_handlers(stop) if ckdir else {}
+    resume = bool(args.resume)
     t0 = time.time()
-    res = sp.run_sweep(task, scenarios, seeds, iterations=iterations,
-                       eval_every=eval_every,
-                       sub_batch=cfg.get("sub_batch"),
-                       server_opt=cfg.get("server_opt"),
-                       server_lr=cfg.get("server_lr", 1.0))
+    attempt = 0
+    try:
+        while True:
+            try:
+                res = sp.run_sweep(
+                    task, scenarios, seeds, iterations=iterations,
+                    eval_every=eval_every, sub_batch=cfg.get("sub_batch"),
+                    server_opt=cfg.get("server_opt"),
+                    server_lr=cfg.get("server_lr", 1.0), guards=guards,
+                    checkpoint_dir=ckdir, autosave_every=args.autosave,
+                    keep_last=args.keep_last, resume=resume,
+                    stop_flag=(lambda: stop["flag"]) if ckdir else None)
+                break
+            except RunInterrupted as e:
+                print(f"sweep interrupted at {e.cursor} events; restart "
+                      f"with --resume (checkpoints in {ckdir})")
+                return
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                attempt += 1
+                if ckdir is None or attempt > args.max_restarts:
+                    raise
+                resume = True
+                print(f"sweep crashed ({type(e).__name__}: {e}); restart "
+                      f"{attempt}/{args.max_restarts} from the latest "
+                      "grid checkpoint")
+    finally:
+        _restore_handlers(prev)
     wall = time.time() - t0
     print(f"sweep: {res.stats['launches']} launches "
           f"({res.stats['segments']} segments, {res.stats['groups']} "
@@ -206,6 +306,8 @@ def run_sweep_grid(args) -> None:
         if fs["fault_drops"]:
             line += (f"  drops={fs['fault_drops']}/{fs['events']} "
                      f"gini={fs['contribution_gini']:.3f}")
+        if fs.get("guard_rejects"):
+            line += f"  guard_rejects={fs['guard_rejects']}"
         print(line)
 
     worst_parity = None
@@ -224,7 +326,8 @@ def run_sweep_grid(args) -> None:
                 mu_momentum=sc.mu_momentum,
                 max_staleness=sc.max_staleness, eval_fn=task.eval_fn,
                 eval_every=eval_every, client_plane=r.plane,
-                compiled_loop=True, seed=r.seed, faults=sc.faults)
+                compiled_loop=True, seed=r.seed, faults=sc.faults,
+                guards=sc.guards if sc.guards is not None else guards)
             if r.history.times != solo.history.times:
                 raise SystemExit(f"sweep parity: {r.label} eval "
                                  "timeline diverged from the solo run")
@@ -279,11 +382,18 @@ def run_sweep_grid(args) -> None:
             continue
         drop = float(np.mean([fs["drop_rate"] for _, fs in sel]))
         gini = max(fs["contribution_gini"] for _, fs in sel)
-        accs = [r.history.metrics[-1]["accuracy"] for r, _ in sel
+        accs = [r.history.metrics[-1].get("accuracy") for r, _ in sel
                 if r.history.metrics]
-        acc = float(np.mean(accs)) if accs else float("nan")
+        accs = [a for a in accs if a is not None and np.isfinite(a)]
+        # a scenario with no finite accuracy (eval off, or a run that
+        # diverged to NaN) reports None — and FAILS any accuracy band
+        # below instead of letting a nan sail through the comparison
+        acc = float(np.mean(accs)) if accs else None
+        if acc is None:
+            print(f"expect[{name}]: WARNING — no finite final accuracy "
+                  "recorded; accuracy bands will fail")
         print(f"expect[{name}]: drop_rate={drop:.3f} gini={gini:.3f} "
-              f"accuracy={acc:.3f}")
+              f"accuracy=" + ("n/a" if acc is None else f"{acc:.3f}"))
         if "drop_rate" in bands:
             lo, hi = bands["drop_rate"]
             if not (lo <= drop <= hi):
@@ -294,9 +404,11 @@ def run_sweep_grid(args) -> None:
             failures.append(f"{name}: contribution_gini {gini:.3f} > "
                             f"{bands['contribution_gini_max']}")
         if "final_accuracy_min" in bands and \
-                not acc >= bands["final_accuracy_min"]:
-            failures.append(f"{name}: final accuracy {acc:.3f} < "
-                            f"{bands['final_accuracy_min']}")
+                (acc is None or not acc >= bands["final_accuracy_min"]):
+            failures.append(
+                f"{name}: final accuracy "
+                + ("missing/non-finite" if acc is None else f"{acc:.3f}")
+                + f" < {bands['final_accuracy_min']}")
     if failures:
         raise SystemExit("sweep expectation bands violated:\n  "
                          + "\n  ".join(failures))
@@ -329,10 +441,34 @@ def main(argv=None) -> None:
                          "compiled = whole-run event-trace compiler "
                          "(O(#buckets) donated scan launches, DESIGN.md "
                          "§7)")
-    ap.add_argument("--resume", default=None,
-                    help="resume a fleet-plane AFL run from a "
-                         "<ckpt>.state file written by --save (trace "
-                         "cursor + device buffers)")
+    ap.add_argument("--resume", nargs="?", const="auto", default=None,
+                    help="resume a fleet-plane AFL run or a --sweep grid; "
+                         "with a path, that exact .state checkpoint; with "
+                         "no value, the newest VALID checkpoint in "
+                         "--ckpt-dir (corrupt/torn saves skipped)")
+    ap.add_argument("--autosave", type=int, default=None, metavar="N",
+                    help="durably autosave run/sweep state to --ckpt-dir "
+                         "every N events (tmp+fsync+atomic-rename with a "
+                         "checksummed meta record; rotation via "
+                         "--keep-last) so a crash resumes mid-run")
+    ap.add_argument("--ckpt-dir", dest="ckpt_dir",
+                    default=os.path.join("experiments", "ckpt"),
+                    help="directory for --autosave checkpoints and "
+                         "valueless --resume lookups")
+    ap.add_argument("--keep-last", dest="keep_last", type=int, default=3,
+                    help="autosave rotation depth per checkpoint family")
+    ap.add_argument("--max-restarts", dest="max_restarts", type=int,
+                    default=0, metavar="K",
+                    help="watchdog: on an unexpected crash, resume from "
+                         "the newest valid autosave up to K times before "
+                         "giving up")
+    ap.add_argument("--guards", default=None,
+                    help="in-scan update guards (core/guards.py): a "
+                         "preset (default, strict, nonfinite, clip), "
+                         "'off', or a JSON GuardConfig dict, e.g. "
+                         "'{\"norm_outlier\": 5.0, \"clip_norm\": 1.0}'; "
+                         "non-finite / outlier client rows become "
+                         "identity steps inside the jitted scan")
     ap.add_argument("--sweep", default=None,
                     help="run a seeds x scenarios convergence grid from "
                          "this JSON config through the batched sweep "
@@ -364,6 +500,9 @@ def main(argv=None) -> None:
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--save", default=None, help="checkpoint path")
     args = ap.parse_args(argv)
+    if args.guards and args.guards.strip().startswith("{"):
+        import json as _json
+        args.guards = _json.loads(args.guards)
 
     if args.sweep:
         run_sweep_grid(args)
@@ -388,9 +527,10 @@ def main(argv=None) -> None:
         run_fleet_plane(cfg, args, params)
         return
 
-    if args.loop != "window" or args.resume:
-        ap.error("--loop compiled / --resume ride the fleet plane's AFL "
-                 "event loop; use --data-plane fleet")
+    if args.loop != "window" or args.resume or args.autosave or args.guards:
+        ap.error("--loop compiled / --resume / --autosave / --guards ride "
+                 "the fleet plane's AFL event loop; use --data-plane "
+                 "fleet (or a --sweep grid)")
     if args.faults:
         ap.error("--faults degrades the fleet plane's AFL event timeline; "
                  "use --data-plane fleet (or a --sweep grid with fault "

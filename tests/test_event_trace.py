@@ -225,7 +225,7 @@ def test_compiled_m64_run_is_bucket_many_launches():
     runner = et.CompiledLoopRunner(plane)
     g = plane.engine.flatten(p0)
     buf = plane.init_fleet(g, 0)
-    buf, g, _ = runner.run(trace, buf, g, ())
+    buf, g, _, _ = runner.run(trace, buf, g, ())
     assert len(trace) == E
     n_buckets = len(set(trace.s_buckets.tolist()))
     assert n_buckets >= 2            # the adaptive spread is real

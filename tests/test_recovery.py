@@ -1,0 +1,540 @@
+"""PR 7 recovery-plane tests: durable checkpoints, autosave/resume and
+the in-scan update guards (docs/DESIGN.md §10).
+
+* checkpoint corruption: truncated payloads, flipped bytes and garbage
+  meta raise typed :class:`CorruptCheckpointError`s, a missing meta is a
+  clear :class:`CheckpointError`, ``latest_valid`` skips the damage back
+  to the newest good file and ``keep_last`` rotation prunes families;
+* guard decisions: spec resolution, the float32 verdict expression
+  (NaN reject, warmup-armed norm outliers, clip accounting, frozen
+  counters on masked slots), and guards-on == guards-off BITWISE over
+  clean data on both loops;
+* poisoned runs: a NaN client and a spiking client are rejected with
+  identical counters on the windowed and compiled paths, and a poisoned
+  sweep keeps every run's global model finite while the counters land in
+  ``SweepResult.fault_stats()`` (solo-compiled parity per run);
+* crash-safe autosave: graceful ``stop_flag`` interrupts on the
+  windowed, compiled and sweep paths resume from the written checkpoint
+  with final params and history matching the uninterrupted run ≤1e-5 —
+  plus a real SIGKILL mid-run (``REPRO_CKPT_KILL_AFTER``) in a
+  subprocess, resumed by the parent.
+"""
+import hashlib
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import event_trace as et
+from repro.core import guards as grd
+from repro.core import sweep_plane as sp
+from repro.core.afl import history_from_state, history_to_state, run_afl
+from repro.core.agg_engine import AggEngine
+from repro.core.client_plane import ClientPlane
+from repro.core.event_trace import RunInterrupted
+from repro.core.scheduler import make_fleet
+
+D, M_TOY, ITER = 97, 4, 24
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _hist_close(ha, hb, tol=1e-5):
+    assert ha.times == hb.times
+    assert len(ha.metrics) == len(hb.metrics)
+    for ma, mb in zip(ha.metrics, hb.metrics):
+        assert set(ma) == set(mb)
+        for k in ma:
+            assert abs(ma[k] - mb[k]) <= tol, (k, ma[k], mb[k])
+
+
+def _toy(poison_cid=None):
+    """Tiny f32 fleet: D=97 flat models, 4 clients, deterministic batches
+    (client ``poison_cid`` trains on all-NaN batches when set)."""
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=D).astype(np.float32))
+    fleet = make_fleet(M_TOY, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 20 * m
+                                           for m in range(M_TOY)], seed=2)
+
+    def batch_fn(cid, num_steps, seed_):
+        if poison_cid is not None and cid == poison_cid:
+            return jnp.full((num_steps, D), jnp.nan, jnp.float32)
+        r = np.random.default_rng((seed_ * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(num_steps, D)).astype(np.float32))
+
+    def step(flat, target):
+        return flat - 0.25 * (flat - target)
+
+    plane = ClientPlane(AggEngine(w0), fleet, step, batch_fn)
+    return w0, fleet, plane
+
+
+def _run(w0, fleet, plane, **kw):
+    kw.setdefault("eval_fn", lambda p: {
+        "norm": float(np.linalg.norm(np.asarray(p, np.float32)))})
+    return run_afl(w0, fleet, None, algorithm="csmaafl", iterations=ITER,
+                   tau_u=0.1, tau_d=0.1, gamma=0.4, seed=3,
+                   client_plane=plane, eval_every=6, **kw)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    return _toy()
+
+
+@pytest.fixture(scope="module")
+def toy_full_windowed(toy):
+    return _run(*toy)
+
+
+@pytest.fixture(scope="module")
+def toy_full_compiled(toy):
+    return _run(*toy, compiled_loop=True)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption and rotation
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32),
+            "b": (np.ones(3, np.float32), np.int64(2)),
+            "c": {"d": np.float64(1.5)}}
+
+
+def test_truncated_payload_raises_typed_error(tmp_path):
+    p = str(tmp_path / "x.ckpt")
+    ckpt.save(p, _tree(), step=7)
+    blob = open(p, "rb").read()
+    with open(p, "wb") as f:            # a torn write: only a prefix lands
+        f.write(blob[:len(blob) // 2])
+    assert not ckpt.verify(p)
+    with pytest.raises(ckpt.CorruptCheckpointError, match="truncated"):
+        ckpt.load_tree(p)
+
+
+def test_flipped_byte_raises_typed_error(tmp_path):
+    p = str(tmp_path / "x.ckpt")
+    ckpt.save(p, _tree(), step=7)
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF        # bit rot: same length, wrong hash
+    with open(p, "wb") as f:
+        f.write(bytes(blob))
+    assert not ckpt.verify(p)
+    with pytest.raises(ckpt.CorruptCheckpointError, match="sha256"):
+        ckpt.load_tree(p)
+
+
+def test_missing_meta_is_a_clear_error(tmp_path):
+    p = str(tmp_path / "x.ckpt")
+    ckpt.save(p, _tree())
+    os.remove(p + ".meta.json")
+    assert not ckpt.verify(p)
+    with pytest.raises(ckpt.CheckpointError, match="meta record"):
+        ckpt.load_metadata(p)
+    with pytest.raises(ckpt.CheckpointError, match="meta record"):
+        ckpt.load_tree(p)
+
+
+def test_meta_lands_with_checksum_and_no_tmp_orphans(tmp_path):
+    p = str(tmp_path / "x.ckpt")
+    ckpt.save(p, _tree(), step=7, metadata={"kind": "t"})
+    m = ckpt.load_metadata(p)
+    assert m["step"] == 7 and m["metadata"] == {"kind": "t"}
+    assert m["bytes"] == os.path.getsize(p)
+    assert m["sha256"] == hashlib.sha256(open(p, "rb").read()).hexdigest()
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    got = ckpt.load_tree(p)
+    assert _maxdiff(got, _tree()) == 0.0
+
+
+def test_latest_valid_skips_corruption_and_rotation_prunes(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        ckpt.save(ckpt.autosave_path(d, s), _tree(), step=s, keep_last=3)
+    names = sorted(f for f in os.listdir(d) if f.endswith(".ckpt"))
+    assert names == [f"state-{s:09d}.ckpt" for s in (2, 3, 4)]
+    # newest gets bit rot -> latest_valid falls back one step
+    p4 = ckpt.autosave_path(d, 4)
+    blob = bytearray(open(p4, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(p4, "wb") as f:
+        f.write(bytes(blob))
+    assert ckpt.latest_valid(d) == ckpt.autosave_path(d, 3)
+    # garbage meta JSON on the next one -> falls back again
+    with open(ckpt.autosave_path(d, 3) + ".meta.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(ckpt.CorruptCheckpointError, match="not valid JSON"):
+        ckpt.load_metadata(ckpt.autosave_path(d, 3))
+    assert ckpt.latest_valid(d) == ckpt.autosave_path(d, 2)
+    # family narrowing: another prefix's newer step is invisible
+    ckpt.save(ckpt.autosave_path(d, 9, prefix="sweep"), _tree(), step=9)
+    assert ckpt.latest_valid(d, prefix="state") == ckpt.autosave_path(d, 2)
+    assert ckpt.latest_valid(d, prefix="sweep") == \
+        ckpt.autosave_path(d, 9, prefix="sweep")
+
+
+# ---------------------------------------------------------------------------
+# Guard decisions (unit level)
+# ---------------------------------------------------------------------------
+def test_resolve_guards_specs():
+    assert grd.resolve_guards(None) is None
+    assert grd.resolve_guards(False) is None
+    assert grd.resolve_guards("off") is None
+    assert grd.resolve_guards(True) == grd.GuardConfig()
+    assert grd.resolve_guards("strict").norm_outlier == 5.0
+    cfg = grd.resolve_guards({"norm_outlier": 3.0, "warmup": 2})
+    assert cfg.norm_outlier == 3.0 and cfg.warmup == 2
+    # a config with every check disabled means guarding is off
+    assert grd.resolve_guards(
+        grd.GuardConfig(nonfinite=False, norm_outlier=None)) is None
+    with pytest.raises(ValueError, match="unknown guard preset"):
+        grd.resolve_guards("nope")
+    with pytest.raises(TypeError):
+        grd.resolve_guards(3.5)
+
+
+def test_guard_update_verdicts():
+    cfg = grd.GuardConfig(norm_outlier=2.0, warmup=1, median_eta=0.0)
+    st = grd.init_state()
+    g, T = jnp.zeros(4), jnp.asarray(True)
+    ok, _, st = grd.guard_update(cfg, g, jnp.full(4, 0.1), st, T)
+    assert bool(ok)
+    assert int(st["count"]) == 1
+    assert float(st["med"]) == pytest.approx(0.2)   # ||0.1·1₄|| seeds it
+    # a clean row passes through as the ORIGINAL object (bitwise no-op)
+    row = jnp.full(4, 0.11)
+    ok, row_eff, st = grd.guard_update(cfg, g, row, st, T)
+    assert bool(ok) and row_eff is row
+    # a spike beyond norm_outlier×median is rejected; the median tracker
+    # must NOT advance on it (a spike can't drag its own baseline)
+    med_before = float(st["med"])
+    ok, _, st = grd.guard_update(cfg, g, jnp.full(4, 100.0), st, T)
+    assert not bool(ok)
+    assert int(st["norm_outliers"]) == 1
+    assert float(st["med"]) == med_before
+    # NaN anywhere in the row -> nonfinite reject
+    ok, _, st = grd.guard_update(cfg, g, jnp.full(4, jnp.nan), st, T)
+    assert not bool(ok) and int(st["nonfinite"]) == 1
+    # masked slot (ev=False): state and counters are frozen
+    before = jax.tree.map(np.asarray, st)
+    _, _, st = grd.guard_update(cfg, g, jnp.full(4, jnp.nan), st,
+                                jnp.asarray(False))
+    for k in before:
+        np.testing.assert_array_equal(before[k], np.asarray(st[k]))
+    assert grd.state_counts(st) == {
+        "guard_rejects": 2, "guard_nonfinite": 1,
+        "guard_norm_outliers": 1, "guard_clipped": 0}
+
+
+def test_guard_clip_shrinks_and_counts():
+    cfg = grd.GuardConfig(norm_outlier=None, clip_norm=0.5)
+    st = grd.init_state()
+    g, T = jnp.zeros(4), jnp.asarray(True)
+    ok, row_eff, st = grd.guard_update(cfg, g, jnp.full(4, 10.0), st, T)
+    assert bool(ok)
+    assert float(jnp.linalg.norm(row_eff - g)) == pytest.approx(0.5,
+                                                                rel=1e-5)
+    assert int(st["clipped"]) == 1
+    # inside the ball: values survive, the clip counter does not move
+    small = jnp.full(4, 0.1)
+    ok, row_eff, st = grd.guard_update(cfg, g, small, st, T)
+    np.testing.assert_allclose(np.asarray(row_eff), np.asarray(small),
+                               rtol=1e-6)
+    assert int(st["clipped"]) == 1
+
+
+def test_guard_state_runs_layout():
+    st = grd.init_state_runs(grd.GuardConfig(), 3)
+    assert st["med"].shape == (3,)
+    assert st["count"].dtype == jnp.int32
+    st["nonfinite"] = st["nonfinite"].at[1].set(2)
+    assert grd.state_counts(st, index=1)["guard_rejects"] == 2
+    assert grd.state_counts(st, index=0)["guard_rejects"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Guards on the execution paths
+# ---------------------------------------------------------------------------
+def test_guards_on_clean_run_is_bitwise_noop(toy, toy_full_windowed,
+                                             toy_full_compiled):
+    w0, fleet, plane = toy
+    gw = _run(w0, fleet, plane, guards="default")
+    gc = _run(w0, fleet, plane, compiled_loop=True, guards="default")
+    assert _maxdiff(gw.params, toy_full_windowed.params) == 0.0
+    assert _maxdiff(gc.params, toy_full_compiled.params) == 0.0
+    _hist_close(gw.history, toy_full_windowed.history, tol=0.0)
+    _hist_close(gc.history, toy_full_compiled.history, tol=0.0)
+    for res in (gw, gc):
+        fl = res.stats["faults"]
+        assert fl["guard_rejects"] == 0 and fl["guard_clipped"] == 0
+
+
+def test_poison_rejected_identically_windowed_vs_compiled(toy):
+    """A NaN row AND a spiking row, injected via resume_state at cursor
+    0: both loops must reject the same events, count them the same way
+    and keep the global model finite (rejected rows get no write-back,
+    so the poison persists and every later upload re-rejects)."""
+    w0, fleet, plane = toy
+    g = plane.engine.flatten(w0)
+    gcfg = {"norm_outlier": 5.0, "warmup": 2}
+    # pick the poison targets off the timeline: the NaN client uploads
+    # first (max rejections), the spiking client uploads LAST so the
+    # outlier median is guaranteed warmed up before its spike arrives
+    # (an early spike would be accepted during warmup and retrained
+    # clean — no outlier to count)
+    tr = et.compile_afl_trace(fleet, algorithm="csmaafl", iterations=ITER,
+                              tau_u=0.1, tau_d=0.1, gamma=0.4, seed=3)
+    cids = np.asarray(tr.cids)[:ITER]
+    first = {m: int(np.argmax(cids == m)) for m in range(M_TOY)}
+    nan_c = min(first, key=first.get)
+    spike_c = max(first, key=first.get)
+    assert int(np.sum(cids[:first[spike_c]] != nan_c)) >= 2  # warmup done
+
+    def poisoned(windowed):
+        buf = plane.init_fleet(g, seed=11).at[nan_c].set(jnp.nan)
+        buf = buf.at[spike_c].add(50.0)
+        rs = {"fleet_buf": buf, "g_flat": g, "opt_state": (), "cursor": 0}
+        if windowed:
+            rs["windowed"] = True
+        return _run(w0, fleet, plane, compiled_loop=not windowed,
+                    resume_state=rs, guards=gcfg)
+
+    rw, rc = poisoned(True), poisoned(False)
+    fw, fc = rw.stats["faults"], rc.stats["faults"]
+    keys = ("guard_rejects", "guard_nonfinite", "guard_norm_outliers",
+            "guard_clipped")
+    assert [fw[k] for k in keys] == [fc[k] for k in keys]
+    assert fw["guard_nonfinite"] > 0 and fw["guard_norm_outliers"] > 0
+    for res in (rw, rc):
+        assert np.isfinite(np.asarray(res.params, np.float32)).all()
+    assert _maxdiff(rw.params, rc.params) <= 1e-5
+    _hist_close(rw.history, rc.history)
+
+
+def test_sweep_guards_keep_model_finite_and_surface_counters():
+    """A sweep over a fleet whose client 1 always trains to NaN: every
+    run's counters land on the SweepRun / fault_stats / aggregate-stats
+    surfaces, the stacked global models stay finite, and each run
+    matches its solo compiled twin (counters AND params)."""
+    w0 = None
+    runs = []
+    for seed in (0, 1):
+        w0, fleet, plane = _toy(poison_cid=1)
+        sc = sp.resolve_scenario("paper_iid")
+        trace = et.compile_afl_trace(
+            fleet, algorithm=sc.algorithm, iterations=16, tau_u=sc.tau_u,
+            tau_d=sc.tau_d, gamma=sc.gamma, mu_momentum=sc.mu_momentum,
+            seed=seed)
+        runs.append(sp.SweepRun(sc, seed, plane, trace,
+                                plane.engine.flatten(w0),
+                                label=f"paper_iid/s{seed}"))
+    gcfg = {"norm_outlier": None}      # nonfinite check only
+    res = sp.SweepRunner(runs, guards=gcfg).run()
+    assert res.stats["guard_nonfinite"] > 0
+    for r, fs in zip(res.runs, res.fault_stats()):
+        assert r.guard_counts["guard_nonfinite"] > 0
+        assert fs["guard_nonfinite"] == r.guard_counts["guard_nonfinite"]
+        assert np.isfinite(np.asarray(r.params, np.float32)).all()
+        solo = run_afl(w0, r.plane.fleet, None, algorithm="csmaafl",
+                       iterations=16, tau_u=0.1, tau_d=0.1, gamma=0.4,
+                       client_plane=r.plane, compiled_loop=True,
+                       guards=gcfg, seed=r.seed)
+        assert _maxdiff(r.params, solo.params) <= 1e-5, r.label
+        assert solo.stats["faults"]["guard_nonfinite"] == \
+            r.guard_counts["guard_nonfinite"]
+
+
+def test_scenario_guard_override_splits_groups():
+    """Per-scenario ``guards: off`` beats the sweep-wide default: the
+    unguarded run of a poisoned fleet goes non-finite (proof the guard
+    is load-bearing), and differing guard configs cannot share a
+    run-batched group."""
+    runs = []
+    for name, spec in (("on", "paper_iid"),
+                       ("off", {"name": "paper_iid", "guards": "off"})):
+        w0, fleet, plane = _toy(poison_cid=1)
+        sc = sp.resolve_scenario(spec)
+        trace = et.compile_afl_trace(
+            fleet, algorithm=sc.algorithm, iterations=16, tau_u=sc.tau_u,
+            tau_d=sc.tau_d, gamma=sc.gamma, mu_momentum=sc.mu_momentum,
+            seed=0)
+        runs.append(sp.SweepRun(sc, 0, plane, trace,
+                                plane.engine.flatten(w0), label=name))
+    res = sp.SweepRunner(runs, guards={"norm_outlier": None}).run()
+    assert res.stats["groups"] == 2
+    by = {r.label: r for r in res.runs}
+    assert by["on"].guard_counts["guard_nonfinite"] > 0
+    assert np.isfinite(np.asarray(by["on"].params, np.float32)).all()
+    assert by["off"].guard_counts is None
+    assert not np.isfinite(np.asarray(by["off"].params, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# Autosave / resume: graceful interrupts on every path
+# ---------------------------------------------------------------------------
+def test_windowed_stop_resume_parity(tmp_path, toy, toy_full_windowed):
+    w0, fleet, plane = toy
+    d = str(tmp_path)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 8
+
+    with pytest.raises(RunInterrupted) as ei:
+        _run(w0, fleet, plane, autosave_every=4, autosave_dir=d,
+             stop_flag=stop)
+    p = ckpt.latest_valid(d)
+    assert p is not None
+    st = ckpt.load_afl_state(p)
+    assert st["windowed"] is True       # routes back to the windowed loop
+    assert st["cursor"] == ei.value.cursor
+    assert 0 < st["cursor"] < ITER
+    res = _run(w0, fleet, plane, resume_state=st)
+    assert _maxdiff(res.params, toy_full_windowed.params) <= 1e-5
+    _hist_close(res.history, toy_full_windowed.history)
+
+
+def test_compiled_stop_resume_parity(tmp_path, toy, toy_full_compiled):
+    w0, fleet, plane = toy
+    d = str(tmp_path)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 1           # stop at the 2nd segment boundary
+
+    with pytest.raises(RunInterrupted):
+        _run(w0, fleet, plane, compiled_loop=True, autosave_every=6,
+             autosave_dir=d, stop_flag=stop)
+    st = ckpt.load_afl_state(ckpt.latest_valid(d))
+    assert "windowed" not in st         # compiled states carry no marker
+    assert 0 < st["cursor"] < ITER
+    res = _run(w0, fleet, plane, compiled_loop=True, resume_state=st)
+    assert _maxdiff(res.params, toy_full_compiled.params) <= 1e-5
+    _hist_close(res.history, toy_full_compiled.history)
+
+
+def test_autosave_rotation_bounds_disk(tmp_path, toy):
+    w0, fleet, plane = toy
+    d = str(tmp_path)
+    _run(w0, fleet, plane, autosave_every=3, autosave_dir=d,
+         autosave_keep_last=2)
+    assert len([f for f in os.listdir(d) if f.endswith(".ckpt")]) <= 2
+
+
+def test_history_state_roundtrip(toy_full_windowed):
+    h = toy_full_windowed.history
+    st = jax.tree.map(np.asarray, history_to_state(h))  # as a ckpt returns it
+    h2 = history_from_state(st)
+    assert h2.times == h.times
+    _hist_close(h2, h, tol=0.0)
+    from repro.core.sfl import FLHistory
+    assert history_to_state(FLHistory()) is None
+    assert history_from_state(None).times == []
+
+
+def test_recovery_api_guardrails(toy):
+    w0, fleet, plane = toy
+    with pytest.raises(ValueError, match="go together"):
+        _run(w0, fleet, plane, autosave_every=4)
+    with pytest.raises(ValueError, match="require a client plane"):
+        run_afl(w0, fleet, lambda p, c, s: p, algorithm="csmaafl",
+                iterations=2, tau_u=0.1, tau_d=0.1, guards="default")
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        sp.SweepRunner([sp.SweepRun(sp.resolve_scenario("paper_iid"), 0,
+                                    plane, None, None)],
+                       autosave_every=4)
+
+
+# ---------------------------------------------------------------------------
+# Sweep-grid autosave / resume (tiny CNN, the --sweep surface)
+# ---------------------------------------------------------------------------
+def test_sweep_stop_resume_parity(tmp_path):
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.tasks import CNNTask
+
+    task = CNNTask(iid=True, num_clients=5, train_n=160, test_n=64,
+                   local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16))
+    scn = ["paper_iid", {"name": "paper_iid", "gamma": 0.6}]
+    kw = dict(iterations=12, eval_every=4, guards="default")
+    base = sp.run_sweep(task, scn, [0, 1], **kw)
+
+    d = str(tmp_path)
+    polls = {"n": 0}
+
+    def stop():
+        polls["n"] += 1
+        return polls["n"] > 1
+
+    with pytest.raises(RunInterrupted):
+        sp.run_sweep(task, scn, [0, 1], checkpoint_dir=d, autosave_every=4,
+                     stop_flag=stop, **kw)
+    assert ckpt.latest_valid(d, prefix="sweep") is not None
+
+    res = sp.run_sweep(task, scn, [0, 1], checkpoint_dir=d, resume=True,
+                       **kw)
+    for hb, hr in zip(base.histories, res.histories):
+        _hist_close(hb, hr)
+    for rb, rr in zip(base.runs, res.runs):
+        assert _maxdiff(rb.g_final, rr.g_final) <= 1e-5, rb.label
+        assert rb.guard_counts == rr.guard_counts
+    # a checkpoint from THIS grid must refuse to seed a different one
+    with pytest.raises(ckpt.CheckpointError, match="different sweep grid"):
+        sp.run_sweep(task, scn, [0, 2], checkpoint_dir=d, resume=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The real thing: SIGKILL mid-run, resume from the survivors
+# ---------------------------------------------------------------------------
+def _subproc_main(autosave_dir):
+    w0, fleet, plane = _toy()
+    _run(w0, fleet, plane, guards="default", autosave_every=4,
+         autosave_dir=autosave_dir)
+
+
+def test_sigkill_midrun_then_resume(tmp_path, toy):
+    """Run the toy fleet in a subprocess with the checkpoint plane's own
+    fault injector armed: REPRO_CKPT_KILL_AFTER=2 SIGKILLs the process
+    the instant its 2nd durable autosave completes.  The parent resumes
+    from the surviving files and must reproduce the uninterrupted run."""
+    d = str(tmp_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    env["REPRO_CKPT_KILL_AFTER"] = "2"
+    proc = subprocess.run([sys.executable, os.path.abspath(__file__), d],
+                          capture_output=True, text=True, env=env,
+                          timeout=540)
+    assert proc.returncode == -signal.SIGKILL, proc.stdout + proc.stderr
+
+    p = ckpt.latest_valid(d)
+    assert p is not None
+    st = ckpt.load_afl_state(p)
+    assert st["windowed"] is True
+    assert st["cursor"] == 8            # killed right after save #2 (4, 8)
+    w0, fleet, plane = toy
+    full = _run(w0, fleet, plane, guards="default")
+    res = _run(w0, fleet, plane, guards="default", resume_state=st)
+    assert _maxdiff(res.params, full.params) <= 1e-5
+    _hist_close(res.history, full.history)
+    # the guard carry rode the checkpoint: counters match end to end
+    assert res.stats["faults"]["guard_rejects"] == \
+        full.stats["faults"]["guard_rejects"] == 0
+
+
+if __name__ == "__main__":
+    _subproc_main(sys.argv[1])
