@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test lint format format-check bench bench-agg bench-client \
 	bench-sharded bench-compiled bench-sweep bench-faults bench-guards \
-	bench-gate bench-record
+	bench-ingest bench-gate bench-record
 
 test:
 	python -m pytest -x -q
@@ -58,7 +58,12 @@ bench-faults:
 bench-guards:
 	python -m benchmarks.run --only guards
 
-# all 7 gated benches; fail on >1.3x slowdown vs benchmarks/
+# the streaming-ingest bench (micro-batched serving vs per-event,
+# live-vs-replay parity, open-loop latency, DESIGN.md §11)
+bench-ingest:
+	python -m benchmarks.run --only ingest
+
+# all 8 gated benches; fail on >1.3x slowdown vs benchmarks/
 # baseline_*.json (or below the acceptance floors / parity >1e-5 — see
 # benchmarks/check_regression.py).  Baselines are keyed by HOST KEY
 # (REPRO_BENCH_HOST_KEY / github-runner / hostname): an unrecorded host
@@ -66,7 +71,7 @@ bench-guards:
 # experiments/bench/local/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest \
 		--gate --seed 0
 
 # rerun the gated benches on THIS host and fold the fresh results into
@@ -75,6 +80,6 @@ bench-gate:
 # tracked experiments/bench/*.json records (--record).
 bench-record:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest \
 		--seed 0 --record
 	python -m benchmarks.check_regression --record-baselines

@@ -1,0 +1,146 @@
+"""Streaming-ingest plane benchmark (docs/DESIGN.md §11): what
+micro-batching the upload stream buys over per-event serving, and
+whether the live server still reproduces its offline replay.
+
+Workload: the paper-CNN CPU-budget fleet (``bench_guards``'s geometry)
+under a dense arrival burst on the VIRTUAL clock — arrival gaps far
+below ``max_wait_ms``, so the batched server always closes full
+``max_batch`` micro-batches while the unbatched comparison point
+(``max_batch=1``, the ``lowlat`` preset) pays one launch per event.
+Virtual time means no sleeps: both timings are pure service cost for
+the same 256-event stream, so their ratio is the honest micro-batching
+win on this host.
+
+* ``speedup = unbatched_s / batched_s`` is the gated same-run ratio —
+  a collapse (batch assembly falling back to per-event launches, a
+  host sync per admission, per-batch recompiles) lands at ~1x.
+* ``parity_max_abs_diff`` — the live batched run's recorded session
+  replayed through ``compile_afl_trace(events=..., realized=True)`` as
+  ONE compiled trace must match the live final model ≤1e-5 (gated).
+  This is the serving-vs-simulator contract: micro-batch boundaries
+  must be value-invisible.
+* A short wall-clock open-loop Poisson run records p50/p99 event
+  latency and sustained events/s as context (not gated — wall latency
+  on a shared CI container is load-dependent).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, emit, save_result
+
+M = 64
+K = 1                      # local iterations per upload
+LOCAL_BATCHES = 2          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 256           # upload events per timed run
+MAX_BATCH = 8              # ingest micro-batch depth
+REPS = 3                   # median-of-REPS end-to-end runs per variant
+RT_EVENTS = 96             # wall-clock context run
+RT_RATE = 150.0            # offered load (events/s) for the context run
+
+
+def bench_ingest() -> None:
+    import jax
+
+    from repro.api import RunConfig
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core import ingest as ing
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    seed = bench_seed()
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE,
+                   local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=seed)
+    p0 = task.init_params()
+    plane = task.client_plane(fleet)
+    # dense burst: 1ms gaps << max_wait, so batching saturates
+    arrivals = ing.poisson_arrivals(1000.0, ITERATIONS, M=M, seed=seed)
+
+    def cfg(max_batch):
+        return RunConfig(
+            algorithm="csmaafl", loop="ingest", iterations=ITERATIONS,
+            seed=seed, ingest={"max_batch": max_batch,
+                               "max_wait_ms": 10_000.0,
+                               "queue_cap": max(4 * max_batch, 64)})
+
+    def one(max_batch):
+        return ing.run_ingest(task, cfg(max_batch), fleet=fleet,
+                              client_plane=plane, params0=p0,
+                              arrivals=arrivals)
+
+    def timed(max_batch):
+        r = one(max_batch)             # warmup compiles the variant
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        ts = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            r = one(max_batch)
+            jax.block_until_ready(jax.tree.leaves(r.params)[0])
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), r
+
+    t_un, r_un = timed(1)
+    t_b, r_b = timed(MAX_BATCH)
+    speedup = t_un / t_b
+
+    # live-vs-replay parity: the recorded batched session as ONE
+    # compiled trace from the same seeded init
+    rep = ing.replay_session(r_b.session, client_plane=plane, params0=p0)
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_b.params),
+                                 jax.tree.leaves(rep.params)))
+
+    # wall-clock open-loop context: p50/p99 under a live Poisson load
+    rt = ing.run_ingest(
+        task, cfg(MAX_BATCH).replace(iterations=RT_EVENTS), fleet=fleet,
+        client_plane=plane, params0=p0,
+        arrivals=ing.poisson_arrivals(RT_RATE, RT_EVENTS, M=M, seed=seed),
+        realtime=True)
+    lat = rt.latency
+
+    emit("ingest.serve.unbatched", t_un * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_un:.1f} events/s (max_batch=1, one launch "
+         "per event)")
+    emit("ingest.serve.batched", t_b * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_b:.1f} events/s (max_batch={MAX_BATCH}); "
+         f"{speedup:.2f}x unbatched; parity {parity:.2e}; "
+         f"{r_b.stats['launches']} launches / "
+         f"{r_b.stats['batches']} micro-batches")
+    emit("ingest.serve.open_loop_p99", lat["p99"] * 1e6,
+         f"p50 {lat['p50'] * 1e3:.1f}ms p99 {lat['p99'] * 1e3:.1f}ms at "
+         f"{RT_RATE:.0f}/s offered ({lat['events_per_s']:.1f} served), "
+         "wall clock (context)")
+    save_result("ingest", {
+        "model": "paper_cnn_cpu_budget", "M": M, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS, "max_batch": MAX_BATCH, "seed": seed,
+        "mode": plane.engine.mode,
+        "unbatched_s": t_un, "batched_s": t_b,
+        "events_per_s_unbatched": ITERATIONS / t_un,
+        "events_per_s_batched": ITERATIONS / t_b,
+        "batched_launches": r_b.stats["launches"],
+        "batched_micro_batches": r_b.stats["batches"],
+        "p50_ms": lat["p50"] * 1e3, "p99_ms": lat["p99"] * 1e3,
+        "open_loop_events_per_s": lat["events_per_s"],
+        "open_loop_rate": RT_RATE,
+        "speedup": speedup,
+        "parity_max_abs_diff": parity,
+    })
+
+
+def main() -> None:
+    bench_ingest()
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                  realization determinism (docs/DESIGN.md §9)
   guards         in-scan update-guard + crash-safe autosave overhead on
                  the compiled run (docs/DESIGN.md §10)
+  ingest         streaming-ingest micro-batching vs per-event serving +
+                 live-vs-replay parity + open-loop latency
+                 (docs/DESIGN.md §11)
   roofline       §Roofline table from the dry-run records
 
 Results land in the GITIGNORED ``experiments/bench/local/``; pass
@@ -29,10 +32,11 @@ host record (so casual local runs never dirty the tree).
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
 gated benchmark THIS invocation produced and fails on a >1.3x slowdown
-vs the committed baselines (``make bench-gate`` runs all seven gated
+vs the committed baselines (``make bench-gate`` runs all eight gated
 benches; ``make bench-agg`` / ``make bench-client`` / ``make
 bench-sharded`` / ``make bench-compiled`` / ``make bench-sweep`` /
-``make bench-faults`` / ``make bench-guards`` run ungated).  Gate results also land in ``experiments/bench/local/
+``make bench-faults`` / ``make bench-guards`` / ``make bench-ingest``
+run ungated).  Gate results also land in ``experiments/bench/local/
 gate_report.json`` (machine-readable, one record per gate).
 
 CI-friendliness: ``--seed N`` pins every bench's fleet/batch draws
@@ -50,7 +54,7 @@ import sys
 import traceback
 
 GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop",
-         "sweep_plane", "faults", "guards")
+         "sweep_plane", "faults", "guards", "ingest")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
@@ -60,6 +64,7 @@ RESULT_FILES = {
     "sweep_plane": "sweep_plane.json",
     "faults": "faults.json",
     "guards": "guards.json",
+    "ingest": "ingest.json",
 }
 
 
@@ -69,7 +74,7 @@ def main(argv=None) -> int:
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,client_plane,sharded_plane,"
                          "compiled_loop,sweep_plane,faults,guards,"
-                         "roofline")
+                         "ingest,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -94,7 +99,7 @@ def main(argv=None) -> int:
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
               "compiled_loop", "sweep_plane", "faults", "guards",
-              "kernels", "convergence", "roofline"])
+              "ingest", "kernels", "convergence", "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
@@ -130,6 +135,9 @@ def main(argv=None) -> int:
                 b.main()
             elif name == "guards":
                 from benchmarks import bench_guards as b
+                b.main()
+            elif name == "ingest":
+                from benchmarks import bench_ingest as b
                 b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b

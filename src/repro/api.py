@@ -1,0 +1,450 @@
+"""Unified run API: one typed ``RunConfig`` + one ``run(task, config)``
+facade over every execution plane (DESIGN.md §11).
+
+``run_afl`` grew 18+ keyword arguments that ``run_async``,
+``run_fedavg``, ``train.py`` and the sweep plane each re-plumbed by
+hand.  This module is the single contract instead:
+
+* :class:`RunConfig` — a frozen dataclass tree (algorithm, timing,
+  server-opt, faults, guards, autosave, plane selection, fleet
+  geometry, ingest budget) that serializes to/from JSON with
+  unknown-field rejection and did-you-mean suggestions.
+* :func:`run` — ``run(task, config)`` builds the fleet, the client
+  plane and the eval hook from the task and dispatches to the right
+  execution loop.  The legacy entry points (``core.afl.run_afl``,
+  ``core.sfl.run_fedavg``, ``core.async_runtime.run_async``) are thin
+  shims that build a ``RunConfig`` and funnel into the same
+  implementations, so old keyword spellings stay bit-identical.
+* CLI flag groups (:func:`add_robustness_flags`,
+  :func:`config_from_args`) shared by ``launch/train.py``,
+  ``launch/serve_afl.py`` and ``launch/fleet_check.py`` — the fault /
+  guard / autosave plumbing lives here once.
+
+Nothing from ``repro.core`` is imported at module level: the core
+modules import ``RunConfig`` inside their shims, so the facade sits
+above the planes without an import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional
+
+from repro.core.presets import resolve_preset
+
+ALGORITHMS = ("csmaafl", "afl_alpha", "afl_baseline", "fedavg")
+LOOPS = ("windowed", "compiled", "async", "ingest")
+
+
+# ---------------------------------------------------------------------------
+# Config leaves
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TimingConfig:
+    """Paper timing constants: uplink / downlink transfer times (s)."""
+    tau_u: float = 0.1
+    tau_d: float = 0.1
+
+
+@dataclass(frozen=True)
+class ServerOptConfig:
+    """Server-side optimizer applied to the blended delta (FedOpt);
+    ``name=None`` is the paper's plain blend."""
+    name: Optional[str] = None
+    lr: float = 1.0
+
+
+@dataclass(frozen=True)
+class AutosaveConfig:
+    """Crash-safe autosave cadence (DESIGN.md §10); ``every=None`` off."""
+    every: Optional[int] = None
+    dir: Optional[str] = None
+    keep_last: int = 3
+
+
+@dataclass(frozen=True)
+class PlaneConfig:
+    """Client-plane selection: ``none`` (per-leaf reference loop),
+    ``single`` (fused (M, n) fleet buffer), ``sharded`` (fleet mesh).
+    ``window_cap`` bounds the AFL event window before a forced retrain
+    flush — the ingest plane reuses it as its backpressure bound."""
+    kind: str = "single"
+    window_cap: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ("none", "single", "sharded"):
+            raise ValueError(f"plane.kind must be none|single|sharded, "
+                             f"got '{self.kind}'")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Fleet geometry for ``scheduler.make_fleet`` (paper §V: compute
+    time log-uniform in [tau, hetero_a·tau])."""
+    num_clients: int = 16
+    tau: float = 1.0
+    hetero_a: float = 4.0
+    adaptive: bool = True
+    min_steps: int = 1
+    max_steps: int = 8
+    base_local_steps: int = 1
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class IngestConfig:
+    """Streaming-ingest latency budget (DESIGN.md §11): close a
+    micro-batch at ``max_batch`` pending uploads or ``max_wait_ms``
+    after the oldest pending arrival, whichever first.  ``queue_cap``
+    bounds admitted-but-unprocessed uploads (backpressure; defaults to
+    the plane's ``window_cap``); over-cap arrivals are shed with a
+    recorded drop slot rather than silently lost."""
+    max_batch: int = 8
+    max_wait_ms: float = 50.0
+    queue_cap: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("ingest.max_batch must be >= 1")
+        if self.max_wait_ms < 0:
+            raise ValueError("ingest.max_wait_ms must be >= 0")
+
+
+INGEST_PRESETS: Dict[str, Optional[Dict[str, Any]]] = {
+    # close every micro-batch immediately — lowest latency, one launch
+    # per event (the unbatched comparison point in bench_ingest)
+    "lowlat": {"max_batch": 1, "max_wait_ms": 0.0},
+    # default budget: small batches under a tight wait bound
+    "default": {},
+    # throughput-oriented: deep batches, generous wait
+    "throughput": {"max_batch": 32, "max_wait_ms": 200.0},
+}
+
+
+def resolve_ingest(spec) -> Optional[IngestConfig]:
+    """Normalize an ingest spec (None / preset name / kwargs dict /
+    IngestConfig) through the shared preset resolver."""
+    return resolve_preset(INGEST_PRESETS, spec, cls=IngestConfig,
+                          kind="ingest", accept_bool=True,
+                          off_aliases=("off", "none"))
+
+
+_NESTED = {"timing": TimingConfig, "server_opt": ServerOptConfig,
+           "autosave": AutosaveConfig, "plane": PlaneConfig,
+           "fleet": FleetConfig}
+
+
+def _spec_jsonable(spec):
+    if dataclasses.is_dataclass(spec) and not isinstance(spec, type):
+        return dataclasses.asdict(spec)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# RunConfig
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything a run needs besides the task and the device state.
+
+    ``faults`` / ``guards`` / ``ingest`` hold *specs* (preset name,
+    kwargs dict, or built instance) and are resolved by the planes via
+    ``resolve_faults`` / ``resolve_guards`` / ``resolve_ingest`` — a
+    config loaded from JSON and one built in code take the same path.
+    ``iterations`` is rounds for fedavg and rounds-per-client for the
+    async loop.
+    """
+    algorithm: str = "csmaafl"
+    loop: str = "windowed"
+    iterations: int = 100
+    gamma: float = 0.4
+    mu_momentum: float = 0.9
+    eval_every: int = 10
+    evaluate: bool = False
+    max_staleness: Optional[int] = None
+    local_steps_override: Optional[int] = None   # fedavg: force uniform K
+    time_scale: float = 0.005                    # async loop wall-clock scale
+    use_engine: bool = True
+    seed: int = 0
+    timing: TimingConfig = field(default_factory=TimingConfig)
+    server_opt: ServerOptConfig = field(default_factory=ServerOptConfig)
+    autosave: AutosaveConfig = field(default_factory=AutosaveConfig)
+    plane: PlaneConfig = field(default_factory=PlaneConfig)
+    fleet: FleetConfig = field(default_factory=FleetConfig)
+    faults: Any = None
+    guards: Any = None
+    ingest: Any = None
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"algorithm must be one of {ALGORITHMS}, "
+                             f"got '{self.algorithm}'")
+        if self.loop not in LOOPS:
+            raise ValueError(f"loop must be one of {LOOPS}, "
+                             f"got '{self.loop}'")
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            d[f.name] = _spec_jsonable(v)
+        return d
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunConfig":
+        from repro.core.presets import _check_fields
+        if not isinstance(d, Mapping):
+            raise TypeError(f"RunConfig.from_dict wants a mapping, "
+                            f"got {type(d).__name__}")
+        kw = dict(d)
+        _check_fields(cls, "RunConfig", kw)
+        for key, sub_cls in _NESTED.items():
+            v = kw.get(key)
+            if isinstance(v, Mapping):
+                _check_fields(sub_cls, f"RunConfig.{key}", v)
+                kw[key] = sub_cls(**v)
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunConfig":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "RunConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- kwargs bridges (legacy spellings <-> config, bit-identical) --------
+    @classmethod
+    def from_afl_kwargs(cls, *, algorithm, iterations, tau_u, tau_d,
+                        gamma=0.4, mu_momentum=0.9, eval_every=10,
+                        server_opt=None, server_lr=1.0, max_staleness=None,
+                        use_engine=True, use_client_plane=True,
+                        compiled_loop=False, faults=None, guards=None,
+                        autosave_every=None, autosave_dir=None,
+                        autosave_keep_last=3, seed=0) -> "RunConfig":
+        return cls(
+            algorithm=algorithm, iterations=iterations,
+            loop="compiled" if compiled_loop else "windowed",
+            gamma=gamma, mu_momentum=mu_momentum, eval_every=eval_every,
+            max_staleness=max_staleness, use_engine=use_engine, seed=seed,
+            timing=TimingConfig(tau_u=tau_u, tau_d=tau_d),
+            server_opt=ServerOptConfig(name=server_opt, lr=server_lr),
+            autosave=AutosaveConfig(every=autosave_every, dir=autosave_dir,
+                                    keep_last=autosave_keep_last),
+            plane=PlaneConfig(kind="single" if use_client_plane else "none"),
+            faults=faults, guards=guards)
+
+    def afl_kwargs(self) -> Dict[str, Any]:
+        """Exactly the keyword set ``core.afl._run_afl_impl`` takes
+        (minus the runtime objects) — the round-trip that keeps legacy
+        ``run_afl(...)`` calls bit-identical."""
+        return dict(
+            algorithm=self.algorithm, iterations=self.iterations,
+            tau_u=self.timing.tau_u, tau_d=self.timing.tau_d,
+            gamma=self.gamma, mu_momentum=self.mu_momentum,
+            eval_every=self.eval_every, server_opt=self.server_opt.name,
+            server_lr=self.server_opt.lr, max_staleness=self.max_staleness,
+            use_engine=self.use_engine,
+            use_client_plane=self.plane.kind != "none",
+            compiled_loop=self.loop == "compiled",
+            faults=self.faults, guards=self.guards,
+            autosave_every=self.autosave.every,
+            autosave_dir=self.autosave.dir,
+            autosave_keep_last=self.autosave.keep_last,
+            seed=self.seed)
+
+    @classmethod
+    def from_fedavg_kwargs(cls, *, rounds, tau_u, tau_d, eval_every=1,
+                           local_steps_override=None, use_engine=True,
+                           use_client_plane=True, seed=0) -> "RunConfig":
+        return cls(
+            algorithm="fedavg", iterations=rounds, eval_every=eval_every,
+            local_steps_override=local_steps_override,
+            use_engine=use_engine, seed=seed,
+            timing=TimingConfig(tau_u=tau_u, tau_d=tau_d),
+            plane=PlaneConfig(kind="single" if use_client_plane else "none"))
+
+    def fedavg_kwargs(self) -> Dict[str, Any]:
+        return dict(
+            rounds=self.iterations, tau_u=self.timing.tau_u,
+            tau_d=self.timing.tau_d, eval_every=self.eval_every,
+            local_steps_override=self.local_steps_override,
+            use_engine=self.use_engine,
+            use_client_plane=self.plane.kind != "none", seed=self.seed)
+
+    @classmethod
+    def from_async_kwargs(cls, *, rounds_per_client, gamma=0.4,
+                          time_scale=0.005, max_staleness=None,
+                          use_engine=True, use_client_plane=True,
+                          faults=None, fault_seed=0) -> "RunConfig":
+        return cls(
+            algorithm="csmaafl", loop="async",
+            iterations=rounds_per_client, gamma=gamma,
+            time_scale=time_scale, max_staleness=max_staleness,
+            use_engine=use_engine, seed=fault_seed, faults=faults,
+            plane=PlaneConfig(kind="single" if use_client_plane else "none"))
+
+    def async_kwargs(self) -> Dict[str, Any]:
+        return dict(
+            rounds_per_client=self.iterations, gamma=self.gamma,
+            time_scale=self.time_scale, max_staleness=self.max_staleness,
+            use_engine=self.use_engine,
+            use_client_plane=self.plane.kind != "none",
+            faults=self.faults, fault_seed=self.seed)
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+def run(task, config, *, fleet=None, client_plane=None, params0=None,
+        eval_fn=None, local_train_fn=None, resume_state=None,
+        stop_flag=None):
+    """Run ``config`` against ``task``: build the fleet (``make_fleet``
+    over the task's sample counts), the client plane (per
+    ``config.plane``) and the eval hook (``task.eval_fn`` when
+    ``config.evaluate``), then dispatch on ``algorithm`` / ``loop``.
+
+    Any of the runtime objects can be passed in to override the
+    task-derived ones (tests pass a prebuilt plane; ``train.py`` passes
+    its resume state).  Returns the native result of the underlying
+    loop: an ``AFLResult`` for the AFL loops, ``(params, history)`` for
+    fedavg, ``(params, server, stats)`` for the async runtime, and an
+    ``IngestResult`` for ``loop="ingest"``.
+    """
+    cfg = config if isinstance(config, RunConfig) \
+        else RunConfig.from_dict(config)
+    if fleet is None:
+        from repro.core.scheduler import make_fleet
+        fc = cfg.fleet
+        fleet = make_fleet(fc.num_clients, tau=fc.tau,
+                           hetero_a=fc.hetero_a,
+                           samples_per_client=task.num_samples(),
+                           seed=fc.seed, adaptive=fc.adaptive,
+                           min_steps=fc.min_steps, max_steps=fc.max_steps,
+                           base_local_steps=fc.base_local_steps)
+    if params0 is None:
+        params0 = task.init_params(cfg.seed)
+    use_plane = cfg.plane.kind != "none"
+    if client_plane is None and use_plane:
+        client_plane = task.client_plane(
+            fleet, sharded=cfg.plane.kind == "sharded")
+    if client_plane is not None and cfg.plane.window_cap is not None:
+        client_plane.window_cap = cfg.plane.window_cap
+    if eval_fn is None and cfg.evaluate:
+        eval_fn = task.eval_fn
+    if local_train_fn is None and not use_plane:
+        local_train_fn = getattr(task, "local_train_fn", None)
+
+    if cfg.algorithm == "fedavg":
+        from repro.core import sfl
+        return sfl._run_fedavg_impl(
+            params0, fleet, local_train_fn, eval_fn=eval_fn,
+            client_plane=client_plane, **cfg.fedavg_kwargs())
+    if cfg.loop == "async":
+        from repro.core import async_runtime
+        return async_runtime._run_async_impl(
+            params0, fleet, local_train_fn, client_plane=client_plane,
+            **cfg.async_kwargs())
+    if cfg.loop == "ingest":
+        from repro.core.ingest import run_ingest
+        return run_ingest(task, cfg, fleet=fleet,
+                          client_plane=client_plane, params0=params0,
+                          eval_fn=eval_fn)
+    from repro.core import afl
+    return afl._run_afl_impl(
+        params0, fleet, local_train_fn, eval_fn=eval_fn,
+        client_plane=client_plane, resume_state=resume_state,
+        stop_flag=stop_flag, **cfg.afl_kwargs())
+
+
+# ---------------------------------------------------------------------------
+# Shared CLI flag groups (train.py / serve_afl.py / fleet_check.py)
+# ---------------------------------------------------------------------------
+def add_config_flag(ap) -> None:
+    ap.add_argument("--config", default=None, metavar="run.json",
+                    help="load a serialized RunConfig (repro.api); other "
+                         "flags override fields loaded from the file")
+
+
+def add_robustness_flags(ap, *, ckpt_default=None) -> None:
+    """The fault / guard / autosave flag group — one definition shared
+    by every launcher instead of per-file copies."""
+    grp = ap.add_argument_group("robustness (faults / guards / autosave)")
+    grp.add_argument("--faults", default=None,
+                     help="fault-injection preset for the AFL run "
+                          "(core/faults.py: diurnal20, lossy, flaky, "
+                          "blackout) or an inline JSON dict of FaultModel "
+                          "overrides, e.g. '{\"preset\": \"lossy\", "
+                          "\"loss_prob\": 0.4}'; rewrites the scheduler "
+                          "timeline with availability windows, mid-flight "
+                          "dropouts and flaky-uplink retries")
+    grp.add_argument("--guards", default=None,
+                     help="in-scan update guards (core/guards.py): a "
+                          "preset (default, strict, nonfinite, clip), "
+                          "'off', or a JSON GuardConfig dict, e.g. "
+                          "'{\"norm_outlier\": 5.0, \"clip_norm\": 1.0}'; "
+                          "non-finite / outlier client rows become "
+                          "identity steps inside the jitted scan")
+    grp.add_argument("--autosave", type=int, default=None, metavar="N",
+                     help="durably autosave run state to --ckpt-dir every "
+                          "N events (tmp+fsync+atomic-rename with a "
+                          "checksummed meta record; rotation via "
+                          "--keep-last) so a crash resumes mid-run")
+    grp.add_argument("--ckpt-dir", dest="ckpt_dir", default=ckpt_default,
+                     help="directory for --autosave checkpoints and "
+                          "valueless --resume lookups "
+                          "(default experiments/ckpt)")
+    grp.add_argument("--keep-last", dest="keep_last", type=int, default=3,
+                     help="autosave rotation depth per checkpoint family")
+
+
+def config_from_args(args, base: Optional[RunConfig] = None) -> RunConfig:
+    """Fold the shared CLI flags over ``--config`` (or a given base):
+    file first, explicit flags override.  Only flags the parser actually
+    defines are consulted, so launchers with partial flag sets reuse
+    this unchanged."""
+    cfg = base
+    if cfg is None and getattr(args, "config", None):
+        cfg = RunConfig.load(args.config)
+    if cfg is None:
+        cfg = RunConfig()
+    kw: Dict[str, Any] = {}
+    if getattr(args, "faults", None) is not None:
+        kw["faults"] = args.faults
+    if getattr(args, "guards", None) is not None:
+        kw["guards"] = args.guards
+    if getattr(args, "autosave", None) is not None:
+        cfg = cfg.replace(autosave=dataclasses.replace(
+            cfg.autosave, every=args.autosave,
+            dir=getattr(args, "ckpt_dir", None) or cfg.autosave.dir,
+            keep_last=getattr(args, "keep_last", cfg.autosave.keep_last)))
+    elif getattr(args, "ckpt_dir", None) and cfg.autosave.every:
+        cfg = cfg.replace(autosave=dataclasses.replace(
+            cfg.autosave, dir=args.ckpt_dir))
+    if getattr(args, "window_cap", None) is not None:
+        cfg = cfg.replace(plane=dataclasses.replace(
+            cfg.plane, window_cap=args.window_cap))
+    if getattr(args, "loop", None):
+        loop = {"window": "windowed"}.get(args.loop, args.loop)
+        kw["loop"] = loop
+    if getattr(args, "algorithm", None):
+        kw["algorithm"] = args.algorithm
+    if getattr(args, "gamma", None) is not None:
+        kw["gamma"] = args.gamma
+    if kw:
+        cfg = cfg.replace(**kw)
+    return cfg

@@ -98,6 +98,46 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             autosave_keep_last: Optional[int] = 3,
             stop_flag=None,
             seed: int = 0) -> AFLResult:
+    """Legacy keyword entry point — a thin shim over the unified run
+    API (``repro.api``): the keywords fold into a :class:`RunConfig`
+    and expand back through ``cfg.afl_kwargs()`` into the same
+    implementation ``repro.api.run(task, cfg)`` dispatches to, so both
+    spellings are bit-identical by construction.  See
+    :func:`_run_afl_impl` for the semantics of every knob."""
+    from repro.api import RunConfig
+    cfg = RunConfig.from_afl_kwargs(
+        algorithm=algorithm, iterations=iterations, tau_u=tau_u,
+        tau_d=tau_d, gamma=gamma, mu_momentum=mu_momentum,
+        eval_every=eval_every, server_opt=server_opt, server_lr=server_lr,
+        max_staleness=max_staleness, use_engine=use_engine,
+        use_client_plane=use_client_plane, compiled_loop=compiled_loop,
+        faults=faults, guards=guards, autosave_every=autosave_every,
+        autosave_dir=autosave_dir, autosave_keep_last=autosave_keep_last,
+        seed=seed)
+    return _run_afl_impl(params0, fleet, local_train_fn, eval_fn=eval_fn,
+                         client_plane=client_plane,
+                         resume_state=resume_state, stop_flag=stop_flag,
+                         **cfg.afl_kwargs())
+
+
+def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
+                  local_train_fn: Optional[LocalTrainFn], *,
+                  algorithm: str,        # afl_alpha | afl_baseline | csmaafl
+                  iterations: int, tau_u: float, tau_d: float,
+                  gamma: float = 0.4, mu_momentum: float = 0.9,
+                  eval_fn: Optional[EvalFn] = None, eval_every: int = 10,
+                  server_opt: Optional[str] = None, server_lr: float = 1.0,
+                  max_staleness: Optional[int] = None,
+                  use_engine: bool = True,
+                  client_plane=None, use_client_plane: bool = True,
+                  compiled_loop: bool = False,
+                  resume_state: Optional[Dict[str, Any]] = None,
+                  faults=None, guards=None,
+                  autosave_every: Optional[int] = None,
+                  autosave_dir: Optional[str] = None,
+                  autosave_keep_last: Optional[int] = 3,
+                  stop_flag=None,
+                  seed: int = 0) -> AFLResult:
     """Run one AFL variant.  One event == one global iteration (eq. 3).
 
     Three data planes, most fused first (all parity-tested to 1e-5):

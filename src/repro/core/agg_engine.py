@@ -220,6 +220,13 @@ class AggEngine:
             row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)
             return blend_row_expr(g_flat, row[0], coefs)
 
+        def mac_cids(g_flat, fleet_buf, cids, coefs):
+            """Folded trunk whose C client models are rows of the fleet
+            buffer, gathered INSIDE the program — one launch for an
+            ingest micro-batch, no (C, n) host-side staging copy."""
+            rows = jnp.take(fleet_buf, cids, axis=0)
+            return mac_rows(g_flat, rows, coefs)
+
         def delta_row(g_flat, fleet_buf, cid, scale):
             row = jax.lax.dynamic_slice_in_dim(fleet_buf, cid, 1, axis=0)[0]
             return delta_row_expr(g_flat, row, scale)
@@ -240,6 +247,7 @@ class AggEngine:
         self._blend_one = jax.jit(blend_one, donate_argnums=dn)
         self._blend_many = jax.jit(blend_many, donate_argnums=dn)
         self._mac_rows = jax.jit(mac_rows, donate_argnums=dn)
+        self._mac_cids = jax.jit(mac_cids, donate_argnums=dn)
         self._blend_row = jax.jit(blend_row, donate_argnums=dn)
         self._delta_row = jax.jit(delta_row)
         self._delta_one = jax.jit(delta_one)
@@ -337,6 +345,27 @@ class AggEngine:
             jnp.reshape(jnp.asarray(coef0, jnp.float32), (1,)),
             jnp.asarray(coefs, jnp.float32)])
         return self._mac_rows(g_flat, rows, cvec)
+
+    def blend_rows_fleet(self, g_flat, fleet_buf, cids: Sequence[int],
+                         betas: Sequence[float]) -> jnp.ndarray:
+        """Trunk of K sequential eq.-(3) blends whose K client models
+        are rows of the (M, n) fleet buffer, addressed by cid and
+        gathered inside the program — the ingest plane's row-batched
+        blend entry (DESIGN.md §11; one launch per micro-batch).  Same
+        pow2 bucketing and fold as ``blend_rows_flat`` (zero-coefficient
+        repeats of ``cids[0]`` pad the trunk), and the same signature as
+        ``ShardedRowEngine.blend_rows_fleet`` so callers are
+        plane-agnostic."""
+        if len(cids) != len(betas):
+            raise ValueError("one beta per queued row")
+        c0, coefs = agg.fold_sequential_blends([float(b) for b in betas])
+        bucket = pow2_bucket(len(cids))
+        pad = bucket - len(cids)
+        coefs = np.concatenate((coefs, np.zeros(pad)))
+        cids = np.concatenate((np.asarray(cids, np.int32),
+                               np.full(pad, cids[0], np.int32)))
+        cvec = jnp.asarray(np.concatenate(([c0], coefs)), jnp.float32)
+        return self._mac_cids(g_flat, fleet_buf, jnp.asarray(cids), cvec)
 
     # -- FedOpt pseudo-gradients on the flat buffer -------------------------
     def delta_flat(self, g_flat, client_tree, scale) -> jnp.ndarray:

@@ -144,11 +144,7 @@ class AsyncCSMAAFLServer:
             return False
         k = self._upload_counts.get(cid, 0)
         self._upload_counts[cid] = k + 1
-        if fm.loss_prob >= 1.0:
-            return True
-        rng = np.random.default_rng([self._fault_seed, cid, k, 0xFA])
-        fails = int(rng.geometric(1.0 - fm.loss_prob)) - 1
-        return fails > fm.max_retries
+        return flt.uplink_drop_verdict(fm, cid, k, self._fault_seed)
 
     def _aggregate_trunk(self, batch: List[_SlotRequest]):
         with self._lock:
@@ -255,6 +251,27 @@ def run_async(params0, fleet: List[ClientSpec], local_train_fn, *,
               use_engine: bool = True,
               client_plane=None, use_client_plane: bool = True,
               faults=None, fault_seed: int = 0):
+    """Legacy keyword entry point — thin shim over ``repro.api``
+    (kwargs fold into a :class:`repro.api.RunConfig` and expand back,
+    bit-identically, into :func:`_run_async_impl`)."""
+    from repro.api import RunConfig
+    cfg = RunConfig.from_async_kwargs(
+        rounds_per_client=rounds_per_client, gamma=gamma,
+        time_scale=time_scale, max_staleness=max_staleness,
+        use_engine=use_engine, use_client_plane=use_client_plane,
+        faults=faults, fault_seed=fault_seed)
+    return _run_async_impl(params0, fleet, local_train_fn,
+                           client_plane=client_plane,
+                           **cfg.async_kwargs())
+
+
+def _run_async_impl(params0, fleet: List[ClientSpec], local_train_fn, *,
+                    rounds_per_client: int, gamma: float = 0.4,
+                    time_scale: float = 0.005,
+                    max_staleness: Optional[int] = None,
+                    use_engine: bool = True,
+                    client_plane=None, use_client_plane: bool = True,
+                    faults=None, fault_seed: int = 0):
     """Run the threaded fleet to completion; returns (params, server)."""
     plane = client_plane if (use_client_plane and client_plane is not None) \
         else None

@@ -225,6 +225,15 @@ class ClientPlane:
         valid = np.arange(bucket) < nb
         return _pad_batches(batches, bucket), valid
 
+    def backpressure_cap(self, max_batch: int) -> int:
+        """Admission bound for the streaming ingest plane (DESIGN.md
+        §11): the configured ``window_cap`` when set — backpressure and
+        the windowed loop's event-window bound are the same knob — else
+        a few micro-batches of headroom."""
+        if self.window_cap is not None:
+            return int(self.window_cap)
+        return max(4 * int(max_batch), 64)
+
     # -- fused local training -----------------------------------------------
     def init_fleet(self, g_flat: jnp.ndarray, seed: int) -> jnp.ndarray:
         """Every client trains from the initial broadcast w_0: one vmapped

@@ -140,7 +140,7 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
                       max_staleness: Optional[int] = None,
                       seed: int = 0,
                       events: Optional[List[UploadEvent]] = None,
-                      faults=None) -> EventTrace:
+                      faults=None, realized: bool = False) -> EventTrace:
     """Run the scheduler once on the host and precompute every scalar the
     event loop would: the timeline, the §III coefficients, the retrain
     seeds.  Mirrors ``run_afl``'s coefficient logic exactly (same float
@@ -165,6 +165,13 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
     skips fault-dropped uploads (the server never saw them)."""
     from repro.core import faults as flt
 
+    if realized and events is None:
+        raise ValueError("realized=True replays a recorded timeline — "
+                         "pass events")
+    if realized and faults is not None:
+        raise ValueError("realized events already carry their fault "
+                         "outcomes; faults= would double-apply them")
+
     M = len(fleet)
     alpha = agg.sfl_alpha([c.num_samples for c in fleet])
     if algorithm == "afl_baseline":
@@ -182,7 +189,17 @@ def compile_afl_trace(fleet: Sequence[ClientSpec], *, algorithm: str,
     base_events = events
     E = len(events)
     fm = flt.resolve_faults(faults)
-    if fm is not None and fm.active():
+    if realized:
+        # the recorded stream (an ingest session's arrival log) already
+        # went through the fault plane LIVE: each UploadEvent carries its
+        # outcome / attempts / realized staleness, so replay just reads
+        # them back instead of re-rolling the transform
+        base_events = None
+        dropped = np.asarray([ev.outcome != flt.OUTCOME_OK
+                              for ev in events], bool)
+        attempts = np.asarray([ev.attempts for ev in events], np.int32)
+        outcomes = np.asarray([ev.outcome for ev in events], np.int8)
+    elif fm is not None and fm.active():
         real = flt.realize_events(base_events, fm, algorithm=algorithm,
                                   M=M, tau_u=tau_u, seed=seed)
         events = real.events

@@ -41,7 +41,6 @@ Outcome codes ride the :class:`~repro.core.scheduler.UploadEvent`
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -54,12 +53,14 @@ OUTCOME_UNAVAIL = 1          # offline past the timeout at upload start
 OUTCOME_MIDFLIGHT = 2        # went offline between download and upload
 OUTCOME_LOSS = 3             # uplink lost every attempt up to max_retries
 OUTCOME_TIMEOUT = 4          # accumulated retry delay exceeded the timeout
+OUTCOME_SHED = 5             # shed at the ingest admission queue (backpressure)
 OUTCOME_NAMES = {
     OUTCOME_OK: "ok",
     OUTCOME_UNAVAIL: "drop_unavail",
     OUTCOME_MIDFLIGHT: "drop_midflight",
     OUTCOME_LOSS: "drop_loss",
     OUTCOME_TIMEOUT: "drop_timeout",
+    OUTCOME_SHED: "drop_shed",
 }
 
 
@@ -129,25 +130,12 @@ def resolve_faults(spec) -> Optional[FaultModel]:
     """Normalize a fault spec: None / FaultModel / preset name / kwargs
     dict (optionally ``{"preset": name, **overrides}``); a string
     starting with ``{`` is parsed as a JSON dict (the CLI form)."""
-    if spec is None or isinstance(spec, FaultModel):
-        return spec
-    if isinstance(spec, str) and spec.lstrip().startswith("{"):
-        return resolve_faults(json.loads(spec))
-    if isinstance(spec, str):
-        try:
-            kw = FAULT_PRESETS[spec]
-        except KeyError:
-            raise KeyError(f"unknown fault preset '{spec}' — available: "
-                           f"{sorted(FAULT_PRESETS)}") from None
-        return None if kw is None else FaultModel(**kw)
-    if isinstance(spec, dict):
-        kw = dict(spec)
-        base = kw.pop("preset", None)
-        merged = dict(FAULT_PRESETS.get(base) or {}) if base else {}
-        merged.update(kw)
-        return FaultModel(**merged) if merged else None
-    raise TypeError(f"fault spec must be None, a FaultModel, a preset "
-                    f"name or a kwargs dict, got {type(spec).__name__}")
+    from repro.core.presets import resolve_preset
+    return resolve_preset(
+        FAULT_PRESETS, spec, cls=FaultModel, kind="fault",
+        missing_exc=KeyError, empty_is_none=True,
+        bad_type_msg=f"fault spec must be None, a FaultModel, a preset "
+                     f"name or a kwargs dict, got {type(spec).__name__}")
 
 
 # ---------------------------------------------------------------------------
@@ -376,6 +364,23 @@ def realize_events(events: Sequence[UploadEvent], fm: FaultModel, *,
 # ---------------------------------------------------------------------------
 # Dropout-robustness metrics
 # ---------------------------------------------------------------------------
+def uplink_drop_verdict(fm: Optional[FaultModel], cid: int, upload_k: int,
+                        fault_seed: int) -> bool:
+    """Deterministic flaky-uplink verdict for client ``cid``'s
+    ``upload_k``-th upload: every attempt is lost with prob
+    ``loss_prob``, bounded by ``max_retries`` — the same
+    geometric-failures model the trace transform uses, keyed by
+    (fault seed, cid, upload #) so the async runtime and the live
+    ingest server roll identical drops for identical histories."""
+    if fm is None or fm.loss_prob <= 0.0:
+        return False
+    if fm.loss_prob >= 1.0:
+        return True
+    rng = np.random.default_rng([fault_seed, cid, upload_k, 0xFA])
+    fails = int(rng.geometric(1.0 - fm.loss_prob)) - 1
+    return fails > fm.max_retries
+
+
 def gini(x) -> float:
     """Gini index of a nonnegative vector (0 = equal shares)."""
     x = np.sort(np.asarray(x, np.float64))

@@ -94,25 +94,12 @@ GUARD_PRESETS: Dict[str, Optional[GuardConfig]] = {
 def resolve_guards(spec) -> Optional[GuardConfig]:
     """Normalize a guard spec (None/bool/preset name/kwargs dict/
     GuardConfig) to a GuardConfig, or None when guarding is off."""
-    if spec is None or spec is False:
-        return None
-    if spec is True:
-        return GuardConfig()
-    if isinstance(spec, GuardConfig):
-        return spec if spec.active() else None
-    if isinstance(spec, str):
-        name = spec.strip().lower()
-        if name in ("off", "none", ""):
-            return None
-        if name not in GUARD_PRESETS:
-            raise ValueError(
-                f"unknown guard preset '{spec}' "
-                f"(have: {', '.join(sorted(GUARD_PRESETS))}, off)")
-        return GUARD_PRESETS[name]
-    if isinstance(spec, dict):
-        cfg = GuardConfig(**spec)
-        return cfg if cfg.active() else None
-    raise TypeError(f"cannot resolve guard spec of type {type(spec)!r}")
+    from repro.core.presets import resolve_preset
+    return resolve_preset(
+        GUARD_PRESETS, spec, cls=GuardConfig, kind="guard",
+        accept_bool=True, off_aliases=("off", "none", ""),
+        post=lambda cfg: cfg if cfg.active() else None,
+        bad_type_msg=f"cannot resolve guard spec of type {type(spec)!r}")
 
 
 # ---------------------------------------------------------------------------

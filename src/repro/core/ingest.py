@@ -1,0 +1,700 @@
+"""High-QPS streaming ingest plane: the AFL server as a service
+(docs/DESIGN.md §11).
+
+The simulator loops (`core/afl.py`, `core/event_trace.py`) consume a
+precomputed timeline; this module is the SERVING shape of the same
+server: concurrent client uploads arrive as a stream of
+``(t_arrival, cid)`` events, and the server
+
+  * does the per-event host bookkeeping the windowed loop does — slot
+    assignment, eq. (11) staleness tracker, §III-A/§III-B coefficients,
+    ``max_staleness`` admission, flaky-uplink verdicts
+    (``faults.uplink_drop_verdict``, the same stream the async runtime
+    draws from) — the moment each upload is admitted;
+  * micro-batches pending uploads under a latency budget
+    (``repro.api.IngestConfig``: close at ``max_batch`` accepted
+    uploads or ``max_wait_ms`` after the oldest pending arrival) and
+    executes each micro-batch through the compiled-loop machinery
+    (``CompiledLoopRunner`` over a mini :class:`EventTrace` slice), so
+    retrains, guards, FedOpt, broadcasts and evals take exactly the
+    per-event device path the offline replay takes;
+  * sheds over-cap arrivals (``queue_cap``, defaulting to the plane's
+    ``window_cap`` via ``ClientPlane.backpressure_cap``) as recorded
+    ``OUTCOME_SHED`` drop slots — backpressure is part of the trace,
+    never a silent loss;
+  * records the whole session (:class:`IngestSession`) so the exact
+    arrival log replays OFFLINE through ``compile_afl_trace(events=...,
+    realized=True)`` — one contiguous compiled run whose final model
+    matches the live micro-batched server ≤1e-5 (the bench_ingest
+    parity gate).
+
+Blend-only §III-B micro-batches (guards off, plain blend, f32) skip the
+scan entirely: the K pending uploads fold into ONE row-gather MAC
+launch (``AggEngine.blend_rows_fleet`` — eq. (3) chain folded by
+``fold_sequential_blends``), the ingest-side twin of the replay
+runner's ``_run_folded`` trunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import faults as flt
+from repro.core import guards as grd
+from repro.core.scheduler import (AFLScheduler, BaselineAFLScheduler,
+                                  ClientSpec, UploadEvent)
+from repro.core.sfl import FLHistory
+
+
+def _jsonable_spec(spec):
+    """Fault / guard specs as JSON-safe values for the session record."""
+    if dataclasses.is_dataclass(spec) and not isinstance(spec, type):
+        return dataclasses.asdict(spec)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Session record: the arrival log + everything replay needs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class IngestSession:
+    """One live ingest run, recorded: the realized event stream (slots,
+    outcomes, realized staleness), the β the server actually applied,
+    and the config needed to rebuild the replay — self-contained, so a
+    saved session replays in a fresh process (`launch/serve_afl.py
+    --replay`)."""
+    algorithm: str
+    seed: int
+    gamma: float
+    mu_momentum: float
+    max_staleness: Optional[int]
+    eval_every: int
+    tau_u: float
+    tau_d: float
+    server_opt: Optional[str]
+    server_lr: float
+    guards: Any                  # spec (preset name / kwargs / None)
+    faults: Any                  # spec
+    ingest: Dict[str, Any]       # resolved IngestConfig as a dict
+    fleet: List[Dict[str, Any]]  # ClientSpec fields per client
+    events: List[UploadEvent] = dataclasses.field(default_factory=list)
+    betas: List[float] = dataclasses.field(default_factory=list)
+    arrival_t: List[float] = dataclasses.field(default_factory=list)
+    done_t: List[float] = dataclasses.field(default_factory=list)
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["guards"] = _jsonable_spec(self.guards)
+        d["faults"] = _jsonable_spec(self.faults)
+        return d
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f)
+            f.write("\n")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "IngestSession":
+        d = dict(d)
+        d["events"] = [UploadEvent(**ev) for ev in d.get("events", [])]
+        return cls(**d)
+
+    @classmethod
+    def load(cls, path: str) -> "IngestSession":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def make_fleet(self) -> List[ClientSpec]:
+        return [ClientSpec(**c) for c in self.fleet]
+
+
+@dataclasses.dataclass
+class IngestResult:
+    """What a live ingest run returns: the model, the eval history, the
+    realized stream, participation/guard/launch accounting, the
+    recorded session (for offline replay) and the latency profile."""
+    params: Any
+    history: FLHistory
+    events: List[UploadEvent]
+    betas: List[float]
+    stats: Dict[str, Any]
+    session: IngestSession
+    latency: Dict[str, float]
+    state: Optional[Dict[str, Any]] = None
+
+
+def latency_summary(arrival_t: Sequence[float], done_t: Sequence[float]
+                    ) -> Dict[str, float]:
+    """p50/p99 event latency (admission → batch completion) and overall
+    event throughput over the processed stream."""
+    a = np.asarray(arrival_t, np.float64)
+    d = np.asarray(done_t, np.float64)
+    if len(a) == 0:
+        return {"p50": 0.0, "p99": 0.0, "events_per_s": 0.0}
+    lat = d - a
+    span = float(d.max() - a.min())
+    return {
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+        "events_per_s": (len(a) / span) if span > 0 else float("inf"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The live server
+# ---------------------------------------------------------------------------
+class IngestServer:
+    """Streaming AFL server: admit uploads one by one, aggregate them in
+    micro-batches.
+
+    ``submit`` is pure host bookkeeping (scalar coefficient math — the
+    same float ops in the same order as ``_run_afl_impl``), so admission
+    keeps up with high arrival rates regardless of device occupancy;
+    ``process`` drains the pending window as ONE mini
+    :class:`~repro.core.event_trace.EventTrace` executed by the shared
+    :class:`~repro.core.event_trace.CompiledLoopRunner` (or the folded
+    row-gather MAC for blend-only batches).  Device state — fleet
+    buffer, global model, optimizer and guard carries — persists across
+    micro-batches, so batch boundaries are value-invisible: the
+    concatenation of all micro-batches is the recorded trace, and
+    replaying that trace offline reproduces the live model.
+
+    Fault plane: the flaky-uplink process (``loss_prob`` /
+    ``max_retries``) applies live via :func:`faults.uplink_drop_verdict`
+    — deterministic per (fault seed, cid, upload #), matching the async
+    runtime.  Availability windows are a property of the *simulated*
+    timeline and belong to the load generator, not the server.
+    """
+
+    def __init__(self, params0, fleet: Sequence[ClientSpec], *,
+                 client_plane, algorithm: str = "csmaafl",
+                 gamma: float = 0.4, mu_momentum: float = 0.9,
+                 max_staleness: Optional[int] = None,
+                 tau_u: float = 0.1, tau_d: float = 0.1,
+                 server_opt: Optional[str] = None, server_lr: float = 1.0,
+                 guards=None, faults=None, ingest=None,
+                 eval_fn=None, eval_every: int = 10, seed: int = 0):
+        from repro.api import IngestConfig, resolve_ingest
+        from repro.core.event_trace import CompiledLoopRunner
+
+        if client_plane is None:
+            raise ValueError("the ingest plane needs a client plane — "
+                             "uploads live in the (M, n) fleet buffer")
+        if algorithm not in ("csmaafl", "afl_alpha", "afl_baseline"):
+            raise ValueError(f"unknown AFL algorithm '{algorithm}'")
+        self.plane = client_plane
+        self.engine = client_plane.engine
+        self.fleet = list(fleet)
+        self.M = len(self.fleet)
+        self.algorithm = algorithm
+        self.gamma = gamma
+        self.max_staleness = max_staleness
+        self.tau_u, self.tau_d = tau_u, tau_d
+        self.eval_fn, self.eval_every = eval_fn, eval_every
+        self.seed = int(seed)
+        self.server_opt, self.server_lr = server_opt, float(server_lr)
+        self._guard_spec, self._fault_spec = guards, faults
+        self.gcfg = grd.resolve_guards(guards)
+        self.fm = flt.resolve_faults(faults)
+        self._fault_seed = int(self.fm.seed) \
+            if self.fm is not None and self.fm.seed is not None \
+            else self.seed
+        self.icfg = resolve_ingest(ingest) or IngestConfig()
+        self.queue_cap = self.icfg.queue_cap \
+            if self.icfg.queue_cap is not None \
+            else client_plane.backpressure_cap(self.icfg.max_batch)
+
+        # §III coefficients (host scalars, as in the windowed loop)
+        self.alpha = agg.sfl_alpha([c.num_samples for c in self.fleet])
+        self.cycle_betas = None
+        if algorithm == "afl_baseline":
+            sched = BaselineAFLScheduler(self.fleet, tau_u=tau_u,
+                                         tau_d=tau_d)
+            self.cycle_betas = agg.solve_betas(self.alpha,
+                                               sched.cycle_order())
+        self.tracker = agg.StalenessTracker(momentum=mu_momentum)
+        self.mu_momentum = mu_momentum
+
+        # device state: same init sequence as the compiled loop
+        self.runner = CompiledLoopRunner(
+            client_plane, server_opt=server_opt, server_lr=server_lr,
+            guards=self.gcfg,
+            min_run=max(16, self.icfg.max_batch))
+        self.g_flat = self.engine.flatten(params0)
+        self.opt_state = ()
+        if server_opt is not None:
+            from repro.optim import optimizers as _opt
+            s_init, _ = _opt.get_optimizer(server_opt)
+            self.opt_state = s_init(self.g_flat)
+        self.gstate = self.runner.init_guard_state()
+        self.fleet_buf = client_plane.init_fleet(self.g_flat,
+                                                 self.seed * 100003)
+        self.runner.count_launch()
+        self.hist = FLHistory()
+        if eval_fn is not None:
+            self.hist.add(0.0, 0, eval_fn(params0))
+
+        # per-event stream bookkeeping
+        self.j = 0
+        self.model_iter = [0] * self.M     # i per client (slot it holds)
+        self.upload_k = [0] * self.M       # upload # per client (faults)
+        self.events: List[UploadEvent] = []
+        self.betas: List[float] = []
+        self.stale_flags: List[bool] = []
+        self.arrival_t: List[float] = []
+        self.done_t: List[float] = []
+        self.batch_sizes: List[int] = []
+        self.shed = 0
+        # pending window: [lo, hi) slot indices not yet processed
+        self._lo = 0
+        self._pending_accepted = 0
+
+    # -- admission (host-only, O(1) per event) -------------------------------
+    def submit(self, cid: int, t: float) -> int:
+        """Admit one upload arrival; returns its ``OUTCOME_*`` code.
+        Every arrival consumes a global-iteration slot (the PR 6
+        convention: dropped events keep their slot with β=1 identity
+        coefficients), so the recorded stream IS the replayable trace."""
+        cid = int(cid)
+        j = self.j + 1
+        self.j = j
+        i = self.model_iter[cid]
+        staleness = j - i
+        k = self.upload_k[cid]
+        self.upload_k[cid] = k + 1
+        if self._pending_accepted >= self.queue_cap:
+            outcome = flt.OUTCOME_SHED       # backpressure: shed at the door
+            self.shed += 1
+        elif flt.uplink_drop_verdict(self.fm, cid, k, self._fault_seed):
+            outcome = flt.OUTCOME_LOSS
+        else:
+            outcome = flt.OUTCOME_OK
+        if outcome != flt.OUTCOME_OK:
+            # the server never saw it: no tracker update, no version
+            # advance — β=1 keeps the slot an identity step
+            beta, stale = 1.0, False
+        else:
+            if self.algorithm == "afl_alpha":
+                one_minus_beta = float(self.alpha[cid])
+            elif self.algorithm == "afl_baseline":
+                one_minus_beta = 1.0 - float(
+                    self.cycle_betas[(j - 1) % self.M])
+            else:   # csmaafl, eq. (11)
+                mu = self.tracker.update(staleness)
+                one_minus_beta = agg.staleness_coefficient(
+                    j, i, mu, self.gamma)
+            stale = (self.max_staleness is not None
+                     and staleness > self.max_staleness)
+            if stale:
+                one_minus_beta = 0.0
+            beta = 1.0 - one_minus_beta
+            if self.algorithm != "afl_baseline":
+                self.model_iter[cid] = j     # eq. (4): uploader gets w_j
+            self._pending_accepted += 1
+        if self.algorithm == "afl_baseline" and j % self.M == 0:
+            # §III-B every-M broadcast: the whole fleet syncs to w_j
+            self.model_iter = [j] * self.M
+        self.events.append(UploadEvent(
+            j=j, cid=cid, i=i, t_request=float(t), t_complete=float(t),
+            staleness=staleness,
+            local_steps=int(self.fleet[cid].local_steps),
+            attempts=1, outcome=outcome))
+        self.betas.append(beta)
+        self.stale_flags.append(stale)
+        self.arrival_t.append(float(t))
+        self.done_t.append(float("nan"))
+        return outcome
+
+    # -- micro-batch scheduling ----------------------------------------------
+    @property
+    def pending(self) -> int:
+        return len(self.events) - self._lo
+
+    def due(self, now: float) -> bool:
+        """True when the latency budget closes the current micro-batch:
+        ``max_batch`` accepted uploads pending, or ``max_wait_ms``
+        elapsed since the oldest pending arrival."""
+        if self.pending == 0:
+            return False
+        if self._pending_accepted >= self.icfg.max_batch:
+            return True
+        return (now - self.arrival_t[self._lo]) \
+            >= self.icfg.max_wait_ms / 1000.0
+
+    def next_deadline(self) -> Optional[float]:
+        if self.pending == 0:
+            return None
+        return self.arrival_t[self._lo] + self.icfg.max_wait_ms / 1000.0
+
+    # -- micro-batch execution -----------------------------------------------
+    def _mini_trace(self, a: int, b: int):
+        """The pending slots ``[a, b)`` as a dense EventTrace slice —
+        absolute js/seeds, so boundary actions (broadcasts, evals) and
+        retrain seeds are position-independent."""
+        from repro.core.event_trace import EventTrace
+        evs = self.events[a:b]
+        js = np.asarray([ev.j for ev in evs], np.int64)
+        bcast = (js % self.M == 0) if self.algorithm == "afl_baseline" \
+            else np.zeros(len(evs), bool)
+        return EventTrace(
+            events=evs,
+            cids=np.asarray([ev.cid for ev in evs], np.int32),
+            js=js.astype(np.int32),
+            staleness=np.asarray([ev.staleness for ev in evs], np.int32),
+            betas=np.asarray(self.betas[a:b], np.float64),
+            local_steps=np.asarray([ev.local_steps for ev in evs],
+                                   np.int32),
+            seeds=self.seed * 100003 + js,
+            t_complete=np.asarray([ev.t_complete for ev in evs],
+                                  np.float64),
+            broadcast=bcast,
+            algorithm=self.algorithm, M=self.M, base_seed=self.seed,
+            dropped=np.asarray([ev.outcome != flt.OUTCOME_OK
+                                for ev in evs], bool),
+            stale_drop=np.asarray(self.stale_flags[a:b], bool),
+            attempts=np.asarray([ev.attempts for ev in evs], np.int32),
+            outcomes=np.asarray([ev.outcome for ev in evs], np.int8))
+
+    def _blend_fast(self, mini) -> bool:
+        """Blend-only fast path: fold the micro-batch's eq. (3) chain
+        into one row-gather MAC (``AggEngine.blend_rows_fleet``) per
+        boundary chunk.  Value-equivalent to the runner's folded trunk
+        (same ``fold_sequential_blends`` coefficients; dropped slots
+        carry zero mass) without touching all M rows."""
+        if mini.per_event_retrain or self.runner._s_update is not None \
+                or self.gcfg is not None:
+            return False
+        if np.dtype(self.runner.base_engine.storage_dtype) \
+                != np.dtype(np.float32):
+            return False
+        cuts = {len(mini)}
+        for idx in range(len(mini)):
+            if mini.broadcast[idx]:
+                cuts.add(idx + 1)
+            if self.eval_fn is not None \
+                    and mini.js[idx] % self.eval_every == 0:
+                cuts.add(idx + 1)
+        a = 0
+        for b in sorted(cuts):
+            if b <= a:
+                continue
+            self.g_flat = self.engine.blend_rows_fleet(
+                self.g_flat, self.fleet_buf,
+                [int(c) for c in mini.cids[a:b]],
+                [float(x) for x in mini.betas[a:b]])
+            self.runner.launches += 1
+            self.runner.segments += 1
+            idx = b - 1
+            if mini.broadcast[idx]:
+                self.fleet_buf = self.plane.train_all(
+                    self.g_flat, int(mini.seeds[idx]))
+                self.runner.count_launch()
+            if self.eval_fn is not None \
+                    and mini.js[idx] % self.eval_every == 0:
+                self.hist.add(float(mini.t_complete[idx]),
+                              int(mini.js[idx]),
+                              self.eval_fn(self.engine.unflatten(
+                                  self.g_flat)))
+            a = b
+        return True
+
+    def process(self, now: float, *, t_done: Optional[float] = None) -> int:
+        """Close and execute one micro-batch: the oldest pending slots
+        up to ``max_batch`` accepted uploads (shed/lost slots ride along
+        as masked no-ops).  Returns the number of slots consumed."""
+        import jax
+
+        if self.pending == 0:
+            return 0
+        a = self._lo
+        hi = len(self.events)
+        accepted = 0
+        b = a
+        while b < hi:
+            if self.events[b].outcome == flt.OUTCOME_OK:
+                if accepted == self.icfg.max_batch:
+                    break
+                accepted += 1
+            b += 1
+        if b == a:      # window starts with a no-op burst only
+            b = min(a + max(1, self.icfg.max_batch), hi)
+        mini = self._mini_trace(a, b)
+        if not self._blend_fast(mini):
+            (self.fleet_buf, self.g_flat, self.opt_state,
+             self.gstate) = self.runner.run(
+                mini, self.fleet_buf, self.g_flat, self.opt_state,
+                self.gstate, eval_fn=self.eval_fn,
+                eval_every=self.eval_every, hist=self.hist)
+        jax.block_until_ready(self.g_flat)
+        stamp = float(now if t_done is None else t_done)
+        n_acc = 0
+        for idx in range(a, b):
+            self.done_t[idx] = stamp
+            n_acc += int(self.events[idx].outcome == flt.OUTCOME_OK)
+        self.batch_sizes.append(n_acc)
+        self._lo = b
+        self._pending_accepted -= n_acc
+        return b - a
+
+    def drain(self, now: float, *, t_done: Optional[float] = None) -> int:
+        """Flush every pending slot (stream end)."""
+        n = 0
+        while self.pending:
+            n += self.process(now, t_done=t_done)
+        return n
+
+    # -- results -------------------------------------------------------------
+    def session(self) -> IngestSession:
+        return IngestSession(
+            algorithm=self.algorithm, seed=self.seed, gamma=self.gamma,
+            mu_momentum=self.mu_momentum,
+            max_staleness=self.max_staleness,
+            eval_every=self.eval_every, tau_u=self.tau_u,
+            tau_d=self.tau_d, server_opt=self.server_opt,
+            server_lr=self.server_lr, guards=self._guard_spec,
+            faults=self._fault_spec,
+            ingest=dataclasses.asdict(self.icfg),
+            fleet=[dataclasses.asdict(c) for c in self.fleet],
+            events=list(self.events), betas=list(self.betas),
+            arrival_t=list(self.arrival_t), done_t=list(self.done_t),
+            batch_sizes=list(self.batch_sizes))
+
+    def result(self) -> IngestResult:
+        if self.pending:
+            raise RuntimeError(f"{self.pending} slots still pending — "
+                               "call drain() before result()")
+        evs = self.events
+        dropped = [ev.outcome != flt.OUTCOME_OK for ev in evs]
+        stats = flt.participation_stats(
+            [ev.cid for ev in evs], self.betas, dropped, self.stale_flags,
+            self.M, attempts=[ev.attempts for ev in evs],
+            outcomes=[ev.outcome for ev in evs],
+            staleness=[ev.staleness for ev in evs],
+            guards=(grd.state_counts(self.gstate)
+                    if self.gcfg is not None else None))
+        stats = {"faults": stats,
+                 "launches": self.runner.launches,
+                 "segments": self.runner.segments,
+                 "variants": self.runner.variants(),
+                 "batches": len(self.batch_sizes),
+                 "shed": self.shed,
+                 "mean_batch": (float(np.mean(self.batch_sizes))
+                                if self.batch_sizes else 0.0)}
+        lat = latency_summary(
+            [t for t, d in zip(self.arrival_t, self.done_t)
+             if np.isfinite(d)],
+            [d for d in self.done_t if np.isfinite(d)])
+        state = {"fleet_buf": self.fleet_buf, "g_flat": self.g_flat,
+                 "opt_state": self.opt_state, "guard_state": self.gstate,
+                 "cursor": len(evs)}
+        return IngestResult(
+            params=self.engine.unflatten(self.g_flat), history=self.hist,
+            events=list(evs), betas=list(self.betas), stats=stats,
+            session=self.session(), latency=lat, state=state)
+
+
+# ---------------------------------------------------------------------------
+# Drivers: virtual clock (deterministic) and open-loop wall clock
+# ---------------------------------------------------------------------------
+def serve_arrivals(server: IngestServer,
+                   arrivals: Sequence[Tuple[float, int]]) -> None:
+    """Drive the server over a precomputed ``(t, cid)`` schedule on the
+    VIRTUAL clock: batching decisions replay deterministically from the
+    arrival stamps (unit tests, record/replay fixtures)."""
+    for t, cid in arrivals:
+        # close any micro-batch whose wait budget expired before t
+        while server.pending:
+            dl = server.next_deadline()
+            if dl is not None and dl <= t:
+                server.process(dl, t_done=dl)
+            else:
+                break
+        server.submit(cid, t)
+        while server.due(t):
+            server.process(t, t_done=t)
+    if arrivals:
+        server.drain(arrivals[-1][0], t_done=arrivals[-1][0])
+
+
+def serve_open_loop(server: IngestServer,
+                    arrivals: Sequence[Tuple[float, int]], *,
+                    sleep=time.sleep) -> None:
+    """Open-loop wall-clock driver: arrival TIMES are fixed (the load
+    does not slow down when the server falls behind — queueing delay is
+    the measurement), admission stamps the scheduled arrival instant,
+    completion stamps the wall clock after the micro-batch's device
+    work is done.  p50/p99 of (done − arrival) is the honest service
+    latency under the offered load."""
+    t0 = time.perf_counter()
+    clock = lambda: time.perf_counter() - t0   # noqa: E731
+    i = 0
+    n = len(arrivals)
+    while i < n or server.pending:
+        now = clock()
+        while i < n and arrivals[i][0] <= now:
+            server.submit(arrivals[i][1], arrivals[i][0])
+            i += 1
+        now = clock()
+        if server.due(now):
+            server.process(now)
+            continue
+        targets = []
+        if i < n:
+            targets.append(arrivals[i][0])
+        dl = server.next_deadline()
+        if dl is not None:
+            targets.append(dl)
+        if targets:
+            dt = min(targets) - clock()
+            if dt > 0:
+                sleep(min(dt, 0.01))
+        elif server.pending:
+            server.drain(clock())
+
+
+def poisson_arrivals(rate_hz: float, n_events: int, *, M: int,
+                     seed: int = 0, start: float = 0.0
+                     ) -> List[Tuple[float, int]]:
+    """Open-loop Poisson load: exponential inter-arrivals at
+    ``rate_hz``, uploader drawn uniformly from the fleet.  Seeded —
+    the bench and the nightly smoke replay the same offered load."""
+    rng = np.random.default_rng([int(seed), 0x1A57])
+    gaps = rng.exponential(1.0 / float(rate_hz), n_events)
+    ts = start + np.cumsum(gaps)
+    cids = rng.integers(0, M, n_events)
+    return [(float(t), int(c)) for t, c in zip(ts, cids)]
+
+
+def scheduler_arrivals(fleet: Sequence[ClientSpec], iterations: int, *,
+                       algorithm: str = "csmaafl", tau_u: float = 0.1,
+                       tau_d: float = 0.1) -> List[Tuple[float, int]]:
+    """The simulator's own §II-C timing model as an arrival stream:
+    each client's compute+transfer cadence, serialized on the shared
+    channel — the ingest plane consumes the same law the event-driven
+    scheduler generates, so live runs and simulator runs see the same
+    client mix."""
+    cls = BaselineAFLScheduler if algorithm == "afl_baseline" \
+        else AFLScheduler
+    sched = cls(fleet, tau_u=tau_u, tau_d=tau_d)
+    return [(float(ev.t_complete), int(ev.cid))
+            for ev in sched.trace(iterations)]
+
+
+# ---------------------------------------------------------------------------
+# Offline replay: recorded session -> one compiled run
+# ---------------------------------------------------------------------------
+def replay_session(session: IngestSession, *, fleet=None,
+                   client_plane=None, task=None, params0=None,
+                   eval_fn=None):
+    """Replay a recorded ingest session bit-faithfully offline: the
+    realized arrival log compiles to ONE contiguous
+    :class:`EventTrace` (``compile_afl_trace(events=..., realized=True)``
+    — outcomes/attempts/staleness read back, never re-rolled), executed
+    by a fresh :class:`CompiledLoopRunner` from the same seeded init.
+    The live β record must match the metadata β replay exactly (they
+    share the scalar-vs-vectorized tracker equivalence the compiled
+    loop is built on) — a mismatch means the session file is corrupt.
+
+    Returns an :class:`~repro.core.afl.AFLResult`; its params match the
+    live run's ≤1e-5 (the bench_ingest parity gate)."""
+    from repro.core.afl import AFLResult
+    from repro.core.event_trace import CompiledLoopRunner, compile_afl_trace
+
+    if fleet is None:
+        fleet = session.make_fleet()
+    if client_plane is None:
+        if task is None:
+            raise ValueError("replay needs a client_plane (or a task to "
+                             "build one from)")
+        client_plane = task.client_plane(fleet)
+    if params0 is None:
+        if task is None:
+            raise ValueError("replay needs params0 (or a task)")
+        params0 = task.init_params(session.seed)
+    trace = compile_afl_trace(
+        fleet, algorithm=session.algorithm, iterations=len(session.events),
+        tau_u=session.tau_u, tau_d=session.tau_d, gamma=session.gamma,
+        mu_momentum=session.mu_momentum,
+        max_staleness=session.max_staleness, seed=session.seed,
+        events=session.events, realized=True)
+    live = np.asarray(session.betas, np.float64)
+    if not np.allclose(trace.betas, live, rtol=0, atol=1e-9):
+        bad = int(np.argmax(np.abs(trace.betas - live)))
+        raise ValueError(
+            f"recorded β diverges from the metadata replay at event "
+            f"{bad}: {live[bad]} vs {trace.betas[bad]} — corrupt session?")
+    trace.betas = live      # the exact coefficients the live server used
+    engine = client_plane.engine
+    runner = CompiledLoopRunner(
+        client_plane, server_opt=session.server_opt,
+        server_lr=session.server_lr, guards=session.guards)
+    g_flat = engine.flatten(params0)
+    opt_state = ()
+    if session.server_opt is not None:
+        from repro.optim import optimizers as _opt
+        s_init, _ = _opt.get_optimizer(session.server_opt)
+        opt_state = s_init(g_flat)
+    gstate = runner.init_guard_state()
+    fleet_buf = client_plane.init_fleet(g_flat, session.seed * 100003)
+    runner.count_launch()
+    hist = FLHistory()
+    if eval_fn is not None:
+        hist.add(0.0, 0, eval_fn(params0))
+    fleet_buf, g_flat, opt_state, gstate = runner.run(
+        trace, fleet_buf, g_flat, opt_state, gstate, eval_fn=eval_fn,
+        eval_every=session.eval_every, hist=hist)
+    stats = flt.trace_stats(trace, guards=(
+        grd.state_counts(gstate) if runner.guards is not None else None))
+    stats = {"faults": stats, "launches": runner.launches,
+             "segments": runner.segments, "variants": runner.variants()}
+    return AFLResult(
+        params=engine.unflatten(g_flat), history=hist,
+        events=list(trace.events), betas=[float(b) for b in trace.betas],
+        state={"fleet_buf": fleet_buf, "g_flat": g_flat,
+               "opt_state": opt_state, "cursor": len(trace)},
+        stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# RunConfig entry (repro.api.run(..., loop="ingest"))
+# ---------------------------------------------------------------------------
+def run_ingest(task, config, *, fleet=None, client_plane=None,
+               params0=None, eval_fn=None, arrivals=None,
+               realtime: bool = False) -> IngestResult:
+    """The ``loop="ingest"`` body behind :func:`repro.api.run`: build
+    the server from the config, drive it over ``arrivals`` (default:
+    the simulator's own timing law via :func:`scheduler_arrivals`) on
+    the virtual clock — or the wall clock scaled by
+    ``config.time_scale`` when ``realtime=True`` — and return the
+    drained :class:`IngestResult`."""
+    from repro.api import RunConfig
+    cfg = config if isinstance(config, RunConfig) \
+        else RunConfig.from_dict(config)
+    if fleet is None or client_plane is None or params0 is None:
+        raise ValueError("run_ingest wants prebuilt fleet / client_plane "
+                         "/ params0 — call repro.api.run(task, config)")
+    server = IngestServer(
+        params0, fleet, client_plane=client_plane,
+        algorithm=cfg.algorithm, gamma=cfg.gamma,
+        mu_momentum=cfg.mu_momentum, max_staleness=cfg.max_staleness,
+        tau_u=cfg.timing.tau_u, tau_d=cfg.timing.tau_d,
+        server_opt=cfg.server_opt.name, server_lr=cfg.server_opt.lr,
+        guards=cfg.guards, faults=cfg.faults, ingest=cfg.ingest,
+        eval_fn=eval_fn, eval_every=cfg.eval_every, seed=cfg.seed)
+    if arrivals is None:
+        arrivals = scheduler_arrivals(
+            fleet, cfg.iterations, algorithm=cfg.algorithm,
+            tau_u=cfg.timing.tau_u, tau_d=cfg.timing.tau_d)
+    if realtime:
+        scale = float(cfg.time_scale)
+        serve_open_loop(server,
+                        [(t * scale, c) for t, c in arrivals])
+    else:
+        serve_arrivals(server, arrivals)
+    return server.result()

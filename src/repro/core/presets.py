@@ -1,0 +1,137 @@
+"""One resolution path for preset-style config specs.
+
+Three planes grew the same normalization independently — fault models
+(``resolve_faults``), update guards (``resolve_guards``), and sweep
+scenarios (``resolve_scenario``) — each accepting a string preset, a
+kwargs dict (optionally naming a registered base to override), or an
+already-built instance.  ``resolve_preset`` is that pattern written
+once; the public wrappers keep their historical names, exception
+classes, and message substrings (tests and CLI docs pin them) and pass
+the varying policy in as arguments.
+
+Accepted spec shapes, in resolution order:
+
+* ``None`` — feature off (returns ``None``).
+* a ``cls`` instance — passed through untouched (identity), then
+  ``post``-filtered.
+* ``True`` / ``False`` (only when ``accept_bool``) — defaults / off.
+* a string starting with ``{`` — parsed as a JSON dict (the CLI form)
+  and resolved as a dict spec.
+* a string — an ``off_aliases`` member resolves to ``None``; otherwise
+  a registry key whose value may be ``None`` (feature off), a kwargs
+  dict, or a ``cls`` instance.
+* a dict — optional ``base_key`` entry names a registered base to
+  override; remaining keys are constructor overrides, validated against
+  the dataclass fields with a did-you-mean suggestion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import json
+from typing import Any, Callable, Mapping, Optional, Type
+
+__all__ = ["resolve_preset"]
+
+
+def _suggest(name: Any, options) -> str:
+    close = difflib.get_close_matches(str(name),
+                                      [str(o) for o in options], n=1)
+    return f" (did you mean '{close[0]}'?)" if close else ""
+
+
+def _check_fields(cls: type, kind: str, keys) -> None:
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(keys) - fields)
+    if unknown:
+        raise ValueError(
+            f"unknown {kind} field(s) {unknown}{_suggest(unknown[0], fields)}"
+            f" — valid: {sorted(fields)}")
+
+
+def _from_registry(value: Any, cls: type, kind: str) -> Optional[Any]:
+    """A registry value is None (feature off), a kwargs dict, or an
+    already-built instance."""
+    if value is None or isinstance(value, cls):
+        return value
+    _check_fields(cls, kind, value)
+    return cls(**value)
+
+
+def resolve_preset(registry: Mapping[str, Any], spec: Any, *, cls: Type,
+                   kind: str,
+                   accept_bool: bool = False,
+                   off_aliases=(),
+                   base_key: str = "preset",
+                   keep_base_key: bool = False,
+                   inline_ok: bool = False,
+                   missing_exc: Type[Exception] = ValueError,
+                   empty_is_none: bool = False,
+                   post: Optional[Callable[[Any], Any]] = None,
+                   bad_type_msg: Optional[str] = None) -> Optional[Any]:
+    """Resolve ``spec`` to a ``cls`` instance or ``None`` (feature off).
+
+    ``kind`` names the plane in error messages ("fault", "guard",
+    "Scenario", "ingest").  ``missing_exc`` is the unknown-preset
+    exception class (``resolve_faults`` historically raises KeyError).
+    ``keep_base_key`` leaves the ``base_key`` entry in the override
+    kwargs (Scenario keeps ``name`` as a real field); ``inline_ok``
+    lets an unregistered base name fall back to a fully inline
+    construction instead of erroring.  ``empty_is_none`` maps an empty
+    merged kwargs dict to ``None`` (``resolve_faults({})`` is off).
+    ``post`` filters every non-None result (e.g. inactive configs
+    collapse to ``None``).
+    """
+    def done(cfg):
+        return post(cfg) if post is not None and cfg is not None else cfg
+
+    def recurse(sub):
+        return resolve_preset(
+            registry, sub, cls=cls, kind=kind, accept_bool=accept_bool,
+            off_aliases=off_aliases, base_key=base_key,
+            keep_base_key=keep_base_key, inline_ok=inline_ok,
+            missing_exc=missing_exc, empty_is_none=empty_is_none,
+            post=post, bad_type_msg=bad_type_msg)
+
+    if spec is None:
+        return None
+    if isinstance(spec, cls):
+        return done(spec)
+    if accept_bool and isinstance(spec, bool):
+        return done(cls()) if spec else None
+    if isinstance(spec, str):
+        if spec.lstrip().startswith("{"):
+            return recurse(json.loads(spec))
+        name = spec.strip().lower()
+        if name in off_aliases:
+            return None
+        if name not in registry:
+            raise missing_exc(
+                f"unknown {kind} preset '{spec}'{_suggest(name, registry)}"
+                f" — available: {sorted(registry)}") from None
+        return done(_from_registry(registry[name], cls, kind))
+    if isinstance(spec, Mapping):
+        kw = dict(spec)
+        base_name = kw.get(base_key) if keep_base_key else \
+            kw.pop(base_key, None)
+        base = None
+        if base_name is not None:
+            if base_name in registry:
+                base = registry[base_name]
+            elif not inline_ok:
+                raise missing_exc(
+                    f"unknown {kind} preset '{base_name}'"
+                    f"{_suggest(base_name, registry)} — available: "
+                    f"{sorted(registry)}") from None
+        if isinstance(base, cls):
+            _check_fields(cls, kind, kw)
+            return done(dataclasses.replace(base, **kw))
+        merged = dict(base or {})
+        merged.update(kw)
+        if empty_is_none and not merged:
+            return None
+        _check_fields(cls, kind, merged)
+        return done(cls(**merged))
+    raise TypeError(
+        bad_type_msg or f"{kind} spec must be None, a {cls.__name__}, a "
+        f"preset name or a kwargs dict, got {type(spec).__name__}")

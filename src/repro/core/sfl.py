@@ -44,6 +44,27 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
                use_engine: bool = True,
                client_plane=None, use_client_plane: bool = True,
                seed: int = 0):
+    """Legacy keyword entry point — thin shim over ``repro.api``
+    (kwargs fold into a :class:`repro.api.RunConfig` and expand back,
+    bit-identically, into :func:`_run_fedavg_impl`)."""
+    from repro.api import RunConfig
+    cfg = RunConfig.from_fedavg_kwargs(
+        rounds=rounds, tau_u=tau_u, tau_d=tau_d, eval_every=eval_every,
+        local_steps_override=local_steps_override, use_engine=use_engine,
+        use_client_plane=use_client_plane, seed=seed)
+    return _run_fedavg_impl(params0, fleet, local_train_fn,
+                            eval_fn=eval_fn, client_plane=client_plane,
+                            **cfg.fedavg_kwargs())
+
+
+def _run_fedavg_impl(params0, fleet: Sequence[ClientSpec],
+                     local_train_fn: Optional[LocalTrainFn], *,
+                     rounds: int, tau_u: float, tau_d: float,
+                     eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
+                     local_steps_override: Optional[int] = None,
+                     use_engine: bool = True,
+                     client_plane=None, use_client_plane: bool = True,
+                     seed: int = 0):
     """Classical FedAvg (paper eq. 1-2). Returns (params, FLHistory).
 
     ``local_steps_override`` forces the same K on all clients (the paper's

@@ -144,21 +144,16 @@ def resolve_scenario(entry) -> Scenario:
     """A grid entry is a registered name, or a dict overriding a
     registered base (``{"name": "paper_iid", "gamma": 0.6}``), or a
     fully inline dict defining a new scenario."""
-    if isinstance(entry, Scenario):
-        return entry
+    from repro.core.presets import resolve_preset
     if isinstance(entry, str):
         return get_scenario(entry)
-    if not isinstance(entry, dict) or "name" not in entry:
+    if not isinstance(entry, (Scenario, dict)) or \
+            (isinstance(entry, dict) and "name" not in entry):
         raise ValueError(f"scenario entry must be a name or a dict with "
                          f"'name', got {entry!r}")
-    base = SCENARIOS.get(entry["name"])
-    fields = {f.name for f in dataclasses.fields(Scenario)}
-    unknown = set(entry) - fields
-    if unknown:
-        raise ValueError(f"unknown Scenario field(s) {sorted(unknown)}")
-    if base is None:
-        return Scenario(**entry)
-    return dataclasses.replace(base, **entry)
+    return resolve_preset(SCENARIOS, entry, cls=Scenario, kind="Scenario",
+                          base_key="name", keep_base_key=True,
+                          inline_ok=True)
 
 
 # the paper-grid builtins: IID vs the two non-IID partitions, the

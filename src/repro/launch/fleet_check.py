@@ -31,8 +31,11 @@ CPU mesh (the flag must be first-parsed, hence the header above):
 Checks (all gated at 1e-5):
   * global-row -> (shard, local-row) addressing: the sharded engine's
     row blends equal the base engine's against the gathered buffer;
-  * run_afl / run_fedavg parity, sharded vs single-device plane, on the
-    paper CNN at f32 and a flat toy fleet at bf16;
+  * AFL / fedavg parity, sharded vs single-device plane, on the paper
+    CNN at f32 (driven through the ``repro.api.run`` facade — the CNN
+    checks double as facade-vs-plane integration coverage) and a flat
+    toy fleet at bf16 (via the legacy ``run_afl`` shim, kept exercised
+    on purpose);
   * an M not divisible by the device count (padded rows masked out);
   * the compiled event-trace loop (DESIGN.md §7) on the sharded plane
     matches the single-device windowed loop, in O(#buckets) launches;
@@ -125,11 +128,12 @@ def check_addressing(report: dict) -> None:
 
 
 def check_cnn_f32(report: dict, M: int, iterations: int) -> None:
-    """run_afl + run_fedavg on the paper CNN, sharded vs base plane."""
+    """AFL + fedavg on the paper CNN, sharded vs base plane, both driven
+    through the ``repro.api.run`` facade (one RunConfig per algorithm
+    instead of per-plane kwarg plumbing)."""
+    from repro import api
     from repro.configs.paper_cnn import CNNConfig
-    from repro.core.afl import run_afl
     from repro.core.scheduler import make_fleet
-    from repro.core.sfl import run_fedavg
     from repro.core.tasks import CNNTask
 
     task = CNNTask(iid=True, num_clients=M, train_n=32 * M, test_n=128,
@@ -141,15 +145,16 @@ def check_cnn_f32(report: dict, M: int, iterations: int) -> None:
     p0 = task.init_params()
     base = task.client_plane(fleet)
     sharded = task.client_plane(fleet, sharded=True)
-    kw = dict(algorithm="csmaafl", iterations=iterations,
-              tau_u=0.1, tau_d=0.1, gamma=0.4)
-    r_base = run_afl(p0, fleet, None, client_plane=base, **kw)
-    r_shard = run_afl(p0, fleet, None, client_plane=sharded, **kw)
+    cfg = api.RunConfig(algorithm="csmaafl", iterations=iterations)
+    r_base = api.run(task, cfg, fleet=fleet, client_plane=base, params0=p0)
+    r_shard = api.run(task, cfg, fleet=fleet, client_plane=sharded,
+                      params0=p0)
     report["afl_f32_parity"] = _maxdiff(r_shard.params, r_base.params)
-    w_base, _ = run_fedavg(p0, fleet, None, client_plane=base, rounds=2,
-                           tau_u=0.1, tau_d=0.1)
-    w_shard, _ = run_fedavg(p0, fleet, None, client_plane=sharded, rounds=2,
-                            tau_u=0.1, tau_d=0.1)
+    fcfg = api.RunConfig(algorithm="fedavg", iterations=2, eval_every=1)
+    w_base, _ = api.run(task, fcfg, fleet=fleet, client_plane=base,
+                        params0=p0)
+    w_shard, _ = api.run(task, fcfg, fleet=fleet, client_plane=sharded,
+                         params0=p0)
     report["fedavg_f32_parity"] = _maxdiff(w_shard, w_base)
 
 
@@ -196,8 +201,8 @@ def check_compiled(report: dict, M: int, iterations: int) -> None:
     donated ``lax.scan`` program, rows psum-gathered per event — must
     match the single-device plane's windowed Python loop ≤1e-5, and the
     run must execute as O(#buckets) launches, not O(#windows)."""
+    from repro import api
     from repro.configs.paper_cnn import CNNConfig
-    from repro.core.afl import run_afl
     from repro.core.scheduler import make_fleet
     from repro.core.tasks import CNNTask
 
@@ -210,11 +215,10 @@ def check_compiled(report: dict, M: int, iterations: int) -> None:
     p0 = task.init_params()
     base = task.client_plane(fleet)
     sharded = task.client_plane(fleet, sharded=True)
-    kw = dict(algorithm="csmaafl", iterations=iterations,
-              tau_u=0.1, tau_d=0.1, gamma=0.4)
-    r_ref = run_afl(p0, fleet, None, client_plane=base, **kw)
-    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
-                     compiled_loop=True, **kw)
+    cfg = api.RunConfig(algorithm="csmaafl", iterations=iterations)
+    r_ref = api.run(task, cfg, fleet=fleet, client_plane=base, params0=p0)
+    r_comp = api.run(task, cfg.replace(loop="compiled"), fleet=fleet,
+                     client_plane=sharded, params0=p0)
     report["compiled_sharded_parity"] = _maxdiff(r_comp.params,
                                                  r_ref.params)
     report["compiled_launches"] = r_comp.stats["launches"]
@@ -229,8 +233,8 @@ def check_faults(report: dict, M: int, iterations: int) -> None:
     realize the exact same fault pattern (drop counts, outcome mix,
     participation histogram) — the fault transform is host-side and
     seed-keyed, so sharding must not perturb it at all."""
+    from repro import api
     from repro.configs.paper_cnn import CNNConfig
-    from repro.core.afl import run_afl
     from repro.core.scheduler import make_fleet
     from repro.core.tasks import CNNTask
 
@@ -243,11 +247,11 @@ def check_faults(report: dict, M: int, iterations: int) -> None:
     p0 = task.init_params()
     base = task.client_plane(fleet)
     sharded = task.client_plane(fleet, sharded=True)
-    kw = dict(algorithm="csmaafl", iterations=iterations,
-              tau_u=0.1, tau_d=0.1, gamma=0.4, faults="diurnal20", seed=7)
-    r_ref = run_afl(p0, fleet, None, client_plane=base, **kw)
-    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
-                     compiled_loop=True, **kw)
+    cfg = api.RunConfig(algorithm="csmaafl", iterations=iterations,
+                        faults="diurnal20", seed=7)
+    r_ref = api.run(task, cfg, fleet=fleet, client_plane=base, params0=p0)
+    r_comp = api.run(task, cfg.replace(loop="compiled"), fleet=fleet,
+                     client_plane=sharded, params0=p0)
     report["faults_sharded_parity"] = _maxdiff(r_comp.params, r_ref.params)
     fs_ref, fs_comp = r_ref.stats["faults"], r_comp.stats["faults"]
     report["faults_drop_rate"] = fs_comp["drop_rate"]
@@ -270,8 +274,8 @@ def check_guards(report: dict, M: int, iterations: int) -> None:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import api
     from repro.configs.paper_cnn import CNNConfig
-    from repro.core.afl import run_afl
     from repro.core.scheduler import make_fleet
     from repro.core.tasks import CNNTask
 
@@ -284,9 +288,8 @@ def check_guards(report: dict, M: int, iterations: int) -> None:
     p0 = task.init_params()
     base = task.client_plane(fleet)
     sharded = task.client_plane(fleet, sharded=True)
-    kw = dict(algorithm="csmaafl", iterations=iterations,
-              tau_u=0.1, tau_d=0.1, gamma=0.4, seed=7,
-              guards={"norm_outlier": 5.0, "warmup": 2})
+    cfg = api.RunConfig(algorithm="csmaafl", iterations=iterations,
+                        seed=7, guards={"norm_outlier": 5.0, "warmup": 2})
 
     def poisoned(plane, windowed: bool):
         g = plane.engine.flatten(p0)
@@ -298,11 +301,11 @@ def check_guards(report: dict, M: int, iterations: int) -> None:
             st["windowed"] = True
         return st
 
-    r_ref = run_afl(p0, fleet, None, client_plane=base,
-                    resume_state=poisoned(base, True), **kw)
-    r_comp = run_afl(p0, fleet, None, client_plane=sharded,
-                     compiled_loop=True,
-                     resume_state=poisoned(sharded, False), **kw)
+    r_ref = api.run(task, cfg, fleet=fleet, client_plane=base, params0=p0,
+                    resume_state=poisoned(base, True))
+    r_comp = api.run(task, cfg.replace(loop="compiled"), fleet=fleet,
+                     client_plane=sharded, params0=p0,
+                     resume_state=poisoned(sharded, False))
     report["guards_sharded_parity"] = _maxdiff(r_comp.params, r_ref.params)
     gkeys = ("guard_rejects", "guard_nonfinite", "guard_norm_outliers",
              "guard_clipped")

@@ -1,0 +1,196 @@
+"""Serve the AFL server against a live upload stream (DESIGN.md §11).
+
+The streaming counterpart of `launch/train.py`: instead of simulating
+the timeline, an open-loop load generator offers Poisson-arriving
+client uploads at ``--rate`` events/s and the ingest plane
+(`core/ingest.py`) micro-batches them under the configured latency
+budget, with backpressure shedding and the PR 6/7 fault + guard
+transforms applied live.  Prints p50/p99 event latency, sustained
+events/s and the launch accounting.
+
+    PYTHONPATH=src python -m repro.launch.serve_afl \
+        --M 16 --events 256 --rate 200 --ingest throughput
+
+``--record sess.json`` writes the realized session (arrival log, β
+record, outcomes) — ``--replay sess.json`` re-executes it OFFLINE as
+one compiled event-trace run, and ``--parity`` does both back-to-back
+and fails on >1e-5 model drift (the serving-vs-simulator contract the
+bench_ingest gate enforces).
+
+``--virtual`` drives the same server on the simulated clock (the
+scheduler's §II-C timing law instead of wall-clock Poisson), which
+makes the whole session deterministic — the mode the tests and the
+recorded fixtures use.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import ingest as ing
+from repro.core.scheduler import make_fleet
+
+
+def _maxdiff(a, b):
+    import jax
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def build_task(args):
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.tasks import CNNTask
+    cnn = CNNConfig(conv1=args.conv1, conv2=args.conv2, fc=args.fc)
+    return CNNTask(iid=True, num_clients=args.M, train_n=args.train_n,
+                   test_n=args.test_n,
+                   local_batches_per_step=args.local_batches, cnn_cfg=cnn)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--M", type=int, default=16, help="fleet size")
+    ap.add_argument("--events", type=int, default=256,
+                    help="upload events to serve")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="offered Poisson load (events/s, wall clock)")
+    ap.add_argument("--ingest", default=None,
+                    help="latency budget: a preset (lowlat, default, "
+                         "throughput) or a JSON IngestConfig dict, e.g. "
+                         "'{\"max_batch\": 16, \"max_wait_ms\": 20}'")
+    ap.add_argument("--algorithm", default=None,
+                    choices=["csmaafl", "afl_alpha", "afl_baseline"])
+    ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--window-cap", dest="window_cap", type=int,
+                    default=None,
+                    help="plane window cap — doubles as the ingest "
+                         "queue_cap default (backpressure)")
+    ap.add_argument("--eval-every", dest="eval_every", type=int, default=0,
+                    help="eval cadence in global iterations (0 = off)")
+    ap.add_argument("--virtual", action="store_true",
+                    help="simulated clock (scheduler timing law) instead "
+                         "of wall-clock Poisson — deterministic sessions")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--record", default=None, metavar="sess.json",
+                    help="write the realized ingest session for offline "
+                         "replay")
+    ap.add_argument("--replay", default=None, metavar="sess.json",
+                    help="replay a recorded session offline (no live "
+                         "serving) and print its final metrics")
+    ap.add_argument("--parity", action="store_true",
+                    help="serve live, replay the recorded session "
+                         "offline, fail on >1e-5 model drift")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the latency/throughput summary here")
+    # task geometry (CPU-budget CNN by default)
+    ap.add_argument("--train-n", dest="train_n", type=int, default=512)
+    ap.add_argument("--test-n", dest="test_n", type=int, default=256)
+    ap.add_argument("--local-batches", dest="local_batches", type=int,
+                    default=2)
+    ap.add_argument("--conv1", type=int, default=2)
+    ap.add_argument("--conv2", type=int, default=4)
+    ap.add_argument("--fc", type=int, default=16)
+    api.add_config_flag(ap)
+    api.add_robustness_flags(ap)
+    args = ap.parse_args(argv)
+
+    if args.replay:
+        session = ing.IngestSession.load(args.replay)
+        sargs = argparse.Namespace(**vars(args))
+        sargs.M = len(session.fleet)
+        task = build_task(sargs)
+        t0 = time.time()
+        res = ing.replay_session(session, task=task,
+                                 eval_fn=task.eval_fn
+                                 if args.eval_every else None)
+        print(f"replayed {len(session.events)} events in "
+              f"{time.time()-t0:.1f}s: {res.stats['launches']} launches, "
+              f"{res.stats['segments']} segments")
+        for it, m in zip(res.history.iterations, res.history.metrics):
+            print(f"  iter {it:4d} " + " ".join(f"{k}={v:.4f}"
+                                                for k, v in m.items()))
+        return
+
+    cfg = api.config_from_args(args)
+    cfg = cfg.replace(loop="ingest", iterations=args.events,
+                      seed=args.seed)
+    if args.ingest is not None:
+        cfg = cfg.replace(ingest=args.ingest)
+    if args.eval_every:
+        cfg = cfg.replace(evaluate=True, eval_every=args.eval_every)
+    if args.window_cap is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(plane=_dc.replace(cfg.plane,
+                                            window_cap=args.window_cap))
+    if cfg.algorithm not in ("csmaafl", "afl_alpha", "afl_baseline"):
+        ap.error(f"algorithm '{cfg.algorithm}' has no event stream to "
+                 "ingest")
+
+    task = build_task(args)
+    fleet = make_fleet(args.M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       seed=cfg.fleet.seed)
+    plane = task.client_plane(fleet)
+    if cfg.plane.window_cap is not None:
+        plane.window_cap = cfg.plane.window_cap
+    params0 = task.init_params(cfg.seed)
+    eval_fn = task.eval_fn if cfg.evaluate else None
+
+    if args.virtual:
+        arrivals = None          # scheduler timing law, virtual clock
+        realtime = False
+    else:
+        arrivals = ing.poisson_arrivals(args.rate, args.events,
+                                        M=args.M, seed=args.seed)
+        realtime = True
+    icfg = api.resolve_ingest(cfg.ingest) or api.IngestConfig()
+    print(f"serving M={args.M} events={args.events} "
+          + ("clock=virtual" if args.virtual
+             else f"rate={args.rate}/s clock=wall")
+          + f" max_batch={icfg.max_batch} max_wait={icfg.max_wait_ms}ms "
+          f"algorithm={cfg.algorithm}")
+    t0 = time.time()
+    res = ing.run_ingest(task, cfg, fleet=fleet, client_plane=plane,
+                         params0=params0, eval_fn=eval_fn,
+                         arrivals=arrivals, realtime=realtime)
+    wall = time.time() - t0
+    lat = res.latency
+    print(f"served {len(res.events)} events in {wall:.1f}s: "
+          f"{res.stats['batches']} micro-batches "
+          f"(mean {res.stats['mean_batch']:.1f}), "
+          f"{res.stats['launches']} launches, {res.stats['shed']} shed")
+    print(f"latency p50={lat['p50']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms "
+          f"throughput={lat['events_per_s']:.1f} events/s")
+    fs = res.stats["faults"]
+    if fs.get("outcomes"):
+        print("outcomes:", fs["outcomes"])
+    for it, m in zip(res.history.iterations, res.history.metrics):
+        print(f"  iter {it:4d} " + " ".join(f"{k}={v:.4f}"
+                                            for k, v in m.items()))
+    if args.record:
+        res.session.save(args.record)
+        print("session recorded to", args.record)
+    if args.parity:
+        rep = ing.replay_session(res.session,
+                                 client_plane=task.client_plane(fleet),
+                                 params0=params0, eval_fn=eval_fn)
+        md = _maxdiff(res.params, rep.params)
+        print(f"live-vs-replay parity: max |Δ| = {md:.2e}")
+        if md > 1e-5:
+            raise SystemExit(f"ingest parity drift {md:.2e} > 1e-5")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"events": len(res.events), "wall_s": wall,
+                       "latency": lat, "stats": {
+                           k: v for k, v in res.stats.items()
+                           if k != "faults"},
+                       "outcomes": fs.get("outcomes")}, f, indent=1)
+        print("summary written to", args.json_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.configs.base import (FederatedConfig, MeshConfig, SINGLE_POD_MESH,
@@ -421,8 +422,9 @@ def main(argv=None) -> None:
                     help="CPU-scale variant of the arch")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
-    ap.add_argument("--algorithm", default="csmaafl",
-                    choices=["csmaafl", "fedavg"])
+    ap.add_argument("--algorithm", default=None,
+                    choices=["csmaafl", "fedavg"],
+                    help="default csmaafl (or whatever --config says)")
     ap.add_argument("--data-plane", default="spmd", dest="data_plane",
                     choices=["spmd", "fleet"],
                     help="spmd: fused GSPMD trunk step over the data/model "
@@ -434,41 +436,23 @@ def main(argv=None) -> None:
                     help="fleet plane: max AFL event-window length before "
                          "a forced retrain flush (bounds snapshot memory "
                          "on M>=1000 fleets)")
-    ap.add_argument("--loop", default="window",
+    ap.add_argument("--loop", default=None,
                     choices=["window", "compiled"],
                     help="fleet plane AFL loop: window = host-driven "
                          "event windows (one launch per window); "
                          "compiled = whole-run event-trace compiler "
                          "(O(#buckets) donated scan launches, DESIGN.md "
-                         "§7)")
+                         "§7); default window (or --config's loop)")
     ap.add_argument("--resume", nargs="?", const="auto", default=None,
                     help="resume a fleet-plane AFL run or a --sweep grid; "
                          "with a path, that exact .state checkpoint; with "
                          "no value, the newest VALID checkpoint in "
                          "--ckpt-dir (corrupt/torn saves skipped)")
-    ap.add_argument("--autosave", type=int, default=None, metavar="N",
-                    help="durably autosave run/sweep state to --ckpt-dir "
-                         "every N events (tmp+fsync+atomic-rename with a "
-                         "checksummed meta record; rotation via "
-                         "--keep-last) so a crash resumes mid-run")
-    ap.add_argument("--ckpt-dir", dest="ckpt_dir",
-                    default=os.path.join("experiments", "ckpt"),
-                    help="directory for --autosave checkpoints and "
-                         "valueless --resume lookups")
-    ap.add_argument("--keep-last", dest="keep_last", type=int, default=3,
-                    help="autosave rotation depth per checkpoint family")
     ap.add_argument("--max-restarts", dest="max_restarts", type=int,
                     default=0, metavar="K",
                     help="watchdog: on an unexpected crash, resume from "
                          "the newest valid autosave up to K times before "
                          "giving up")
-    ap.add_argument("--guards", default=None,
-                    help="in-scan update guards (core/guards.py): a "
-                         "preset (default, strict, nonfinite, clip), "
-                         "'off', or a JSON GuardConfig dict, e.g. "
-                         "'{\"norm_outlier\": 5.0, \"clip_norm\": 1.0}'; "
-                         "non-finite / outlier client rows become "
-                         "identity steps inside the jitted scan")
     ap.add_argument("--sweep", default=None,
                     help="run a seeds x scenarios convergence grid from "
                          "this JSON config through the batched sweep "
@@ -482,27 +466,39 @@ def main(argv=None) -> None:
                     default=0, metavar="N",
                     help="--sweep: re-run N grid cells as individual "
                          "compiled runs and fail on >1e-5 history drift")
-    ap.add_argument("--faults", default=None,
-                    help="fault-injection preset for the fleet-plane AFL "
-                         "run (core/faults.py: diurnal20, lossy, flaky, "
-                         "blackout) or an inline JSON dict of FaultModel "
-                         "overrides, e.g. '{\"preset\": \"lossy\", "
-                         "\"loss_prob\": 0.4}'; rewrites the scheduler "
-                         "timeline with availability windows, mid-flight "
-                         "dropouts and flaky-uplink retries before the "
-                         "loop runs")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--gamma", type=float, default=0.4)
+    ap.add_argument("--gamma", type=float, default=None,
+                    help="eq. (11) γ; default 0.4 (or --config's gamma)")
     ap.add_argument("--clients", type=int, default=4,
                     help="simulated clients (folded per fused step)")
     ap.add_argument("--batch", type=int, default=2, help="rows per client")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--save", default=None, help="checkpoint path")
+    api.add_config_flag(ap)
+    api.add_robustness_flags(ap)
     args = ap.parse_args(argv)
-    if args.guards and args.guards.strip().startswith("{"):
-        import json as _json
-        args.guards = _json.loads(args.guards)
+
+    # fold --config under the explicit flags (flags win; repro.api owns
+    # the fault/guard/autosave plumbing shared with serve_afl/fleet_check)
+    run_cfg = api.config_from_args(args)
+    if run_cfg.loop not in ("windowed", "compiled"):
+        ap.error(f"--config loop='{run_cfg.loop}' is not a trainer loop; "
+                 "use repro.launch.serve_afl for the ingest plane")
+    if run_cfg.algorithm not in ("csmaafl", "fedavg"):
+        ap.error(f"--config algorithm='{run_cfg.algorithm}' — the trainer "
+                 "drives csmaafl or fedavg")
+    args.loop = "compiled" if run_cfg.loop == "compiled" else "window"
+    args.algorithm = run_cfg.algorithm
+    args.gamma = run_cfg.gamma
+    args.faults = run_cfg.faults
+    args.guards = run_cfg.guards
+    args.autosave = run_cfg.autosave.every
+    args.ckpt_dir = run_cfg.autosave.dir or args.ckpt_dir \
+        or os.path.join("experiments", "ckpt")
+    args.keep_last = run_cfg.autosave.keep_last
+    if run_cfg.plane.window_cap is not None:
+        args.window_cap = run_cfg.plane.window_cap
 
     if args.sweep:
         run_sweep_grid(args)

@@ -1,0 +1,203 @@
+"""Tests for the unified run API (repro/api.py, DESIGN.md §11):
+
+* legacy keyword entry points (run_afl / run_fedavg) vs
+  ``repro.api.run(task, RunConfig(...))`` — BIT-identical params and β
+  records on all three AFL algorithms plus fedavg (the shims round-trip
+  kwargs through the config without changing a single float);
+* kwargs bridges are exact inverses (from_*_kwargs -> *_kwargs);
+* RunConfig JSON round-trip (nested dataclasses + fault/guard specs);
+* unknown fields / typos are rejected with did-you-mean suggestions,
+  at the top level and inside nested sections;
+* ``resolve_ingest`` preset handling and IngestConfig validation;
+* ``config_from_args`` precedence: config file first, explicit flags
+  override.
+"""
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (IngestConfig, PlaneConfig, RunConfig, TimingConfig,
+                      resolve_ingest)
+from repro.core.afl import run_afl
+from repro.core.scheduler import make_fleet
+from repro.core.sfl import run_fedavg
+
+
+def _quadratic_task(M, D, seed=0):
+    rng = np.random.default_rng(seed)
+    targets = jnp.asarray(rng.normal(size=(M, D)))
+
+    def local_train(params, cid, steps, _seed):
+        p = params
+        for _ in range(steps):
+            p = p - 0.2 * (p - targets[cid])
+        return p
+    w0 = jnp.asarray(rng.normal(size=D))
+    return w0, local_train
+
+
+class _ToyTask:
+    """Just enough task surface for api.run over the toy quadratic."""
+
+    def __init__(self, M, D, seed=0):
+        self.M = M
+        self.w0, self.local_train_fn = _quadratic_task(M, D, seed)
+
+    def num_samples(self):
+        return [60 + 20 * i for i in range(self.M)]
+
+    def init_params(self, seed=0):
+        return self.w0
+
+    def eval_fn(self, params):
+        return {"norm": float(jnp.linalg.norm(params))}
+
+
+def _fleet(M, seed=0):
+    return make_fleet(M, tau=1.0, hetero_a=4.0,
+                      samples_per_client=list(60 + 20 * np.arange(M)),
+                      adaptive=False, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwargs vs RunConfig: bit identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algorithm",
+                         ["csmaafl", "afl_alpha", "afl_baseline"])
+def test_run_afl_bit_identical_to_config_run(algorithm):
+    M, D = 5, 16
+    task = _ToyTask(M, D)
+    fleet = _fleet(M)
+    legacy = run_afl(task.w0, fleet, task.local_train_fn,
+                     algorithm=algorithm, iterations=30, tau_u=0.2,
+                     tau_d=0.1, gamma=0.5, max_staleness=6,
+                     use_client_plane=False, seed=3)
+    cfg = RunConfig(algorithm=algorithm, iterations=30, gamma=0.5,
+                    max_staleness=6, seed=3,
+                    timing=TimingConfig(tau_u=0.2, tau_d=0.1),
+                    plane=PlaneConfig(kind="none"))
+    via_api = api.run(task, cfg, fleet=fleet)
+    assert legacy.betas == via_api.betas
+    assert np.array_equal(np.asarray(legacy.params),
+                          np.asarray(via_api.params))
+
+
+def test_run_fedavg_bit_identical_to_config_run():
+    M, D = 4, 12
+    task = _ToyTask(M, D)
+    fleet = _fleet(M)
+    p_legacy, h_legacy = run_fedavg(task.w0, fleet, task.local_train_fn,
+                                    rounds=5, tau_u=0.2, tau_d=0.1,
+                                    use_client_plane=False, seed=2)
+    cfg = RunConfig(algorithm="fedavg", iterations=5, seed=2,
+                    timing=TimingConfig(tau_u=0.2, tau_d=0.1),
+                    plane=PlaneConfig(kind="none"))
+    p_api, h_api = api.run(task, cfg, fleet=fleet)
+    assert np.array_equal(np.asarray(p_legacy), np.asarray(p_api))
+    assert h_legacy.times == h_api.times
+
+
+def test_kwargs_bridges_are_exact_inverses():
+    kw = dict(algorithm="csmaafl", iterations=64, tau_u=0.2, tau_d=0.1,
+              gamma=0.7, mu_momentum=0.8, eval_every=4,
+              server_opt="adam", server_lr=0.5, max_staleness=9,
+              use_engine=False, use_client_plane=True,
+              compiled_loop=True, faults="lossy", guards="strict",
+              autosave_every=16, autosave_dir="/tmp/x",
+              autosave_keep_last=5, seed=11)
+    assert RunConfig.from_afl_kwargs(**kw).afl_kwargs() == kw
+    fkw = dict(rounds=8, tau_u=0.3, tau_d=0.2, eval_every=2,
+               local_steps_override=4, use_engine=True,
+               use_client_plane=False, seed=7)
+    assert RunConfig.from_fedavg_kwargs(**fkw).fedavg_kwargs() == fkw
+    akw = dict(rounds_per_client=6, gamma=0.4, time_scale=0.01,
+               max_staleness=None, use_engine=True,
+               use_client_plane=True, faults="flaky", fault_seed=5)
+    assert RunConfig.from_async_kwargs(**akw).async_kwargs() == akw
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+def test_runconfig_json_roundtrip(tmp_path):
+    cfg = RunConfig(algorithm="afl_baseline", loop="compiled",
+                    iterations=128, gamma=0.6, max_staleness=12,
+                    timing=TimingConfig(tau_u=0.05, tau_d=0.02),
+                    plane=PlaneConfig(kind="sharded", window_cap=32),
+                    faults={"preset": "lossy", "loss_prob": 0.4},
+                    guards="strict",
+                    ingest={"max_batch": 16, "max_wait_ms": 20.0})
+    assert RunConfig.from_json(cfg.to_json()) == cfg
+    p = tmp_path / "run.json"
+    cfg.save(str(p))
+    assert RunConfig.load(str(p)) == cfg
+    # the file is plain JSON with nested sections
+    raw = json.loads(p.read_text())
+    assert raw["timing"]["tau_u"] == 0.05
+    assert raw["plane"]["kind"] == "sharded"
+
+
+def test_unknown_fields_rejected_with_suggestions():
+    with pytest.raises(ValueError, match="iterations"):
+        RunConfig.from_dict({"iteratons": 5})
+    with pytest.raises(ValueError, match="RunConfig.timing"):
+        RunConfig.from_dict({"timing": {"tau_uu": 1.0}})
+    with pytest.raises(ValueError, match="algorithm must be"):
+        RunConfig(algorithm="sgd")
+    with pytest.raises(ValueError, match="loop must be"):
+        RunConfig(loop="turbo")
+    with pytest.raises(ValueError, match="plane.kind"):
+        PlaneConfig(kind="double")
+
+
+# ---------------------------------------------------------------------------
+# Ingest spec resolution
+# ---------------------------------------------------------------------------
+def test_resolve_ingest():
+    assert resolve_ingest(None) is None
+    assert resolve_ingest("off") is None
+    assert resolve_ingest(False) is None
+    assert resolve_ingest(True) == IngestConfig()
+    low = resolve_ingest("lowlat")
+    assert (low.max_batch, low.max_wait_ms) == (1, 0.0)
+    thr = resolve_ingest({"preset": "throughput", "queue_cap": 128})
+    assert (thr.max_batch, thr.queue_cap) == (32, 128)
+    ic = IngestConfig(max_batch=4)
+    assert resolve_ingest(ic) is ic
+    with pytest.raises(ValueError, match="unknown ingest preset"):
+        resolve_ingest("warp")
+    with pytest.raises(ValueError, match="max_batch"):
+        resolve_ingest({"max_batch": 0})
+    with pytest.raises(ValueError, match="unknown ingest field"):
+        resolve_ingest({"max_bach": 4})
+
+
+# ---------------------------------------------------------------------------
+# CLI flag folding
+# ---------------------------------------------------------------------------
+def test_config_from_args_precedence(tmp_path):
+    base = RunConfig(algorithm="fedavg", gamma=0.9, guards="strict",
+                     autosave=api.AutosaveConfig(every=32, dir="/tmp/ck"))
+    p = tmp_path / "run.json"
+    base.save(str(p))
+    ap = argparse.ArgumentParser()
+    api.add_config_flag(ap)
+    api.add_robustness_flags(ap)
+    ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--algorithm", default=None)
+    # no flags: the file wins wholesale
+    cfg = api.config_from_args(ap.parse_args(["--config", str(p)]))
+    assert (cfg.algorithm, cfg.gamma, cfg.guards) \
+        == ("fedavg", 0.9, "strict")
+    assert (cfg.autosave.every, cfg.autosave.dir) == (32, "/tmp/ck")
+    # explicit flags override just their fields
+    cfg = api.config_from_args(ap.parse_args(
+        ["--config", str(p), "--gamma", "0.4", "--guards", "off",
+         "--faults", "lossy"]))
+    assert (cfg.gamma, cfg.guards, cfg.faults) == (0.4, "off", "lossy")
+    assert cfg.algorithm == "fedavg"          # untouched file field
+    assert cfg.autosave.dir == "/tmp/ck"      # --ckpt-dir not passed

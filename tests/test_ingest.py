@@ -1,0 +1,138 @@
+"""Streaming-ingest plane tests (core/ingest.py, DESIGN.md §11).
+
+The serving contract under test: a live `IngestServer` session —
+micro-batched, backpressured, fault-transformed, guard-protected —
+recorded and replayed OFFLINE through ``compile_afl_trace(events=...,
+realized=True)`` as one compiled run must reproduce the served model to
+≤1e-5 (micro-batch boundaries are value-invisible), and the virtual
+clock makes whole sessions deterministic.
+
+Everything runs the CPU-budget CNN (``CNNConfig(conv1=2, conv2=4,
+fc=16)``) — the full-width paper CNN does not fit this host's test
+budget.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import api
+from repro.core import ingest as ing
+from repro.core.faults import OUTCOME_SHED
+from repro.core.scheduler import make_fleet
+
+M = 8
+EVENTS = 32
+
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.tasks import CNNTask
+    task = CNNTask(iid=True, num_clients=M, train_n=256, test_n=128,
+                   local_batches_per_step=2,
+                   cnn_cfg=CNNConfig(conv1=2, conv2=4, fc=16), seed=0)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, seed=0)
+    plane = task.client_plane(fleet)
+    return task, fleet, plane, task.init_params(0)
+
+
+def _cfg(**ingest):
+    ingest.setdefault("max_batch", 8)
+    ingest.setdefault("max_wait_ms", 10_000.0)
+    ingest.setdefault("queue_cap", 64)
+    return api.RunConfig(algorithm="csmaafl", loop="ingest",
+                         iterations=EVENTS, seed=0, ingest=ingest)
+
+
+def _burst(seed=0):
+    # 1ms Poisson gaps << max_wait: the virtual-clock server always
+    # closes full micro-batches
+    return ing.poisson_arrivals(1000.0, EVENTS, M=M, seed=seed)
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _serve(setup, cfg, arrivals):
+    task, fleet, plane, p0 = setup
+    return ing.run_ingest(task, cfg, fleet=fleet, client_plane=plane,
+                          params0=p0, arrivals=arrivals)
+
+
+def test_record_replay_parity_with_faults_and_guards(serving_setup):
+    # lossy uplink + strict guards force the guarded scan path — the
+    # full PR 6/7 stack live, then the session replayed offline as one
+    # compiled trace from the same seeded init
+    task, fleet, plane, p0 = serving_setup
+    cfg = _cfg().replace(faults="lossy", guards="strict")
+    res = _serve(serving_setup, cfg, _burst())
+    assert len(res.events) == EVENTS
+    assert len(res.betas) == EVENTS
+    # micro-batching actually batched: far fewer device visits than events
+    assert res.stats["batches"] <= EVENTS // 4
+    rep = ing.replay_session(res.session, client_plane=plane, params0=p0)
+    assert _maxdiff(res.params, rep.params) <= 1e-5
+    assert list(rep.betas) == pytest.approx(list(res.betas), abs=1e-9)
+    # lossy preset realized at least one recorded drop slot
+    outs = res.stats["faults"]["outcomes"]
+    assert outs.get("ok", 0) > 0
+
+
+def test_baseline_fast_path_parity(serving_setup):
+    # afl_baseline without faults/guards rides the row-batched blend
+    # fast path (engine.blend_rows_fleet) with every-M broadcasts
+    task, fleet, plane, p0 = serving_setup
+    cfg = _cfg().replace(algorithm="afl_baseline")
+    res = _serve(serving_setup, cfg, _burst(seed=1))
+    assert res.stats["launches"] < EVENTS
+    rep = ing.replay_session(res.session, client_plane=plane, params0=p0)
+    assert _maxdiff(res.params, rep.params) <= 1e-5
+
+
+def test_backpressure_sheds_and_session_roundtrips(serving_setup,
+                                                   tmp_path):
+    # queue_cap below max_batch: the synchronous virtual-clock server
+    # must shed over-cap arrivals as recorded drop_shed slots, and the
+    # shed-bearing session still replays bit-consistently from disk
+    task, fleet, plane, p0 = serving_setup
+    cfg = _cfg(queue_cap=2, max_wait_ms=1000.0)
+    res = _serve(serving_setup, cfg, _burst(seed=2))
+    assert res.stats["shed"] > 0
+    outs = res.stats["faults"]["outcomes"]
+    assert outs.get("drop_shed", 0) == res.stats["shed"]
+    assert any(ev.outcome == OUTCOME_SHED for ev in res.events)
+    # shed slots carry the identity blend (β=1) in the record
+    shed_betas = [b for ev, b in zip(res.events, res.betas)
+                  if ev.outcome == OUTCOME_SHED]
+    assert shed_betas and all(b == 1.0 for b in shed_betas)
+    path = tmp_path / "sess.json"
+    res.session.save(str(path))
+    loaded = ing.IngestSession.load(str(path))
+    assert loaded.to_dict() == res.session.to_dict()
+    rep = ing.replay_session(loaded, client_plane=plane, params0=p0)
+    assert _maxdiff(res.params, rep.params) <= 1e-5
+
+
+def test_virtual_clock_sessions_deterministic(serving_setup):
+    # arrivals=None → the scheduler's §II-C timing law on the virtual
+    # clock; two identical api.run() calls must agree bit-for-bit
+    task, fleet, plane, p0 = serving_setup
+    cfg = _cfg()
+    r1 = api.run(task, cfg, fleet=fleet, client_plane=plane, params0=p0)
+    r2 = api.run(task, cfg, fleet=fleet, client_plane=plane, params0=p0)
+    assert isinstance(r1, ing.IngestResult)
+    assert r1.betas == r2.betas
+    assert [dataclasses.astuple(a) for a in r1.events] \
+        == [dataclasses.astuple(b) for b in r2.events]
+    for a, b in zip(jax.tree.leaves(r1.params), jax.tree.leaves(r2.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    lat = r1.latency
+    assert set(lat) == {"p50", "p99", "events_per_s"}
