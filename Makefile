@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test lint format format-check bench bench-agg bench-client \
 	bench-sharded bench-compiled bench-sweep bench-faults bench-guards \
-	bench-ingest bench-gate bench-record
+	bench-ingest bench-fleet bench-gate bench-record
 
 test:
 	python -m pytest -x -q
@@ -63,7 +63,12 @@ bench-guards:
 bench-ingest:
 	python -m benchmarks.run --only ingest
 
-# all 8 gated benches; fail on >1.3x slowdown vs benchmarks/
+# the fleet-store bench (paged active-set pool overhead vs the dense
+# plane at small M + arena->device staging throughput, DESIGN.md §12)
+bench-fleet:
+	python -m benchmarks.run --only fleet_store
+
+# all 9 gated benches; fail on >1.3x slowdown vs benchmarks/
 # baseline_*.json (or below the acceptance floors / parity >1e-5 — see
 # benchmarks/check_regression.py).  Baselines are keyed by HOST KEY
 # (REPRO_BENCH_HOST_KEY / github-runner / hostname): an unrecorded host
@@ -71,7 +76,7 @@ bench-ingest:
 # experiments/bench/local/gate_report.json for CI consumption.
 bench-gate:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest,fleet_store \
 		--gate --seed 0
 
 # rerun the gated benches on THIS host and fold the fresh results into
@@ -80,6 +85,6 @@ bench-gate:
 # tracked experiments/bench/*.json records (--record).
 bench-record:
 	python -m benchmarks.run \
-		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest \
+		--only aggregation,client_plane,sharded_plane,compiled_loop,sweep_plane,faults,guards,ingest,fleet_store \
 		--seed 0 --record
 	python -m benchmarks.check_regression --record-baselines

@@ -1,0 +1,161 @@
+"""Paged fleet-store overhead benchmark (docs/DESIGN.md §12): what the
+active-set row pool costs when it is NOT needed, and how fast the
+host-arena -> device staging path moves rows when it is.
+
+Two gated quantities:
+
+* ``speedup = dense_s / paged_s`` on the paper-CNN CPU-budget compiled
+  run at M=64 with a deliberately tight P=16 pool — the small-M overhead
+  gate.  The paged plane pays slot bookkeeping, horizon-aware eviction
+  and per-segment adopt() on exactly the workload where the dense plane
+  is optimal, so this ratio sits below 1x by construction; a collapse
+  (per-event host sync on the slot table, eviction write-back inside the
+  hot loop, prefetch thread contention) lands far below the recorded
+  floor.  Parity between the two final params is recorded and gated
+  ≤1e-5 like every other plane gate.
+* ``staging_ms_per_mb`` — a direct ``FleetStore`` micro-bench: swap two
+  disjoint P-row working sets through the pool so every ``ensure()``
+  evicts + stages P fresh rows from the host arena, and report wall ms
+  per staged MB.  Checked as an extra upper bound by
+  ``benchmarks/check_regression.py``; a collapse (per-row device_put,
+  arena gather inside the worker lock, accidental row copies) lands far
+  above.
+
+Context (never gated): events/s for both variants, the paged run's
+``peak_device_rows`` / ``prefetch_stalls`` / ``evictions`` counters —
+peak stays O(P) even here, which is the whole point of the store.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_seed, emit, save_result
+
+M = 64
+P = 16                     # deliberately tight: M/4 active slots
+K = 1                      # local iterations per upload
+LOCAL_BATCHES = 2          # minibatches per local iteration
+BATCH_SIZE = 1
+ITERATIONS = 256           # upload events per timed run
+REPS = 3                   # median-of-REPS end-to-end runs per variant
+
+# staging micro-bench geometry: 256 KiB rows, 32-row swaps (8 MiB each)
+STAGE_M, STAGE_N, STAGE_P = 64, 65536, 32
+STAGE_SWAPS = 16
+
+
+def bench_store_runs() -> None:
+    import jax
+
+    from repro import api
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.scheduler import make_fleet
+    from repro.core.tasks import CNNTask
+
+    seed = bench_seed()
+    cnn_cfg = CNNConfig(conv1=2, conv2=4, fc=16)   # CPU-budget width
+    task = CNNTask(iid=True, num_clients=M, train_n=2048, test_n=128,
+                   batch_size=BATCH_SIZE,
+                   local_batches_per_step=LOCAL_BATCHES,
+                   cnn_cfg=cnn_cfg, seed=seed)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(),
+                       adaptive=False, base_local_steps=K, seed=seed)
+    p0 = task.init_params()
+    dense = task.client_plane(fleet)
+    paged = task.client_plane(fleet, store="paged", active_slots=P)
+    cfg = api.RunConfig(algorithm="csmaafl", loop="compiled",
+                        iterations=ITERATIONS, gamma=0.4,
+                        eval_every=ITERATIONS, seed=seed,
+                        timing=api.TimingConfig(tau_u=0.1, tau_d=0.1))
+
+    def one(plane):
+        return api.run(task, cfg, fleet=fleet, client_plane=plane,
+                       params0=p0)
+
+    def timed(plane):
+        r = one(plane)                 # warmup compiles the variant
+        jax.block_until_ready(jax.tree.leaves(r.params)[0])
+        ts = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            r = one(plane)
+            jax.block_until_ready(jax.tree.leaves(r.params)[0])
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), r
+
+    t_dense, r_dense = timed(dense)
+    t_paged, r_paged = timed(paged)
+
+    speedup = t_dense / t_paged
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(r_paged.params),
+                                 jax.tree.leaves(r_dense.params)))
+    counters = {k: r_paged.stats[k] for k in
+                ("peak_device_rows", "prefetch_stalls", "evictions")}
+    staging = bench_staging()
+    emit("fleet_store.compiled.dense", t_dense * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_dense:.1f} events/s "
+         f"(dense, {r_dense.stats['peak_device_rows']} device rows)")
+    emit("fleet_store.compiled.paged", t_paged * 1e6 / ITERATIONS,
+         f"{ITERATIONS / t_paged:.1f} events/s; {1 / speedup:.3f}x dense "
+         f"at P={P}; parity {parity:.2e}; "
+         f"peak_rows={counters['peak_device_rows']} "
+         f"stalls={counters['prefetch_stalls']}")
+    emit("fleet_store.staging", staging["staging_us_per_swap"],
+         f"{staging['staging_ms_per_mb']:.3f} ms/MB arena->device "
+         f"({STAGE_P} rows x {STAGE_N} f32 per swap)")
+    save_result("fleet_store", {
+        "model": "paper_cnn_cpu_budget", "M": M, "P": P, "K": K,
+        "local_batches": LOCAL_BATCHES, "batch_size": BATCH_SIZE,
+        "iterations": ITERATIONS, "seed": seed,
+        "mode": dense.engine.mode,
+        "stage_rows": STAGE_P, "stage_row_floats": STAGE_N,
+        "dense_s": t_dense, "paged_s": t_paged,
+        "events_per_s_dense": ITERATIONS / t_dense,
+        "events_per_s_paged": ITERATIONS / t_paged,
+        "paged_peak_device_rows": counters["peak_device_rows"],
+        "paged_prefetch_stalls": counters["prefetch_stalls"],
+        "paged_evictions": counters["evictions"],
+        "speedup": speedup,
+        "parity_max_abs_diff": parity,
+        "staging_ms_per_mb": staging["staging_ms_per_mb"],
+    })
+
+
+def bench_staging() -> dict:
+    """Time pure arena->device staging: alternate two disjoint P-row
+    working sets so every ``ensure()`` evicts one full set and stages the
+    other from the host arena."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.fleet_store import FleetStore
+
+    rng = np.random.default_rng(bench_seed())
+    store = FleetStore(STAGE_M, STAGE_N, STAGE_P, np.float32)
+    store.write_rows(np.arange(STAGE_M),
+                     rng.standard_normal((STAGE_M, STAGE_N), np.float32))
+    pool = jnp.zeros((STAGE_P, STAGE_N), jnp.float32)
+    sets = [np.arange(0, STAGE_P), np.arange(STAGE_P, 2 * STAGE_P)]
+    pool = store.ensure(pool, sets[0])      # warmup: compile + first fill
+    jax.block_until_ready(pool)
+    t0 = time.perf_counter()
+    for i in range(STAGE_SWAPS):
+        pool = store.ensure(pool, sets[(i + 1) % 2])
+    jax.block_until_ready(pool)
+    dt = time.perf_counter() - t0
+    mb = STAGE_SWAPS * STAGE_P * STAGE_N * 4 / 2**20
+    return {"staging_ms_per_mb": dt * 1e3 / mb,
+            "staging_us_per_swap": dt * 1e6 / STAGE_SWAPS}
+
+
+def main() -> None:
+    bench_store_runs()
+
+
+if __name__ == "__main__":
+    main()

@@ -226,6 +226,36 @@ GATES = {
         "parity_bound": 1e-5,
         "rerun_hint": "python -m benchmarks.run --only ingest",
     },
+    "fleet_store": {
+        "baseline": os.path.join(HERE, "baseline_fleet_store.json"),
+        "latest": os.path.join(LATEST_DIR, "fleet_store.json"),
+        "config_keys": ("model", "M", "P", "K", "local_batches",
+                        "batch_size", "iterations", "stage_rows",
+                        "stage_row_floats", "seed", "mode"),
+        "context_keys": ("dense_s", "paged_s", "events_per_s_dense",
+                         "events_per_s_paged", "paged_peak_device_rows",
+                         "paged_prefetch_stalls", "paged_evictions"),
+        # paged active-set pool (DESIGN.md §12): the small-M OVERHEAD
+        # gate — dense_s/paged_s at M=64 with a tight P=16 pool, i.e.
+        # the paged plane on exactly the workload where the dense plane
+        # is optimal.  Slot bookkeeping + chunked (vs fleet-wide) launch
+        # shapes cost a bounded constant factor; a collapse (a host sync
+        # on the slot table per event, eviction write-back in the hot
+        # loop, per-row device_put) lands far below the floor.  The
+        # parity bound gates dense<->paged history parity; the extra
+        # bound gates arena->device staging throughput (ms per staged
+        # MB, so LOWER is better — an upper bound, not a floor).  This
+        # host measures 0.73x-0.87x run-to-run (the chunked launches are
+        # load-sensitive on the shared 2-core container), hence the
+        # wider drop budget; a collapse lands at ~0.1-0.2x, far below
+        # the floor either way.  Measured staging: ~1.1 ms/MB.
+        "floor": 0.55,
+        "drop_threshold": 1.6,
+        "parity_key": "parity_max_abs_diff",
+        "parity_bound": 1e-5,
+        "extra_bounds": {"staging_ms_per_mb": 10.0},
+        "rerun_hint": "python -m benchmarks.run --only fleet_store",
+    },
 }
 
 

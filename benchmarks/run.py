@@ -24,6 +24,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   ingest         streaming-ingest micro-batching vs per-event serving +
                  live-vs-replay parity + open-loop latency
                  (docs/DESIGN.md §11)
+  fleet_store    paged active-set pool overhead vs the dense plane at
+                 small M + arena->device staging throughput
+                 (docs/DESIGN.md §12)
   roofline       §Roofline table from the dry-run records
 
 Results land in the GITIGNORED ``experiments/bench/local/``; pass
@@ -32,11 +35,11 @@ host record (so casual local runs never dirty the tree).
 
 ``--gate`` runs ``benchmarks/check_regression.py`` afterwards for every
 gated benchmark THIS invocation produced and fails on a >1.3x slowdown
-vs the committed baselines (``make bench-gate`` runs all eight gated
+vs the committed baselines (``make bench-gate`` runs all nine gated
 benches; ``make bench-agg`` / ``make bench-client`` / ``make
 bench-sharded`` / ``make bench-compiled`` / ``make bench-sweep`` /
-``make bench-faults`` / ``make bench-guards`` / ``make bench-ingest``
-run ungated).  Gate results also land in ``experiments/bench/local/
+``make bench-faults`` / ``make bench-guards`` / ``make bench-ingest`` /
+``make bench-fleet`` run ungated).  Gate results also land in ``experiments/bench/local/
 gate_report.json`` (machine-readable, one record per gate).
 
 CI-friendliness: ``--seed N`` pins every bench's fleet/batch draws
@@ -54,7 +57,7 @@ import sys
 import traceback
 
 GATED = ("aggregation", "client_plane", "sharded_plane", "compiled_loop",
-         "sweep_plane", "faults", "guards", "ingest")
+         "sweep_plane", "faults", "guards", "ingest", "fleet_store")
 # bench name -> result file written via benchmarks.common.save_result
 RESULT_FILES = {
     "aggregation": "aggregation_fused.json",
@@ -65,6 +68,7 @@ RESULT_FILES = {
     "faults": "faults.json",
     "guards": "guards.json",
     "ingest": "ingest.json",
+    "fleet_store": "fleet_store.json",
 }
 
 
@@ -74,7 +78,7 @@ def main(argv=None) -> int:
                     help="comma list: fig2,convergence,kernels,"
                          "aggregation,client_plane,sharded_plane,"
                          "compiled_loop,sweep_plane,faults,guards,"
-                         "ingest,roofline")
+                         "ingest,fleet_store,roofline")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--gate", action="store_true",
                     help="fail on bench regression vs the committed "
@@ -99,7 +103,8 @@ def main(argv=None) -> int:
     names = (args.only.split(",") if args.only else
              ["fig2", "aggregation", "client_plane", "sharded_plane",
               "compiled_loop", "sweep_plane", "faults", "guards",
-              "ingest", "kernels", "convergence", "roofline"])
+              "ingest", "fleet_store", "kernels", "convergence",
+              "roofline"])
     print("name,us_per_call,derived")
     rc = 0
     ran = set()
@@ -138,6 +143,9 @@ def main(argv=None) -> int:
                 b.main()
             elif name == "ingest":
                 from benchmarks import bench_ingest as b
+                b.main()
+            elif name == "fleet_store":
+                from benchmarks import bench_fleet_store as b
                 b.main()
             elif name == "roofline":
                 from benchmarks import bench_roofline as b

@@ -2,7 +2,7 @@
 
 Runs the three AFL aggregation modes + FedAvg on the paper's CNN task
 (scaled down) and prints accuracy vs virtual time, demonstrating the
-public API:  tasks -> fleet -> scheduler-driven loops.
+public API:  tasks -> fleet -> one typed RunConfig -> api.run.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +10,8 @@ import sys
 import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.afl import run_afl
+from repro import api
 from repro.core.scheduler import make_fleet
-from repro.core.sfl import run_fedavg
 from repro.core.tasks import CNNTask
 
 
@@ -25,22 +24,27 @@ def main():
                        samples_per_client=task.num_samples(), seed=0)
     p0 = task.init_params()
     # the fused fleet plane: all 10 client models live as one (M, n)
-    # device buffer; local SGD is scanned/vmapped (docs/DESIGN.md §4)
+    # device buffer; local SGD is scanned/vmapped (docs/DESIGN.md §4).
+    # (At fleet scale, plane="fleet1m" pages a P-slot pool instead —
+    # docs/DESIGN.md §12.)
     plane = task.client_plane(fleet)
+    timing = api.TimingConfig(tau_u=0.05, tau_d=0.05)
 
     # 2. synchronous baseline (FedAvg, paper eq. 2)
-    _, hist = run_fedavg(p0, fleet, None, client_plane=plane, rounds=4,
-                         tau_u=0.05, tau_d=0.05, eval_fn=task.eval_fn)
+    cfg = api.RunConfig(algorithm="fedavg", iterations=4, eval_every=1,
+                        timing=timing)
+    _, hist = api.run(task, cfg, fleet=fleet, client_plane=plane,
+                      params0=p0, eval_fn=task.eval_fn)
     print("\nFedAvg (SFL):")
     for t, m in zip(hist.times, hist.metrics):
         print(f"  t={t:8.2f}  acc={m['accuracy']:.3f}")
     horizon = hist.times[-1]
 
     # 3. CSMAAFL (Algorithm 1): same virtual-time horizon
-    res = run_afl(p0, fleet, None, client_plane=plane,
-                  algorithm="csmaafl",
-                  iterations=260, tau_u=0.05, tau_d=0.05, gamma=0.4,
-                  eval_fn=task.eval_fn, eval_every=40)
+    cfg = api.RunConfig(algorithm="csmaafl", iterations=260, gamma=0.4,
+                        eval_every=40, timing=timing)
+    res = api.run(task, cfg, fleet=fleet, client_plane=plane,
+                  params0=p0, eval_fn=task.eval_fn)
     print("\nCSMAAFL (gamma=0.4):")
     for t, m in zip(res.history.times, res.history.metrics):
         marker = " <= SFL horizon" if abs(t - horizon) < 20 else ""
@@ -48,10 +52,10 @@ def main():
 
     # 4. the paper's exact-equivalence baseline (§III-B): after every M
     #    uploads the global model EQUALS the FedAvg round
-    res_b = run_afl(p0, fleet, None, client_plane=plane,
-                    algorithm="afl_baseline", iterations=40,
-                    tau_u=0.05, tau_d=0.05, eval_fn=task.eval_fn,
-                    eval_every=10)
+    cfg = api.RunConfig(algorithm="afl_baseline", iterations=40,
+                        eval_every=10, timing=timing)
+    res_b = api.run(task, cfg, fleet=fleet, client_plane=plane,
+                    params0=p0, eval_fn=task.eval_fn)
     print("\nBaseline AFL (== FedAvg every M iterations):")
     for t, m in zip(res_b.history.times, res_b.history.metrics):
         print(f"  t={t:8.2f}  acc={m['accuracy']:.3f}")

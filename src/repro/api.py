@@ -68,14 +68,37 @@ class PlaneConfig:
     """Client-plane selection: ``none`` (per-leaf reference loop),
     ``single`` (fused (M, n) fleet buffer), ``sharded`` (fleet mesh).
     ``window_cap`` bounds the AFL event window before a forced retrain
-    flush — the ingest plane reuses it as its backpressure bound."""
+    flush — the ingest plane reuses it as its backpressure bound.
+
+    ``store`` picks the fleet-row residency model (DESIGN.md §12):
+    ``dense`` keeps all M rows device-resident; ``paged`` keeps only
+    ``active_slots`` rows on device, backed by a host-side
+    ``core.fleet_store.FleetStore`` arena with exact trace-driven
+    prefetch (``prefetch_depth`` staged chunks in flight).  The paged
+    store is how a run reaches million-client fleets without an (M, n)
+    device buffer; it requires ``kind='single'``."""
     kind: str = "single"
     window_cap: Optional[int] = None
+    store: str = "dense"
+    active_slots: Optional[int] = None
+    prefetch_depth: int = 2
 
     def __post_init__(self):
         if self.kind not in ("none", "single", "sharded"):
             raise ValueError(f"plane.kind must be none|single|sharded, "
                              f"got '{self.kind}'")
+        if self.store not in ("dense", "paged"):
+            raise ValueError(f"plane.store must be dense|paged, "
+                             f"got '{self.store}'")
+        if self.store == "paged" and self.kind != "single":
+            raise ValueError(
+                f"plane.store='paged' requires plane.kind='single' "
+                f"(got kind='{self.kind}') — the paged active-set pool "
+                f"is a single-device plane")
+        if self.active_slots is not None and self.active_slots < 1:
+            raise ValueError("plane.active_slots must be >= 1")
+        if self.prefetch_depth < 1:
+            raise ValueError("plane.prefetch_depth must be >= 1")
 
 
 @dataclass(frozen=True)
@@ -128,6 +151,25 @@ def resolve_ingest(spec) -> Optional[IngestConfig]:
     return resolve_preset(INGEST_PRESETS, spec, cls=IngestConfig,
                           kind="ingest", accept_bool=True,
                           off_aliases=("off", "none"))
+
+
+PLANE_PRESETS: Dict[str, Optional[Dict[str, Any]]] = {
+    # the dense single-device plane (the historical default)
+    "default": {},
+    # million-client fleet: paged active-set pool, 1024 device slots,
+    # double-buffered exact prefetch (DESIGN.md §12)
+    "fleet1m": {"kind": "single", "store": "paged",
+                "active_slots": 1024, "prefetch_depth": 2},
+}
+
+
+def resolve_plane(spec) -> "PlaneConfig":
+    """Normalize a plane spec (preset name / kwargs dict / PlaneConfig)
+    through the shared preset resolver; ``None`` means the default
+    dense plane, NOT plane-off (spell that ``{"kind": "none"}``)."""
+    cfg = resolve_preset(PLANE_PRESETS, spec, cls=PlaneConfig,
+                         kind="plane")
+    return PlaneConfig() if cfg is None else cfg
 
 
 _NESTED = {"timing": TimingConfig, "server_opt": ServerOptConfig,
@@ -204,6 +246,8 @@ class RunConfig:
                             f"got {type(d).__name__}")
         kw = dict(d)
         _check_fields(cls, "RunConfig", kw)
+        if isinstance(kw.get("plane"), str):
+            kw["plane"] = resolve_plane(kw["plane"])
         for key, sub_cls in _NESTED.items():
             v = kw.get(key)
             if isinstance(v, Mapping):
@@ -308,6 +352,39 @@ class RunConfig:
 
 
 # ---------------------------------------------------------------------------
+# Legacy plane-kwarg resolution (one shim shared by run_afl / run_fedavg)
+# ---------------------------------------------------------------------------
+def resolve_legacy_plane_kwargs(fn_name: str, *, client_plane=None,
+                                use_client_plane=None, compiled_loop=None):
+    """One RunConfig-first resolution point for the legacy plane kwargs
+    on the keyword entry points (``run_afl`` / ``run_fedavg``).
+
+    The entry points take ``None`` sentinels; a non-None value means the
+    caller spelled the legacy kwarg explicitly, which earns one
+    :class:`DeprecationWarning` naming the modern spelling.  Returns
+    ``(client_plane, use_client_plane, compiled_loop)`` with the
+    historical defaults (plane on, windowed loop) filled in, so shimmed
+    calls stay bit-identical to the old signatures.
+    """
+    passed = [n for n, v in (("client_plane", client_plane),
+                             ("use_client_plane", use_client_plane),
+                             ("compiled_loop", compiled_loop))
+              if v is not None]
+    if passed:
+        import warnings
+        warnings.warn(
+            f"{fn_name}({', '.join(n + '=...' for n in passed)}) uses "
+            f"legacy plane kwargs — select the execution plane through "
+            f"RunConfig instead (repro.api.run with "
+            f"plane=PlaneConfig(...) / a plane preset and loop=...); "
+            f"the shim keeps results bit-identical",
+            DeprecationWarning, stacklevel=3)
+    return (client_plane,
+            True if use_client_plane is None else bool(use_client_plane),
+            False if compiled_loop is None else bool(compiled_loop))
+
+
+# ---------------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------------
 def run(task, config, *, fleet=None, client_plane=None, params0=None,
@@ -340,8 +417,15 @@ def run(task, config, *, fleet=None, client_plane=None, params0=None,
         params0 = task.init_params(cfg.seed)
     use_plane = cfg.plane.kind != "none"
     if client_plane is None and use_plane:
+        pc = cfg.plane
+        plane_kw: Dict[str, Any] = {}
+        if pc.store != "dense":
+            # the paged active-set pool is reachable ONLY through this
+            # config path — no run_afl kwarg spells it (DESIGN.md §12)
+            plane_kw = dict(store=pc.store, active_slots=pc.active_slots,
+                            prefetch_depth=pc.prefetch_depth)
         client_plane = task.client_plane(
-            fleet, sharded=cfg.plane.kind == "sharded")
+            fleet, sharded=pc.kind == "sharded", **plane_kw)
     if client_plane is not None and cfg.plane.window_cap is not None:
         client_plane.window_cap = cfg.plane.window_cap
     if eval_fn is None and cfg.evaluate:

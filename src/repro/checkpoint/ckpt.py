@@ -368,14 +368,17 @@ def save_afl_state(path: str, state: Dict[str, Any], *, step: int = 0,
     is recompiled deterministically from (fleet, seed) and execution
     restarts at ``cursor`` (docs/DESIGN.md §7/§10).  Optional entries
     round-trip too: ``guard_state`` (the in-scan update-guard carry,
-    ``core/guards.py``) and ``history`` (the eval curve recorded so far,
+    ``core/guards.py``), ``history`` (the eval curve recorded so far,
     as ``{"times", "iterations", "metrics": {name: series}}`` arrays) —
     so a resumed run continues both the guard accounting and the curve
-    instead of restarting them."""
+    instead of restarting them — and ``fleet_store`` (the paged plane's
+    spilled host arena + slot table, ``core/fleet_store.py``; for paged
+    runs ``fleet_buf`` is the (P, n) slot pool, only meaningful with
+    this payload alongside it)."""
     payload = {"fleet_buf": state["fleet_buf"], "g_flat": state["g_flat"],
                "opt_state": state.get("opt_state", ()),
                "cursor": np.int64(state["cursor"])}
-    for extra in ("guard_state", "history"):
+    for extra in ("guard_state", "history", "fleet_store"):
         if state.get(extra) is not None:
             payload[extra] = state[extra]
     if state.get("windowed"):
@@ -407,6 +410,10 @@ def load_afl_state(path: str, *, verify_checksum: bool = True
                                           state["guard_state"])
     if "history" in state:
         out["history"] = state["history"]     # numpy; consumer rebuilds
+    if "fleet_store" in state:
+        # host-side arena + slot table; stays numpy — the paged plane's
+        # load_store_state consumes it directly
+        out["fleet_store"] = state["fleet_store"]
     if "windowed" in state:
         out["windowed"] = bool(np.asarray(state["windowed"]))
     return out

@@ -89,8 +89,8 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
             server_opt: Optional[str] = None, server_lr: float = 1.0,
             max_staleness: Optional[int] = None,
             use_engine: bool = True,
-            client_plane=None, use_client_plane: bool = True,
-            compiled_loop: bool = False,
+            client_plane=None, use_client_plane: Optional[bool] = None,
+            compiled_loop: Optional[bool] = None,
             resume_state: Optional[Dict[str, Any]] = None,
             faults=None, guards=None,
             autosave_every: Optional[int] = None,
@@ -103,8 +103,17 @@ def run_afl(params0, fleet: Sequence[ClientSpec],
     and expand back through ``cfg.afl_kwargs()`` into the same
     implementation ``repro.api.run(task, cfg)`` dispatches to, so both
     spellings are bit-identical by construction.  See
-    :func:`_run_afl_impl` for the semantics of every knob."""
-    from repro.api import RunConfig
+    :func:`_run_afl_impl` for the semantics of every knob.
+
+    ``client_plane`` / ``use_client_plane`` / ``compiled_loop`` are
+    deprecated here — select the plane and loop through ``RunConfig``
+    (``repro.api.run``); explicit values warn but resolve to the same
+    defaults the old signature had."""
+    from repro.api import RunConfig, resolve_legacy_plane_kwargs
+    client_plane, use_client_plane, compiled_loop = \
+        resolve_legacy_plane_kwargs(
+            "run_afl", client_plane=client_plane,
+            use_client_plane=use_client_plane, compiled_loop=compiled_loop)
     cfg = RunConfig.from_afl_kwargs(
         algorithm=algorithm, iterations=iterations, tau_u=tau_u,
         tau_d=tau_d, gamma=gamma, mu_momentum=mu_momentum,
@@ -263,6 +272,7 @@ def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
     global_params = params0
     engine = g_flat = fleet_buf = opt_state = None
     start = 0
+    paged = getattr(plane, "paged", False)
     wguard = None if gcfg is None else grd.WindowedGuard(plane, gcfg)
     if plane is not None:
         # fleet-resident mode: global model AND every client model live
@@ -272,6 +282,14 @@ def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
         if windowed_resume:
             g_flat = resume_state["g_flat"]
             fleet_buf = resume_state["fleet_buf"]
+            if paged:
+                # the checkpointed (P, n) pool is only meaningful with
+                # its slot table + arena — both live in the spilled store
+                if resume_state.get("fleet_store") is None:
+                    raise ValueError(
+                        "resume state has no fleet_store payload — it was "
+                        "saved by a dense plane and cannot resume paged")
+                plane.load_store_state(resume_state["fleet_store"])
             opt_state = (resume_state.get("opt_state", ())
                          if server_opt is not None else None)
             start = int(resume_state["cursor"])
@@ -365,6 +383,8 @@ def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
         st = {"fleet_buf": fleet_buf, "g_flat": g_flat,
               "opt_state": opt_state if opt_state is not None else (),
               "cursor": cursor, "windowed": True}
+        if paged:
+            st["fleet_store"] = plane.store_state(fleet_buf)
         if wguard is not None:
             st["guard_state"] = wguard.state
         h = history_to_state(hist)
@@ -415,6 +435,10 @@ def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
                 if ev.cid in pending_cids:
                     # this uploader's pending retrain feeds this blend
                     flush_pending()
+                if paged:
+                    # page the uploader's row in BEFORE guard/blend so
+                    # the slot-addressed expressions below resolve it
+                    fleet_buf = plane.ensure_resident(fleet_buf, [ev.cid])
                 if wguard is not None:
                     guard_ok, row_eff = wguard.check(g_flat, fleet_buf,
                                                      ev.cid)
@@ -528,6 +552,8 @@ def _run_afl_impl(params0, fleet: Sequence[ClientSpec],
         outcomes=[e.outcome for e in events],
         staleness=[e.staleness for e in events],
         guards=None if wguard is None else wguard.counts())}
+    stats.update(plane.memory_stats() if plane is not None
+                 else {"peak_device_rows": M, "prefetch_stalls": 0})
     return AFLResult(cur_params(), hist, events, betas, state, stats)
 
 
@@ -551,6 +577,7 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
     runner = _et.CompiledLoopRunner(plane, server_opt=server_opt,
                                     server_lr=server_lr, guards=guards)
     engine = plane.engine
+    paged = getattr(plane, "paged", False)
     if resume_state is None:
         hist = FLHistory()
         g_flat = engine.flatten(params0)
@@ -566,6 +593,12 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
         hist = history_from_state(resume_state.get("history"))
         g_flat = resume_state["g_flat"]
         fleet_buf = resume_state["fleet_buf"]
+        if paged:
+            if resume_state.get("fleet_store") is None:
+                raise ValueError(
+                    "resume state has no fleet_store payload — it was "
+                    "saved by a dense plane and cannot resume paged")
+            plane.load_store_state(resume_state["fleet_store"])
         opt_state = resume_state.get("opt_state", ())
         guard_state = resume_state.get("guard_state")
         if guard_state is None:
@@ -585,6 +618,8 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
         def autosave_fn(st):
             sd = {"fleet_buf": st["fleet_buf"], "g_flat": st["g_flat"],
                   "opt_state": st["opt_state"], "cursor": st["cursor"]}
+            if paged:
+                sd["fleet_store"] = plane.store_state(st["fleet_buf"])
             if runner.guards is not None:
                 sd["guard_state"] = st["guard_state"]
             h = history_to_state(st["hist"])
@@ -602,6 +637,8 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
         stop_flag=stop_flag)
     state = {"fleet_buf": fleet_buf, "g_flat": g_flat,
              "opt_state": opt_state, "cursor": len(trace)}
+    if paged:
+        state["fleet_store"] = plane.store_state(fleet_buf)
     gcounts = None
     if runner.guards is not None:
         state["guard_state"] = guard_state
@@ -612,5 +649,6 @@ def _run_compiled(params0, fleet, plane, *, algorithm, iterations, tau_u,
     stats = {"launches": runner.launches, "segments": runner.segments,
              "variants": runner.variants(),
              "faults": flt.trace_stats(trace, guards=gcounts)}
+    stats.update(plane.memory_stats())
     return AFLResult(engine.unflatten(g_flat), hist, trace.events[start:],
                      [float(b) for b in trace.betas[start:]], state, stats)

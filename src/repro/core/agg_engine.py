@@ -540,6 +540,61 @@ class ShardedRowEngine:
 
 
 # ---------------------------------------------------------------------------
+# Slot-addressed row blends over a paged (P, n) active-set pool (§12)
+# ---------------------------------------------------------------------------
+class PagedRowEngine:
+    """Row-addressed blends against the (P, n) active-slot pool of a
+    :class:`~repro.core.client_plane.PagedClientPlane`.
+
+    Wraps the base :class:`AggEngine` (which fixes the flat layout and
+    every traceable expression) and reimplements ONLY the row-addressed
+    entry points: a global cid resolves to its device slot HOST-side
+    (one slot-table lookup — the paged plane guarantees residency before
+    any blend), and the base engine's programs then run unchanged
+    against the pool.  The fleet-wide weighted sum (the FedAvg-cycle
+    consumer, which needs every row) flushes the pool and accumulates
+    over the host arena in bounded-size chunks instead of gathering an
+    (M, n) device buffer that paged mode exists to avoid.
+
+    Everything else — ``flatten``/``unflatten``, the traceable
+    ``blend_row_expr``/``delta_row_expr`` the compiled scan inlines, the
+    pytree blends — delegates to the base engine, so
+    ``getattr(plane.engine, "base", plane.engine)`` keeps resolving the
+    raw engine exactly as it does for :class:`ShardedRowEngine`.
+    """
+
+    def __init__(self, engine: AggEngine, plane):
+        self.base = engine
+        self._plane = plane
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    def _slot(self, cid) -> int:
+        return self._plane.slot_index(int(cid))
+
+    def blend_row_flat(self, g_flat, fleet_buf, cid, beta) -> jnp.ndarray:
+        return self.base.blend_row_flat(g_flat, fleet_buf,
+                                        self._slot(cid), beta)
+
+    def delta_row_flat(self, g_flat, fleet_buf, cid, scale) -> jnp.ndarray:
+        return self.base.delta_row_flat(g_flat, fleet_buf,
+                                        self._slot(cid), scale)
+
+    def blend_rows_fleet(self, g_flat, fleet_buf, cids: Sequence[int],
+                         betas: Sequence[float]) -> jnp.ndarray:
+        slots = [self._slot(c) for c in cids]
+        return self.base.blend_rows_fleet(g_flat, fleet_buf, slots, betas)
+
+    def weighted_sum_rows_flat(self, coef0, g_flat, coefs,
+                               rows: jnp.ndarray) -> jnp.ndarray:
+        """Fleet-wide eq. (2/7) where ``rows`` is the (P, n) pool:
+        flush, then a chunked f32 MAC over the arena (≤1e-5 of the dense
+        single-launch tensordot — partial-sum reordering only)."""
+        return self._plane.fleet_weighted_sum(coef0, g_flat, coefs, rows)
+
+
+# ---------------------------------------------------------------------------
 # Engine cache — one engine per (tree-structure, options)
 # ---------------------------------------------------------------------------
 _ENGINES: Dict[Any, AggEngine] = {}

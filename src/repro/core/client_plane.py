@@ -234,6 +234,14 @@ class ClientPlane:
             return int(self.window_cap)
         return max(4 * int(max_batch), 64)
 
+    # -- memory accounting (DESIGN.md §12) -----------------------------------
+    paged = False
+
+    def memory_stats(self) -> dict:
+        """Device-residency counters for run stats: the dense plane
+        keeps all M rows resident and never prefetches."""
+        return {"peak_device_rows": self.M, "prefetch_stalls": 0}
+
     # -- fused local training -----------------------------------------------
     def init_fleet(self, g_flat: jnp.ndarray, seed: int) -> jnp.ndarray:
         """Every client trains from the initial broadcast w_0: one vmapped
@@ -524,3 +532,302 @@ class ShardedClientPlane(ClientPlane):
         return prog(fleet_buf, jnp.stack(gs),
                     np.asarray(lcids, np.int32), np.asarray(wvalid),
                     batches, np.stack(svalid))
+
+
+class PagedClientPlane(ClientPlane):
+    """Active-set client plane: (P, n) device slots over an (M, n) host
+    arena (docs/DESIGN.md §12).
+
+    The fleet buffer this plane hands the runtimes is the SLOT POOL —
+    a (P, n) device array with P ≪ M — backed by a
+    :class:`~repro.core.fleet_store.FleetStore` arena holding every cold
+    row on the host.  All of the base plane's fused expressions run
+    unchanged against the pool; only the addressing changes:
+
+    * blends go through :class:`~repro.core.agg_engine.PagedRowEngine`
+      (``self.engine``), which resolves cid → slot host-side;
+    * ``train_rows`` stages batches by TRUE cid but scatters trained
+      rows by slot (``ensure_resident`` first, so every uploader in the
+      window is pool-resident);
+    * ``init_fleet`` is LAZY: it records the (w_0, seed) recipe and
+      returns a zero pool — a client's row is materialized (trained from
+      the recorded broadcast) the first time it becomes resident.  Rows
+      the schedule never touches are never trained NOR device-resident,
+      which is what lets an M=100k run fit a P=64 pool.  Materialized
+      rows are bit-identical to the dense ``init_fleet`` rows: the
+      per-client batch draws are the same calls, and pow2 step padding
+      is value-neutral under the scan's valid-mask.
+    * fleet-wide rounds (``train_all`` — the §III-B broadcast and FedAvg
+      rounds) stream the whole fleet through the device P rows at a
+      time, writing results to the arena, then hand back a fresh pool
+      (the old pool's rows are all superseded).
+
+    ``active_slots`` defaults to min(M, 64); ``prefetch_depth`` bounds
+    the exact-prefetch pipeline (``FleetStore.plan``/``adopt``) the
+    compiled-loop runner drives.
+    """
+
+    paged = True
+
+    def __init__(self, engine: AggEngine, fleet: Sequence[ClientSpec],
+                 step_fn: StepFn, batch_fn: BatchFn, *,
+                 active_slots: Optional[int] = None,
+                 prefetch_depth: int = 2, **plane_kw):
+        super().__init__(engine, fleet, step_fn, batch_fn, **plane_kw)
+        from repro.core.agg_engine import PagedRowEngine
+        from repro.core.fleet_store import FleetStore
+
+        P = int(active_slots) if active_slots else min(self.M, 64)
+        self.store = FleetStore(self.M, engine.n, P, engine.storage_dtype,
+                                prefetch_depth=prefetch_depth)
+        self.P = self.store.P
+        self.engine = PagedRowEngine(engine, self)
+        self._base_engine = engine
+        self._init_recipe = None            # (w0 numpy, seed) for lazy rows
+
+    # -- addressing ----------------------------------------------------------
+    def slot_index(self, cid: int) -> int:
+        s = int(self.store.slot_map[cid])
+        if s < 0:
+            raise KeyError(
+                f"client {cid} is not pool-resident — ensure_resident() "
+                "must run before any row-addressed blend")
+        return s
+
+    def ensure_resident(self, pool, cids):
+        """Materialize-then-page: lazy-init any first-touch rows into the
+        arena, then make every requested cid slot-resident."""
+        cids = np.unique(np.asarray(cids, np.int64))
+        self._materialize(cids)
+        return self.store.ensure(pool, cids)
+
+    def adopt_chunk(self, pool, cids):
+        """Prefetch-aware twin of ``ensure_resident``: consume the next
+        staged chunk from the store's plan (compiled-loop path)."""
+        cids = np.unique(np.asarray(cids, np.int64))
+        self._materialize(cids)
+        return self.store.adopt(pool, cids)
+
+    def warm_trace(self, cids) -> None:
+        """Materialize every uploader the trace will touch BEFORE the
+        prefetch plan starts staging, so staged copies are never of
+        uninitialized rows (they would be version-rejected anyway, but
+        warm staging makes the prefetch exact instead of wasted)."""
+        self._materialize(np.unique(np.asarray(cids, np.int64)))
+
+    def memory_stats(self) -> dict:
+        return self.store.memory_stats()
+
+    # -- lazy materialization ------------------------------------------------
+    def _materialize(self, cids: np.ndarray) -> None:
+        todo = cids[~self.store.initialized[cids]]
+        if todo.size == 0:
+            return
+        if self._init_recipe is None:
+            raise RuntimeError(
+                "paged plane has no init recipe — call init_fleet() (or "
+                "load_store_state() on resume) before touching rows")
+        g0, seed = self._init_recipe
+        g0 = jnp.asarray(g0)
+        for a in range(0, todo.size, self.P):
+            chunk = todo[a:a + self.P]
+            rows = self._train_chunk(g0, chunk, seed, None)
+            self.store.write_rows(chunk, rows)
+            self.store.note_transient(chunk.size)
+
+    def _train_chunk(self, g_dev, cids: np.ndarray, seed: int,
+                     local_steps_override: Optional[int]) -> np.ndarray:
+        """Train |chunk| rows from one shared global — the streaming unit
+        of lazy init and fleet-wide rounds.  Chunk width pow2-pads by
+        repeating entry 0 (bounds program variants to log2(P))."""
+        staged, nbs = [], []
+        for cid in cids:
+            k = local_steps_override or self.fleet[int(cid)].local_steps
+            b = self._staged_batches(int(cid), k, seed)
+            staged.append(b)
+            nbs.append(_num_batches(b))
+        bucket = self._bucketed(max(nbs))
+        k = len(staged)
+        kb = pow2_bucket(k) if self.bucket else k
+        trees = [_pad_batches(b, bucket) for b in staged]
+        trees += trees[:1] * (kb - k)
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *trees)
+        valid = np.arange(bucket)[None, :] < \
+            np.asarray(nbs + nbs[:1] * (kb - k))[:, None]
+        rows = self._train_all(g_dev, batches, valid)
+        return np.asarray(rows[:k])
+
+    # -- fused local training (slot-addressed) -------------------------------
+    def init_fleet(self, g_flat: jnp.ndarray, seed: int) -> jnp.ndarray:
+        """Record the lazy-init recipe and hand back an empty pool."""
+        self._init_recipe = (np.asarray(g_flat), int(seed))
+        self.store.initialized[:] = False
+        self.store.row_version += 1
+        self.store.cancel_plan()
+        self.store.reset_slots()
+        return jnp.zeros((self.P, self.engine.n),
+                         self._base_engine.storage_dtype)
+
+    def train_all(self, g_flat: jnp.ndarray, seed: int,
+                  local_steps_override: Optional[int] = None) -> jnp.ndarray:
+        """Fleet-wide round, streamed P rows at a time through the
+        device into the arena.  Returns a FRESH empty pool: every old
+        pool row is superseded by the round, so residency restarts."""
+        for a in range(0, self.M, self.P):
+            chunk = np.arange(a, min(a + self.P, self.M))
+            rows = self._train_chunk(g_flat, chunk, seed,
+                                     local_steps_override)
+            self.store.write_rows(chunk, rows)
+            self.store.note_transient(chunk.size)
+        self.store.cancel_plan()
+        self.store.reset_slots()
+        return jnp.zeros((self.P, self.engine.n),
+                         self._base_engine.storage_dtype)
+
+    def seed_store_from_staged(self, g_flat, staged_fleet) -> None:
+        """Arena-resident fleet round from a pre-staged ``_stage_fleet``
+        batch stack (the sweep plane's init/broadcast path — the staging
+        and its fleet-wide bucket are shared with the dense twin, so the
+        rows match ``train_all_runs`` bit-for-bit)."""
+        batches, valid = staged_fleet
+        for a in range(0, self.M, self.P):
+            hi = min(a + self.P, self.M)
+            b = jax.tree.map(lambda x: x[a:hi], batches)
+            v = valid[a:hi]
+            k = hi - a
+            kb = pow2_bucket(k) if self.bucket else k
+            if kb > k:
+                b = jax.tree.map(
+                    lambda x: np.concatenate(
+                        [x, np.repeat(x[:1], kb - k, axis=0)]), b)
+                v = np.concatenate([v, np.repeat(v[:1], kb - k, axis=0)])
+            rows = self._train_all(g_flat, b, v)
+            self.store.write_rows(np.arange(a, hi), np.asarray(rows)[:k])
+            self.store.note_transient(k)
+        self.store.cancel_plan()
+        self.store.reset_slots()
+
+    def train_row(self, fleet_buf: jnp.ndarray, g_flat: jnp.ndarray,
+                  cid: int, num_steps: int, seed: int) -> jnp.ndarray:
+        fleet_buf = self.ensure_resident(fleet_buf, [cid])
+        batches, valid = self._stage_one(cid, num_steps, seed)
+        self.store.mark_dirty(np.asarray([cid]))
+        return self._train_row(fleet_buf, g_flat,
+                               jnp.int32(self.slot_index(cid)),
+                               batches, valid)
+
+    def train_rows(self, fleet_buf: jnp.ndarray,
+                   entries: Sequence) -> jnp.ndarray:
+        """Event-window batched retrain against the slot pool: batches
+        stage by TRUE cid, trained rows scatter by slot.  Windows wider
+        than P split into P-sized chunks (each chunk ensures residency
+        before its launch)."""
+        cids = [e[0] for e in entries]
+        if len(set(cids)) != len(cids):
+            raise ValueError("event-window entries must have distinct cids")
+        for a in range(0, len(entries), self.P):
+            chunk = entries[a:a + self.P]
+            ccids = np.asarray([e[0] for e in chunk], np.int64)
+            fleet_buf = self.ensure_resident(fleet_buf, ccids)
+            fleet_buf = self._train_rows_paged(fleet_buf, chunk)
+            self.store.mark_dirty(ccids)
+        return fleet_buf
+
+    def _train_rows_paged(self, pool, entries: Sequence) -> jnp.ndarray:
+        staged = [self._staged_batches(cid, k, seed)
+                  for cid, _, k, seed in entries]
+        nbs = [_num_batches(b) for b in staged]
+        nb_bucket = self._bucketed(max(nbs))
+        W = len(entries)
+        w_bucket = pow2_bucket(W) if self.bucket else W
+        pad = w_bucket - W
+        batches = [_pad_batches(b, nb_bucket) for b in staged]
+        batches += [batches[0]] * pad
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *batches)
+        valid = np.arange(nb_bucket)[None, :] < \
+            np.asarray(nbs + nbs[:1] * pad)[:, None]
+        slots = [self.slot_index(e[0]) for e in entries]
+        slots_arr = jnp.asarray(slots + slots[:1] * pad, jnp.int32)
+        gs = jnp.stack([e[1] for e in entries]
+                       + [entries[0][1]] * pad)
+        return self._train_rows(pool, gs, slots_arr, batches, valid)
+
+    # -- fleet-wide weighted sum (the FedAvg-cycle consumer) -----------------
+    def fleet_weighted_sum(self, coef0, g_flat, coefs, pool) -> jnp.ndarray:
+        """w ← c0·w + Σ c_m·arena[m] as a chunked f32 accumulation —
+        the pool flushes first so dirty rows contribute their current
+        values.  Matches the dense single tensordot ≤1e-5 (partial-sum
+        reordering only)."""
+        self.store.flush(pool)
+        coefs = np.asarray(coefs, np.float32)
+        if coefs.shape[0] != self.M:
+            raise ValueError(
+                f"fleet weighted sum needs one coefficient per client "
+                f"({self.M}), got {coefs.shape[0]}")
+        if "_fws_acc" not in self.__dict__:
+            def acc_fn(acc, rows, cf):
+                return acc + jnp.tensordot(cf, rows.astype(jnp.float32),
+                                           axes=(0, 0))
+            self._fws_acc = jax.jit(acc_fn)
+        acc = jnp.float32(coef0) * g_flat.astype(jnp.float32)
+        C = self.P
+        for a in range(0, self.M, C):
+            hi = min(a + C, self.M)
+            rows = self.store.arena[a:hi]
+            cf = coefs[a:hi]
+            if hi - a < C:                     # fixed chunk shape
+                padn = C - (hi - a)
+                rows = np.concatenate(
+                    [rows, np.zeros((padn, self.store.n),
+                                    self.store.dtype)])
+                cf = np.concatenate([cf, np.zeros(padn, np.float32)])
+            self.store.note_transient(C)
+            acc = self._fws_acc(acc, rows, cf)
+        return acc.astype(self._base_engine.storage_dtype)
+
+    # -- checkpoint round-trip ----------------------------------------------
+    def store_state(self, pool) -> dict:
+        """Spill the store (flushed arena + slot table + counters + the
+        lazy-init recipe) for ``ckpt.save_afl_state``'s ``fleet_store``
+        extra."""
+        st = self.store.state_dict(pool)
+        g0, seed = self._init_recipe if self._init_recipe is not None \
+            else (np.zeros(self.store.n, self.store.dtype), 0)
+        st["init_g"] = np.asarray(g0)
+        st["init_seed"] = np.asarray(seed, np.int64)
+        return st
+
+    def load_store_state(self, state: dict) -> None:
+        self.store.load_state(state)
+        self._init_recipe = (np.asarray(state["init_g"]),
+                             int(np.asarray(state["init_seed"])))
+
+
+def build_plane(engine: AggEngine, fleet: Sequence[ClientSpec],
+                step_fn: StepFn, batch_fn: BatchFn, *,
+                sharded: bool = False, store: str = "dense",
+                active_slots: Optional[int] = None,
+                prefetch_depth: int = 2,
+                window_cap: Optional[int] = None, **plane_kw):
+    """Single constructor for every plane flavor — the resolution point
+    tasks route ``PlaneConfig`` through (``store`` / ``active_slots`` /
+    ``prefetch_depth`` arrive from ``RunConfig.plane``; ``sharded`` from
+    ``plane.kind``)."""
+    if store not in ("dense", "paged"):
+        raise ValueError(f"plane store must be dense|paged, got '{store}'")
+    if store == "paged":
+        if sharded:
+            raise ValueError(
+                "paged store and sharded plane are mutually exclusive — "
+                "a paged pool is single-device by construction")
+        plane = PagedClientPlane(engine, fleet, step_fn, batch_fn,
+                                 active_slots=active_slots,
+                                 prefetch_depth=prefetch_depth, **plane_kw)
+        plane.window_cap = window_cap
+        return plane
+    if sharded:
+        return ShardedClientPlane(engine, fleet, step_fn, batch_fn,
+                                  window_cap=window_cap, **plane_kw)
+    plane = ClientPlane(engine, fleet, step_fn, batch_fn, **plane_kw)
+    plane.window_cap = window_cap
+    return plane

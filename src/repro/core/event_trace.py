@@ -589,6 +589,36 @@ def stage_trace_events(plane, trace: EventTrace, start: int = 0):
     return staged
 
 
+def split_for_slots(cid_cols, s0: int, s1: int, cap: int
+                    ) -> List[Tuple[int, int]]:
+    """Split ``[s0, s1)`` into sub-ranges each naming ≤ ``cap`` unique
+    cids per run column — the paged plane's launch-width constraint (the
+    slot pool holds at most P rows, so one scan segment may address at
+    most P distinct clients).  Greedy left-to-right: cut immediately
+    before the event that would push any column past the cap, which is
+    deterministic and replayable (the prefetch plan and the executor
+    derive the identical sub-ranges).  ``cid_cols`` is the full-trace
+    cid array, (E,) single-run or (E, R) run-stacked."""
+    cols = np.asarray(cid_cols)
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    R = cols.shape[1]
+    out: List[Tuple[int, int]] = []
+    t0 = s0
+    seen: List[set] = [set() for _ in range(R)]
+    for i in range(s0, s1):
+        grown = [seen[k] | {int(cols[i, k])} for k in range(R)]
+        if i > t0 and max(len(s) for s in grown) > cap:
+            out.append((t0, i))
+            t0 = i
+            seen = [{int(cols[i, k])} for k in range(R)]
+        else:
+            seen = grown
+    if s1 > t0:
+        out.append((t0, s1))
+    return out
+
+
 def boundary_cuts(trace: EventTrace, *, start: int = 0,
                   eval_every: Optional[int] = None) -> List[int]:
     """Chunk boundaries of ``trace[start:]``: eval points (``js`` divisible
@@ -641,6 +671,7 @@ class CompiledLoopRunner:
         self.server_lr = server_lr
         self.min_run = min_run
         self.sharded = getattr(plane, "mesh", None) is not None
+        self.paged = getattr(plane, "paged", False)
         self.guards = _guards.resolve_guards(guards)
         self._s_update = None
         if server_opt is not None:
@@ -801,6 +832,15 @@ class CompiledLoopRunner:
         # same-client repeats sum their folded mass (rows are constant
         # across the segment); dropped events have β=1 → zero mass
         np.add.at(cvec, trace.cids[s0:s1], coefs)
+        if self.paged:
+            # the M-wide MAC runs over the host arena, streamed P rows
+            # at a time (uninitialized rows carry zero mass — their cid
+            # never uploaded in this segment)
+            self.launches += 1
+            self.segments += 1
+            g_flat = self.plane.fleet_weighted_sum(
+                np.float32(c0), g_flat, cvec.astype(np.float32), fleet_buf)
+            return fleet_buf, g_flat, opt_state, gstate
         key = ("fold", self._prog_ctx)
         if key not in self._progs:
             def fold(g, buf, c0_, cv):
@@ -821,15 +861,39 @@ class CompiledLoopRunner:
         if self._can_fold(trace):
             return self._run_folded(trace, s0, s1, fleet_buf, g_flat,
                                     opt_state, gstate)
-        cids, coefs, evalid, batches, svalid = segment_inputs(
-            trace, staged, s0, s1, s_bucket,
-            fedopt=self._s_update is not None)
-        prog = self._prog_for(retrain, batches, opt_state)
-        self.launches += 1
-        self.segments += 1
-        fleet_buf, g_flat, opt_state, gstate = prog(
-            fleet_buf, g_flat, opt_state, gstate, cids, coefs, evalid,
-            batches, svalid)
+        fedopt = self._s_update is not None
+        if not self.paged:
+            cids, coefs, evalid, batches, svalid = segment_inputs(
+                trace, staged, s0, s1, s_bucket, fedopt=fedopt)
+            prog = self._prog_for(retrain, batches, opt_state)
+            self.launches += 1
+            self.segments += 1
+            fleet_buf, g_flat, opt_state, gstate = prog(
+                fleet_buf, g_flat, opt_state, gstate, cids, coefs, evalid,
+                batches, svalid)
+            return fleet_buf, g_flat, opt_state, gstate
+        # paged plane: sub-split so each launch addresses ≤ P distinct
+        # clients, adopt the prefetch-staged rows, and remap the scan's
+        # cid stream to slot indices (DESIGN.md §12).  Pad / non-resident
+        # entries map to slot 0 — their evalid=False masks the retrain
+        # write-back and their identity coefs make the blend a no-op, so
+        # the slot-0 row's value never matters.
+        plane = self.plane
+        for t0, t1 in split_for_slots(trace.cids, s0, s1, plane.P):
+            ccids = np.unique(trace.cids[t0:t1])
+            fleet_buf = plane.adopt_chunk(fleet_buf, ccids)
+            cids, coefs, evalid, batches, svalid = segment_inputs(
+                trace, staged, t0, t1, s_bucket, fedopt=fedopt)
+            slots = plane.store.slots_of(cids)
+            cids = np.where(slots >= 0, slots, 0).astype(np.int32)
+            prog = self._prog_for(retrain, batches, opt_state)
+            self.launches += 1
+            self.segments += 1
+            fleet_buf, g_flat, opt_state, gstate = prog(
+                fleet_buf, g_flat, opt_state, gstate, cids, coefs, evalid,
+                batches, svalid)
+            if retrain:
+                plane.store.mark_dirty(ccids)
         return fleet_buf, g_flat, opt_state, gstate
 
     def init_guard_state(self):
@@ -868,6 +932,10 @@ class CompiledLoopRunner:
         cuts = boundary_cuts(
             trace, start=start,
             eval_every=eval_every if eval_fn is not None else None)
+        if self.paged:
+            # lazy-init every uploader's row BEFORE prefetch staging —
+            # the compiled trace names them all, so this is exact
+            self.plane.warm_trace(trace.cids[start:])
         last_save = start
 
         def _save(cursor):
@@ -882,8 +950,21 @@ class CompiledLoopRunner:
         for b in cuts:
             if b <= a:
                 continue
-            for s0, s1, bucket in group_segments(
-                    trace.s_buckets[a:b], min_run=self.min_run):
+            segs = group_segments(trace.s_buckets[a:b],
+                                  min_run=self.min_run)
+            if self.paged and not self._can_fold(trace):
+                # exact prefetch: the async stager walks THIS chunk's
+                # sub-segment plan (a boundary broadcast rewrites the
+                # whole arena and cancels any plan, so plans don't span
+                # cuts); each _run_segment adopt pops these in order.
+                # Folded blend-only traces never touch the pool, so they
+                # skip staging entirely.
+                self.plane.store.plan([
+                    np.unique(trace.cids[t0:t1])
+                    for s0, s1, _ in segs
+                    for t0, t1 in split_for_slots(
+                        trace.cids, a + s0, a + s1, self.plane.P)])
+            for s0, s1, bucket in segs:
                 fleet_buf, g_flat, opt_state, gstate = self._run_segment(
                     trace, staged, a + s0, a + s1, bucket,
                     fleet_buf, g_flat, opt_state, gstate)

@@ -1,0 +1,353 @@
+"""Host-backed paged fleet store — P device-resident rows over M clients.
+
+The dense client plane (``core/client_plane.py``) materializes the whole
+fleet as one (M, n) device buffer, which caps M at what device memory
+holds.  The paper's scheduler, however, only ever touches the scheduled /
+in-flight subset of clients — at any instant the working set is tiny
+compared to the population.  This module supplies the storage tier that
+exploits that (docs/DESIGN.md §12):
+
+* **Arena** — every client row lives in a host-side pinned numpy arena
+  ``(M, n)`` in the engine's storage dtype.  The arena is the single
+  source of truth for cold rows; device memory never holds more than the
+  active set plus a bounded staging transient.
+* **Slot pool** — the device carries a ``(P, n)`` row pool (P ≪ M).  A
+  slot table maps ``cid -> slot`` (and back); the blend / train
+  expressions of the engine and plane run unchanged against the pool,
+  addressed by SLOT index instead of global row.
+* **LRU + horizon-aware eviction** — when a row needs a slot and none is
+  free, the least-recently-used resident row is evicted (written back to
+  the arena if dirty).  Rows named in the *upcoming trace horizon* (the
+  planned prefetch chunks) are preferred survivors: a horizon row is only
+  evicted when every other candidate is also in the horizon.
+* **Exact prefetch** — because ``compile_afl_trace`` knows every future
+  uploader, the store's prefetch is exact, not speculative: ``plan()``
+  takes the ordered per-segment cid chunks, and a single-worker stager
+  thread walks them ``prefetch_depth`` ahead, staging each chunk's arena
+  rows onto the device (``jax.device_put``) while the previous segment's
+  donated scan retires.  ``adopt()`` consumes the next staged chunk;
+  ``prefetch_stalls`` counts the adoptions that had to wait.
+* **Staleness safety by versioning** — every arena write bumps a per-row
+  version.  A staged copy is only installed if (a) the cid is not
+  already resident (the pool row is at least as fresh) and (b) its
+  version still matches the gather; otherwise the row is re-gathered
+  synchronously.  Correctness therefore never depends on eviction order
+  or on callers invalidating the prefetch pipeline by hand.
+
+Checkpointing: ``state_dict()`` flushes dirty pool rows into the arena
+and returns the arena + slot assignment (plain numpy — it rides the
+PR 7 ``ckpt.save_afl_state`` payload as the ``fleet_store`` extra);
+``load_state()`` restores them and rebuilds the slot table.  LRU order
+is not persisted — it is a performance hint, not a value.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agg_engine import pow2_bucket
+
+
+@jax.jit
+def _scatter_rows(pool, slots, rows):
+    """Install host rows into pool slots (duplicate pad slots always
+    carry identical values, so the undefined duplicate-write order
+    cannot corrupt a row)."""
+    return pool.at[slots].set(rows.astype(pool.dtype))
+
+
+@jax.jit
+def _scatter_staged(pool, slots, staged, idx):
+    """Install a subset of an already-device-resident staged chunk."""
+    return pool.at[slots].set(staged[idx].astype(pool.dtype))
+
+
+def _pow2_pad(arrs: List[np.ndarray]):
+    """Pad every array's leading axis to the shared pow2 bucket by
+    repeating entry 0 — bounds the install-scatter program variants to
+    log2(P)."""
+    k = arrs[0].shape[0]
+    kb = pow2_bucket(k)
+    if kb == k:
+        return arrs
+    return [np.concatenate([a, np.repeat(a[:1], kb - k, axis=0)])
+            for a in arrs]
+
+
+class FleetStore:
+    """Active-set row store: (P, n) device slots over an (M, n) arena."""
+
+    def __init__(self, M: int, n: int, P: int, dtype, *,
+                 prefetch_depth: int = 2):
+        if P < 1:
+            raise ValueError("active_slots must be >= 1")
+        if prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        self.M = int(M)
+        self.n = int(n)
+        self.P = min(int(P), self.M)
+        self.dtype = np.dtype(dtype)
+        # host arena: the cold tier, single source of truth off-device
+        self.arena = np.zeros((self.M, self.n), self.dtype)
+        self.initialized = np.zeros(self.M, bool)
+        self.row_version = np.zeros(self.M, np.int64)
+        # slot table (both directions; -1 = free / not resident)
+        self.slot_cids = np.full(self.P, -1, np.int64)
+        self.slot_map = np.full(self.M, -1, np.int32)
+        self.dirty = np.zeros(self.P, bool)
+        self.last_used = np.zeros(self.P, np.int64)
+        self._tick = 0
+        # exact-prefetch pipeline
+        self.prefetch_depth = int(prefetch_depth)
+        self._plan: collections.deque = collections.deque()
+        self._inflight: collections.deque = collections.deque()
+        self._horizon: collections.Counter = collections.Counter()
+        self._exec: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        # instrumentation (surfaces in run stats, DESIGN.md §12)
+        self.peak_device_rows = 0
+        self.prefetch_stalls = 0
+        self.evictions = 0
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def resident(self) -> int:
+        return int((self.slot_cids >= 0).sum())
+
+    def note_transient(self, extra: int) -> None:
+        """Account ``extra`` device rows living alongside the pool for
+        the duration of one launch (chunked materialization / fleet-wide
+        rounds stage at most one chunk at a time)."""
+        self.peak_device_rows = max(self.peak_device_rows,
+                                    self.resident + int(extra))
+
+    def _touch(self, cids: np.ndarray) -> None:
+        self._tick += 1
+        slots = self.slot_map[cids]
+        self.last_used[slots[slots >= 0]] = self._tick
+
+    def slots_of(self, cids) -> np.ndarray:
+        """cid -> slot for an array of cids (-1 where not resident)."""
+        return self.slot_map[np.asarray(cids, np.int64)]
+
+    def reset_slots(self) -> None:
+        """Drop all residency WITHOUT write-back (callers use this after
+        a wholesale arena rewrite, when every pool row is dead)."""
+        live = self.slot_cids >= 0
+        self.slot_map[self.slot_cids[live]] = -1
+        self.slot_cids[:] = -1
+        self.dirty[:] = False
+        self.last_used[:] = 0
+
+    def write_rows(self, cids: np.ndarray, rows: np.ndarray) -> None:
+        """Authoritative arena write (materialization / fleet rounds):
+        marks the rows initialized and bumps their versions so any staged
+        prefetch copy of them is rejected at adopt time."""
+        cids = np.asarray(cids, np.int64)
+        self.arena[cids] = np.asarray(rows, self.dtype)
+        self.initialized[cids] = True
+        self.row_version[cids] += 1
+
+    def mark_dirty(self, cids) -> None:
+        slots = self.slot_map[np.asarray(cids, np.int64)]
+        self.dirty[slots[slots >= 0]] = True
+
+    def flush(self, pool) -> None:
+        """Write every dirty resident row back to the arena (device ->
+        host).  Required before any consumer reads the arena as the full
+        fleet (checkpoints, fleet-wide weighted sums)."""
+        ds = np.nonzero(self.dirty)[0]
+        if ds.size == 0:
+            return
+        rows = np.asarray(pool[ds])
+        cids = self.slot_cids[ds]
+        self.arena[cids] = rows.astype(self.dtype)
+        self.row_version[cids] += 1
+        self.initialized[cids] = True
+        self.dirty[ds] = False
+
+    # -- residency -----------------------------------------------------------
+    def _alloc(self, pool, missing: np.ndarray, protect: np.ndarray):
+        """Assign a slot to every cid in ``missing``: free slots first,
+        then horizon-aware LRU eviction (never a slot whose cid is in
+        ``protect``; horizon rows only when no non-horizon candidate
+        remains).  Dirty victims are written back in one gather."""
+        free = np.nonzero(self.slot_cids < 0)[0]
+        need = missing.size - free.size
+        victims = np.empty(0, np.int64)
+        if need > 0:
+            occ = np.nonzero(self.slot_cids >= 0)[0]
+            cand = occ[~np.isin(self.slot_cids[occ], protect)]
+            if cand.size < need:
+                raise RuntimeError(
+                    f"active-set exhausted: {missing.size} rows need slots "
+                    f"at once with {free.size} free of P={self.P} — raise "
+                    "plane.active_slots")
+            in_horizon = np.asarray(
+                [int(self.slot_cids[s]) in self._horizon for s in cand])
+            order = np.lexsort((self.last_used[cand], in_horizon))
+            victims = cand[order[:need]]
+            dirty_v = victims[self.dirty[victims]]
+            if dirty_v.size:
+                back = np.asarray(pool[dirty_v])
+                wcids = self.slot_cids[dirty_v]
+                self.arena[wcids] = back.astype(self.dtype)
+                self.row_version[wcids] += 1
+                self.initialized[wcids] = True
+            self.slot_map[self.slot_cids[victims]] = -1
+            self.evictions += int(victims.size)
+        slots = np.concatenate([free, victims])[:missing.size]
+        self.slot_cids[slots] = missing
+        self.slot_map[missing] = slots.astype(np.int32)
+        self.dirty[slots] = False
+        self._tick += 1
+        self.last_used[slots] = self._tick
+        self.peak_device_rows = max(self.peak_device_rows, self.resident)
+        return slots
+
+    def _install(self, pool, slots: np.ndarray, rows: np.ndarray):
+        slots, rows = _pow2_pad([slots.astype(np.int32), rows])
+        return _scatter_rows(pool, jnp.asarray(slots), rows)
+
+    def ensure(self, pool, cids):
+        """Synchronous residency: after this call every cid in ``cids``
+        maps to a pool slot holding its current row.  Returns the updated
+        pool.  ``cids`` must fit: |unique(cids)| <= P."""
+        cids = np.unique(np.asarray(cids, np.int64))
+        if cids.size > self.P:
+            raise ValueError(
+                f"{cids.size} distinct rows requested at once but the "
+                f"pool holds P={self.P} slots")
+        missing = cids[self.slot_map[cids] < 0]
+        if missing.size:
+            slots = self._alloc(pool, missing, protect=cids)
+            pool = self._install(pool, slots, self.arena[missing])
+        self._touch(cids)
+        return pool
+
+    # -- exact prefetch ------------------------------------------------------
+    def _executor(self) -> concurrent.futures.ThreadPoolExecutor:
+        if self._exec is None:
+            self._exec = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="fleet-stager")
+        return self._exec
+
+    def plan(self, chunks: Sequence[np.ndarray]) -> None:
+        """Load the ordered per-segment cid chunks of the upcoming trace
+        and start staging the first ``prefetch_depth`` of them.  Each
+        chunk is consumed by one matching ``adopt()`` call."""
+        self.cancel_plan()
+        for c in chunks:
+            c = np.unique(np.asarray(c, np.int64))
+            self._plan.append(c)
+            self._horizon.update(c.tolist())
+        self._pump()
+
+    def _pump(self) -> None:
+        while self._plan and len(self._inflight) < self.prefetch_depth:
+            cids = self._plan.popleft()
+            # gather on the caller's thread (arena writes race the
+            # worker otherwise); the worker only pays the device_put
+            rows = self.arena[cids]
+            vers = self.row_version[cids].copy()
+            fut = self._executor().submit(jax.device_put, rows)
+            self._inflight.append((cids, vers, fut))
+
+    def cancel_plan(self) -> None:
+        for _, _, fut in self._inflight:
+            fut.cancel()
+        for cids, _, _ in self._inflight:
+            self._horizon.subtract(cids.tolist())
+        for cids in self._plan:
+            self._horizon.subtract(cids.tolist())
+        self._inflight.clear()
+        self._plan.clear()
+        self._horizon = +self._horizon      # drop zero/negative entries
+
+    def adopt(self, pool, cids):
+        """Consume the next staged chunk (which must be ``cids``) and
+        make it resident.  Rows already resident are skipped (the pool
+        copy is at least as fresh); rows whose arena version moved since
+        staging are re-gathered synchronously.  Falls back to a plain
+        ``ensure`` when no plan is active or the plan desynchronized."""
+        cids = np.unique(np.asarray(cids, np.int64))
+        if not self._inflight:
+            return self.ensure(pool, cids)
+        pcids, vers, fut = self._inflight.popleft()
+        self._horizon.subtract(pcids.tolist())
+        self._horizon = +self._horizon
+        if not np.array_equal(pcids, cids):
+            self.cancel_plan()
+            return self.ensure(pool, cids)
+        if not fut.done():
+            self.prefetch_stalls += 1
+        staged = fut.result()
+        self._pump()
+        miss = np.nonzero(self.slot_map[pcids] < 0)[0]
+        if miss.size:
+            fresh = self.row_version[pcids[miss]] == vers[miss]
+            mf, ms = miss[fresh], miss[~fresh]
+            if mf.size:
+                slots = self._alloc(pool, pcids[mf], protect=pcids)
+                slots, idx = _pow2_pad([slots.astype(np.int32),
+                                        mf.astype(np.int32)])
+                pool = _scatter_staged(pool, jnp.asarray(slots), staged,
+                                       jnp.asarray(idx))
+            if ms.size:
+                slots = self._alloc(pool, pcids[ms], protect=pcids)
+                pool = self._install(pool, slots, self.arena[pcids[ms]])
+        self._touch(pcids)
+        return pool
+
+    # -- checkpoint round-trip ----------------------------------------------
+    def state_dict(self, pool) -> Dict[str, np.ndarray]:
+        """Flush and spill: arena + slot assignment + counters, as plain
+        numpy (rides ``ckpt.save_afl_state`` as the ``fleet_store``
+        extra).  The saved pool (the run's ``fleet_buf``) stays
+        consistent with ``slot_cids`` because the flush happens first."""
+        self.flush(pool)
+        return {"arena": self.arena.copy(),
+                "initialized": self.initialized.copy(),
+                "slot_cids": self.slot_cids.copy(),
+                "peak_device_rows": np.asarray(self.peak_device_rows,
+                                               np.int64),
+                "prefetch_stalls": np.asarray(self.prefetch_stalls,
+                                              np.int64),
+                "evictions": np.asarray(self.evictions, np.int64)}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        arena = np.asarray(state["arena"], self.dtype)
+        if arena.shape != self.arena.shape:
+            raise ValueError(
+                f"fleet_store checkpoint holds a {arena.shape} arena but "
+                f"this plane expects {self.arena.shape}")
+        slot_cids = np.asarray(state["slot_cids"], np.int64)
+        if slot_cids.shape[0] != self.P:
+            raise ValueError(
+                f"fleet_store checkpoint was saved with active_slots="
+                f"{slot_cids.shape[0]} but this plane has {self.P}")
+        self.cancel_plan()
+        self.arena[:] = arena
+        self.initialized[:] = np.asarray(state["initialized"], bool)
+        self.row_version[:] = 0
+        self.slot_cids[:] = slot_cids
+        self.slot_map[:] = -1
+        live = np.nonzero(self.slot_cids >= 0)[0]
+        self.slot_map[self.slot_cids[live]] = live.astype(np.int32)
+        self.dirty[:] = False
+        self.last_used[:] = 0
+        self._tick = 0
+        self.peak_device_rows = int(np.asarray(
+            state.get("peak_device_rows", self.resident)))
+        self.prefetch_stalls = int(np.asarray(
+            state.get("prefetch_stalls", 0)))
+        self.evictions = int(np.asarray(state.get("evictions", 0)))
+
+    def memory_stats(self) -> Dict[str, int]:
+        return {"peak_device_rows": int(self.peak_device_rows),
+                "prefetch_stalls": int(self.prefetch_stalls),
+                "evictions": int(self.evictions)}

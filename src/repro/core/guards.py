@@ -250,6 +250,10 @@ class WindowedGuard:
         """Gather the uploader's current row and decide.  Returns
         ``(ok, row_eff)`` with ``ok`` synced to a host bool; mutates the
         carried guard state exactly like one in-scan step."""
+        if getattr(self.plane, "paged", False):
+            # paged pool: the buffer is slot-addressed (DESIGN.md §12);
+            # the loop ensured residency before calling us
+            cid = self.plane.slot_index(int(cid))
         row32 = self._gather(fleet_buf, jnp.int32(cid))
         ok, row_eff, self.state = self._decide(
             g_flat, row32, self.state, jnp.asarray(True))

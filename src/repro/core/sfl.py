@@ -42,12 +42,19 @@ def run_fedavg(params0, fleet: Sequence[ClientSpec],
                eval_fn: Optional[EvalFn] = None, eval_every: int = 1,
                local_steps_override: Optional[int] = None,
                use_engine: bool = True,
-               client_plane=None, use_client_plane: bool = True,
+               client_plane=None, use_client_plane: Optional[bool] = None,
                seed: int = 0):
     """Legacy keyword entry point — thin shim over ``repro.api``
     (kwargs fold into a :class:`repro.api.RunConfig` and expand back,
-    bit-identically, into :func:`_run_fedavg_impl`)."""
-    from repro.api import RunConfig
+    bit-identically, into :func:`_run_fedavg_impl`).
+
+    ``client_plane`` / ``use_client_plane`` are deprecated here —
+    select the plane through ``RunConfig`` (``repro.api.run``);
+    explicit values warn but resolve to the historical defaults."""
+    from repro.api import RunConfig, resolve_legacy_plane_kwargs
+    client_plane, use_client_plane, _ = resolve_legacy_plane_kwargs(
+        "run_fedavg", client_plane=client_plane,
+        use_client_plane=use_client_plane)
     cfg = RunConfig.from_fedavg_kwargs(
         rounds=rounds, tau_u=tau_u, tau_d=tau_d, eval_every=eval_every,
         local_steps_override=local_steps_override, use_engine=use_engine,

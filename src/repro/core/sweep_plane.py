@@ -414,6 +414,7 @@ class SweepRunner:
                                  batch_sig))
         gcfg = self._run_guards(run)
         return (plane.M, eng.n, str(eng.storage_dtype), eng.mode,
+                getattr(plane, "paged", False), getattr(plane, "P", None),
                 trace.per_event_retrain, run.cuts,
                 tuple(sorted(run.bcast_staged)),
                 self._tree_sig(run.init_staged, lead_axes=0),
@@ -489,6 +490,7 @@ class SweepRunner:
         base = getattr(plane.engine, "base", plane.engine)
         gcfg = self._run_guards(runs_g[0])
         R = len(runs_g)
+        paged = getattr(plane, "paged", False)
         # §III-B blend-only stretches fold to closed form when per-event
         # storage rounding is unobservable (mirrors the compiled-loop
         # runner's gate); guards must observe every row, so folding is
@@ -505,6 +507,9 @@ class SweepRunner:
             start_chunk = int(np.asarray(flight["chunk"]))
             g = jnp.asarray(flight["g"])
             bufs = jnp.asarray(flight["bufs"])
+            if paged:
+                for k, r in enumerate(runs_g):
+                    r.plane.load_store_state(flight["stores"][str(k)])
             opt = (jax.tree.map(jnp.asarray, flight["opt"])
                    if fedopt else ())
             gs = (jax.tree.map(jnp.asarray, flight["gstate"])
@@ -523,14 +528,26 @@ class SweepRunner:
                 # the t=0 point evaluates the runs' initial models, as
                 # run_afl records eval_fn(params0) before any event
                 self._record_eval(runs_g, g)
-            init_b = jax.tree.map(lambda *xs: np.stack(xs),
-                                  *[r.init_staged[0] for r in runs_g])
-            init_v = np.stack([r.init_staged[1] for r in runs_g])
-            bufs = plane.train_all_runs(g, init_b, init_v)
+            if paged:
+                # each run's arena takes the full fleet round (streamed
+                # through the device P rows at a time); the stacked pool
+                # starts empty — residency is demand-paged per segment
+                for k, r in enumerate(runs_g):
+                    r.plane.seed_store_from_staged(g[k], r.init_staged)
+                bufs = jnp.zeros((R, plane.P, base.n), base.storage_dtype)
+            else:
+                init_b = jax.tree.map(lambda *xs: np.stack(xs),
+                                      *[r.init_staged[0] for r in runs_g])
+                init_v = np.stack([r.init_staged[1] for r in runs_g])
+                bufs = plane.train_all_runs(g, init_b, init_v)
             self.launches += 1
         traces = [r.trace for r in runs_g]
         stageds = [r.staged for r in runs_g]
         plan = runs_g[0].plan
+        # (E, R) cid columns: the paged sub-split cuts where ANY run's
+        # column would exceed the slot pool
+        cid_cols = (np.stack([t.cids for t in traces], axis=1)
+                    if paged else None)
         for ci, (a, b, segs) in enumerate(plan):
             if ci < start_chunk:
                 continue
@@ -543,25 +560,60 @@ class SweepRunner:
                             t.betas[s0:s1])
                         c0s[k] = c0
                         np.add.at(cvs[k], t.cids[s0:s1], coefs)
-                    g = self._fold_prog(plane)(
-                        g, bufs, c0s, cvs.astype(np.float32))
+                    if paged:
+                        # per-run arena MAC (the compiled runner's paged
+                        # fold, one run at a time)
+                        g = jnp.stack([
+                            r.plane.fleet_weighted_sum(
+                                np.float32(c0s[k]), g[k],
+                                cvs[k].astype(np.float32), bufs[k])
+                            for k, r in enumerate(runs_g)])
+                    else:
+                        g = self._fold_prog(plane)(
+                            g, bufs, c0s, cvs.astype(np.float32))
                     self.launches += 1
                     self.segments += 1
                     continue
-                cids, coefs, evalid, batches, svalid = \
-                    et.stack_segment_inputs(traces, stageds, s0, s1,
-                                            bucket, fedopt=fedopt)
-                prog = self._seg_prog(plane, retrain, gcfg)
-                bufs, g, opt, gs = prog(bufs, g, opt, gs, cids, coefs,
-                                        evalid, batches, svalid)
-                self.launches += 1
-                self.segments += 1
+                subs = (et.split_for_slots(cid_cols, s0, s1, plane.P)
+                        if paged else [(s0, s1)])
+                for t0, t1 in subs:
+                    if paged:
+                        # demand-page each run's uploaders, then remap
+                        # the run's cid column to slot indices
+                        for k, r in enumerate(runs_g):
+                            col = np.unique(cid_cols[t0:t1, k])
+                            pk = r.plane.ensure_resident(bufs[k], col)
+                            bufs = bufs.at[k].set(pk)
+                    cids, coefs, evalid, batches, svalid = \
+                        et.stack_segment_inputs(traces, stageds, t0, t1,
+                                                bucket, fedopt=fedopt)
+                    if paged:
+                        for k, r in enumerate(runs_g):
+                            slots = r.plane.store.slots_of(cids[:, k])
+                            cids[:, k] = np.where(slots >= 0, slots,
+                                                  0).astype(np.int32)
+                    prog = self._seg_prog(plane, retrain, gcfg)
+                    bufs, g, opt, gs = prog(bufs, g, opt, gs, cids, coefs,
+                                            evalid, batches, svalid)
+                    self.launches += 1
+                    self.segments += 1
+                    if paged and retrain:
+                        for k, r in enumerate(runs_g):
+                            r.plane.store.mark_dirty(
+                                np.unique(cid_cols[t0:t1, k]))
             i = b - 1
             if trace0.broadcast[i]:
-                bb = jax.tree.map(lambda *xs: np.stack(xs),
-                                  *[r.bcast_staged[i][0] for r in runs_g])
-                bv = np.stack([r.bcast_staged[i][1] for r in runs_g])
-                bufs = plane.train_all_runs(g, bb, bv)
+                if paged:
+                    for k, r in enumerate(runs_g):
+                        r.plane.seed_store_from_staged(
+                            g[k], r.bcast_staged[i])
+                    bufs = jnp.zeros_like(bufs)
+                else:
+                    bb = jax.tree.map(
+                        lambda *xs: np.stack(xs),
+                        *[r.bcast_staged[i][0] for r in runs_g])
+                    bv = np.stack([r.bcast_staged[i][1] for r in runs_g])
+                    bufs = plane.train_all_runs(g, bb, bv)
                 self.launches += 1
             if self.eval_flat is not None and \
                     trace0.js[i] % self.eval_every == 0:
@@ -593,6 +645,9 @@ class SweepRunner:
         :meth:`_execute` needs to re-enter the cell at ``chunk``."""
         fl = {"chunk": np.int64(chunk), "bufs": np.asarray(bufs),
               "g": np.asarray(g)}
+        if getattr(runs_g[0].plane, "paged", False):
+            fl["stores"] = {str(k): r.plane.store_state(bufs[k])
+                            for k, r in enumerate(runs_g)}
         if fedopt:
             fl["opt"] = jax.tree.map(np.asarray, opt)
         if gcfg is not None:
@@ -726,6 +781,11 @@ class SweepRunner:
                  "eval_launches": self.eval_launches,
                  "groups": self.groups, "runs": len(self.runs),
                  "variants": self.variants()}
+        mems = [r.plane.memory_stats() for r in self.runs]
+        stats["peak_device_rows"] = max(
+            m["peak_device_rows"] for m in mems)
+        stats["prefetch_stalls"] = sum(
+            m["prefetch_stalls"] for m in mems)
         if any(r.guard_counts for r in self.runs):
             for k in ("guard_rejects", "guard_nonfinite",
                       "guard_norm_outliers", "guard_clipped"):
@@ -740,6 +800,7 @@ def run_sweep(task, scenarios: Sequence, seeds: Sequence[int], *,
               sub_batch: Optional[int] = None,
               server_opt: Optional[str] = None, server_lr: float = 1.0,
               guards: Optional[Any] = None,
+              plane_kw: Optional[dict] = None,
               checkpoint_dir: Optional[str] = None,
               autosave_every: Optional[int] = None, keep_last: int = 3,
               resume: bool = False, stop_flag=None) -> SweepResult:
@@ -750,7 +811,8 @@ def run_sweep(task, scenarios: Sequence, seeds: Sequence[int], *,
     events and ``resume=True`` restarts mid-grid from the newest valid
     checkpoint (completed cells restored, the in-flight cell re-entered
     at its last chunk boundary)."""
-    runs = build_task_runs(task, scenarios, seeds, iterations=iterations)
+    runs = build_task_runs(task, scenarios, seeds, iterations=iterations,
+                           plane_kw=plane_kw)
     eval_flat = (task.eval_flat_fn(runs[0].plane.engine)
                  if with_eval else None)
     runner = SweepRunner(runs, eval_flat=eval_flat, eval_every=eval_every,

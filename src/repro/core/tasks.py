@@ -146,7 +146,7 @@ class CNNTask:
         B_m samples (which ``local_train_fn`` also honors once the plane
         has registered the per-client sizes)."""
         from repro.core.agg_engine import engine_for
-        from repro.core.client_plane import ClientPlane, ShardedClientPlane
+        from repro.core.client_plane import build_plane
 
         # rebuilt per fleet — stale per-cid sizes from a previous fleet
         # must not leak into this one's batch draws
@@ -185,10 +185,10 @@ class CNNTask:
         # plane accepts fleets with declared per-client batch sizes
         step_fn.supports_sample_mask = True
 
-        cls = ShardedClientPlane if sharded else ClientPlane
         batch_fn = (self._global_batch_indices if clients is None
                     else self._batch_indices_fn(clients))
-        return cls(engine, fleet, step_fn, batch_fn, **plane_kw)
+        return build_plane(engine, fleet, step_fn, batch_fn,
+                           sharded=sharded, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"accuracy": float(self._eval(params))}
@@ -287,7 +287,7 @@ class LMTask:
         and plane-off consume identical token sequences.
         ``sharded=True`` builds the fleet-mesh plane (DESIGN.md §6)."""
         from repro.core.agg_engine import engine_for
-        from repro.core.client_plane import ClientPlane, ShardedClientPlane
+        from repro.core.client_plane import build_plane
 
         cfg, lr, seq_len = self.cfg, self.lr, self.seq_len
         template = jax.eval_shape(
@@ -313,8 +313,8 @@ class LMTask:
             return {"tokens": np.stack([b["tokens"] for b in bs]),
                     "labels": np.stack([b["labels"] for b in bs])}
 
-        cls = ShardedClientPlane if sharded else ClientPlane
-        return cls(engine, fleet, step_fn, batch_fn, **plane_kw)
+        return build_plane(engine, fleet, step_fn, batch_fn,
+                           sharded=sharded, **plane_kw)
 
     def eval_fn(self, params) -> Dict[str, float]:
         return {"loss": float(self._eval(params))}

@@ -162,7 +162,7 @@ def check_toy_bf16(report: dict) -> None:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.afl import run_afl
+    from repro.core.afl import _run_afl_impl
     from repro.core.agg_engine import AggEngine
     from repro.core.client_plane import ClientPlane, ShardedClientPlane
     from repro.core.scheduler import make_fleet
@@ -186,12 +186,12 @@ def check_toy_bf16(report: dict) -> None:
 
     kw = dict(algorithm="csmaafl", iterations=3 * M, tau_u=0.1, tau_d=0.1,
               gamma=0.4)
-    r_base = run_afl(w0, fleet, None,
-                     client_plane=ClientPlane(eng, fleet, step, batch_fn),
-                     **kw)
-    r_shard = run_afl(w0, fleet, None,
-                      client_plane=ShardedClientPlane(eng, fleet, step,
-                                                      batch_fn), **kw)
+    r_base = _run_afl_impl(w0, fleet, None,
+                           client_plane=ClientPlane(eng, fleet, step,
+                                                    batch_fn), **kw)
+    r_shard = _run_afl_impl(w0, fleet, None,
+                            client_plane=ShardedClientPlane(eng, fleet, step,
+                                                            batch_fn), **kw)
     report["afl_bf16_parity"] = _maxdiff(r_shard.params, r_base.params)
 
 
@@ -324,7 +324,7 @@ def check_smoke(report: dict, M: int) -> None:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.afl import run_afl
+    from repro.core.afl import _run_afl_impl
     from repro.core.agg_engine import AggEngine
     from repro.core.client_plane import ShardedClientPlane
     from repro.core.scheduler import make_fleet
@@ -344,8 +344,9 @@ def check_smoke(report: dict, M: int) -> None:
                                lambda f, t: f - 0.1 * (f - t), batch_fn,
                                window_cap=256)
     t0 = time.time()
-    r = run_afl(w0, fleet, None, client_plane=plane, algorithm="csmaafl",
-                iterations=300, tau_u=0.1, tau_d=0.1, gamma=0.4)
+    r = _run_afl_impl(w0, fleet, None, client_plane=plane,
+                      algorithm="csmaafl", iterations=300, tau_u=0.1,
+                      tau_d=0.1, gamma=0.4)
     jax.block_until_ready(r.params)
     report["smoke_M"] = M
     report["smoke_seconds"] = time.time() - t0

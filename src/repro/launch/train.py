@@ -91,7 +91,7 @@ def build_mesh(name: str):
     return mesh, mc
 
 
-def run_fleet_plane(cfg, args, params) -> None:
+def run_fleet_plane(cfg, args, params, run_cfg: "api.RunConfig") -> None:
     """ROADMAP follow-up: the trunked trainer rides the (sharded) fleet
     plane.  LMTask supplies the flat-row step; the plane shards the
     (M, n) fleet buffer over every host device (``make_fleet_mesh``) and
@@ -104,21 +104,34 @@ def run_fleet_plane(cfg, args, params) -> None:
     AFL device state (``<path>.state``: fleet buffer + global flat model
     + server-opt state + trace cursor) and ``--resume <path>.state``
     restarts a compiled run mid-timeline."""
-    from repro.core.afl import RunInterrupted, run_afl
-    from repro.core.sfl import run_fedavg
+    from repro.core.afl import RunInterrupted
     from repro.core.tasks import LMTask
 
     task = LMTask(cfg, num_clients=args.clients, batch_size=args.batch,
                   seq_len=args.seq, lr=args.lr)
     fleet = make_fleet(args.clients, tau=1.0, hetero_a=4.0,
                        samples_per_client=[1000] * args.clients, seed=0)
-    plane = task.client_plane(fleet, sharded=True,
-                              window_cap=args.window_cap)
-    print(f"fleet plane: M={plane.M} shards={plane.layout.D} "
-          f"rows/shard={plane.layout.rows_per_shard} n={plane.engine.n:,} "
-          f"loop={args.loop}")
+    pc = run_cfg.plane
+    if pc.store == "paged":
+        # paged active-set pool (DESIGN.md §12) — selected only through
+        # --config / RunConfig; single-device by construction
+        plane = task.client_plane(fleet, store="paged",
+                                  active_slots=pc.active_slots,
+                                  prefetch_depth=pc.prefetch_depth,
+                                  window_cap=args.window_cap)
+        print(f"fleet plane: M={plane.M} store=paged slots={plane.P} "
+              f"n={plane.engine.n:,} loop={args.loop}")
+    else:
+        plane = task.client_plane(fleet, sharded=True,
+                                  window_cap=args.window_cap)
+        print(f"fleet plane: M={plane.M} shards={plane.layout.D} "
+              f"rows/shard={plane.layout.rows_per_shard} "
+              f"n={plane.engine.n:,} loop={args.loop}")
     t0 = time.time()
     every = max(args.steps // 10, 1)
+    base_cfg = run_cfg.replace(
+        iterations=args.steps, eval_every=every,
+        timing=api.TimingConfig(tau_u=0.05, tau_d=0.05))
     state = None
     if args.algorithm == "fedavg":
         if args.loop == "compiled" or args.resume or args.autosave \
@@ -130,9 +143,9 @@ def run_fleet_plane(cfg, args, params) -> None:
             raise SystemExit("--faults rewrites the AFL upload timeline; "
                              "fedavg's synchronous rounds have no timeline "
                              "to degrade")
-        final, hist = run_fedavg(
-            params, fleet, None, rounds=args.steps, tau_u=0.05, tau_d=0.05,
-            eval_fn=task.eval_fn, eval_every=every, client_plane=plane)
+        final, hist = api.run(
+            task, base_cfg.replace(algorithm="fedavg"), fleet=fleet,
+            client_plane=plane, params0=params, eval_fn=task.eval_fn)
     else:
         resume_state = None
         if args.resume:
@@ -153,19 +166,20 @@ def run_fleet_plane(cfg, args, params) -> None:
         stop = {"flag": False}
         prev = _install_stop_handlers(stop)
         attempt = 0
+        afl_cfg = base_cfg.replace(
+            algorithm="csmaafl",
+            loop="compiled" if args.loop == "compiled" else "windowed",
+            gamma=args.gamma, faults=args.faults, guards=args.guards,
+            autosave=api.AutosaveConfig(every=args.autosave,
+                                        dir=autosave_dir,
+                                        keep_last=args.keep_last))
         try:
             while True:
                 try:
-                    res = run_afl(
-                        params, fleet, None, algorithm="csmaafl",
-                        iterations=args.steps, tau_u=0.05, tau_d=0.05,
-                        gamma=args.gamma, eval_fn=task.eval_fn,
-                        eval_every=every, client_plane=plane,
-                        compiled_loop=(args.loop == "compiled"),
-                        resume_state=resume_state, faults=args.faults,
-                        guards=args.guards, autosave_every=args.autosave,
-                        autosave_dir=autosave_dir,
-                        autosave_keep_last=args.keep_last,
+                    res = api.run(
+                        task, afl_cfg, fleet=fleet, client_plane=plane,
+                        params0=params, eval_fn=task.eval_fn,
+                        resume_state=resume_state,
                         stop_flag=(lambda: stop["flag"])
                         if autosave_dir else None)
                     break
@@ -221,7 +235,7 @@ def run_fleet_plane(cfg, args, params) -> None:
             print("AFL device state saved to", args.save + ".state")
 
 
-def run_sweep_grid(args) -> None:
+def run_sweep_grid(args, run_cfg: "api.RunConfig") -> None:
     """``--sweep grid.json``: execute a seeds x scenarios convergence
     grid through the run-batched sweep plane (core/sweep_plane.py,
     DESIGN.md §8) and write the per-run convergence curves as JSON.
@@ -235,7 +249,7 @@ def run_sweep_grid(args) -> None:
 
     from repro.configs.paper_cnn import CNNConfig
     from repro.core import sweep_plane as sp
-    from repro.core.afl import RunInterrupted, run_afl
+    from repro.core.afl import RunInterrupted
     from repro.core.tasks import CNNTask
 
     with open(args.sweep) as f:
@@ -260,6 +274,13 @@ def run_sweep_grid(args) -> None:
           f"= {len(scenarios) * len(seeds)} runs, M={len(task.clients)}, "
           f"{iterations} events each")
     guards = args.guards if args.guards is not None else cfg.get("guards")
+    plane_kw = None
+    if run_cfg.plane.store == "paged":
+        pc = run_cfg.plane
+        plane_kw = dict(store="paged", active_slots=pc.active_slots,
+                        prefetch_depth=pc.prefetch_depth)
+        print(f"sweep: paged store (slots={pc.active_slots}, "
+              f"prefetch_depth={pc.prefetch_depth})")
     ckdir = args.ckpt_dir if (args.autosave or args.resume) else None
     stop = {"flag": False}
     prev = _install_stop_handlers(stop) if ckdir else {}
@@ -276,6 +297,7 @@ def run_sweep_grid(args) -> None:
                     server_lr=cfg.get("server_lr", 1.0), guards=guards,
                     checkpoint_dir=ckdir, autosave_every=args.autosave,
                     keep_last=args.keep_last, resume=resume,
+                    plane_kw=plane_kw,
                     stop_flag=(lambda: stop["flag"]) if ckdir else None)
                 break
             except RunInterrupted as e:
@@ -320,15 +342,18 @@ def run_sweep_grid(args) -> None:
         for i in picks:
             r = res.runs[i]
             sc = r.scenario
-            solo = run_afl(
-                task.init_params(r.seed), r.plane.fleet, None,
-                algorithm=sc.algorithm, iterations=iterations,
-                tau_u=sc.tau_u, tau_d=sc.tau_d, gamma=sc.gamma,
-                mu_momentum=sc.mu_momentum,
-                max_staleness=sc.max_staleness, eval_fn=task.eval_fn,
-                eval_every=eval_every, client_plane=r.plane,
-                compiled_loop=True, seed=r.seed, faults=sc.faults,
+            solo_cfg = api.RunConfig(
+                algorithm=sc.algorithm, loop="compiled",
+                iterations=iterations, gamma=sc.gamma,
+                mu_momentum=sc.mu_momentum, eval_every=eval_every,
+                max_staleness=sc.max_staleness, seed=r.seed,
+                timing=api.TimingConfig(tau_u=sc.tau_u, tau_d=sc.tau_d),
+                faults=sc.faults,
                 guards=sc.guards if sc.guards is not None else guards)
+            solo = api.run(task, solo_cfg, fleet=r.plane.fleet,
+                           client_plane=r.plane,
+                           params0=task.init_params(r.seed),
+                           eval_fn=task.eval_fn)
             if r.history.times != solo.history.times:
                 raise SystemExit(f"sweep parity: {r.label} eval "
                                  "timeline diverged from the solo run")
@@ -501,8 +526,12 @@ def main(argv=None) -> None:
         args.window_cap = run_cfg.plane.window_cap
 
     if args.sweep:
-        run_sweep_grid(args)
+        run_sweep_grid(args, run_cfg)
         return
+
+    if run_cfg.plane.store == "paged" and args.data_plane != "fleet":
+        ap.error("plane.store='paged' rides the client fleet plane; "
+                 "use --data-plane fleet (or a --sweep grid)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -520,7 +549,7 @@ def main(argv=None) -> None:
         n_params = sum(x.size for x in jax.tree.leaves(params))
         print(f"arch={cfg.arch_id} params={n_params:,} "
               f"algorithm={args.algorithm} data_plane=fleet")
-        run_fleet_plane(cfg, args, params)
+        run_fleet_plane(cfg, args, params, run_cfg)
         return
 
     if args.loop != "window" or args.resume or args.autosave or args.guards:

@@ -155,6 +155,112 @@ def test_unknown_fields_rejected_with_suggestions():
 
 
 # ---------------------------------------------------------------------------
+# Plane store config (paged active-set pool, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def test_plane_store_config_validation():
+    assert PlaneConfig().store == "dense"
+    with pytest.raises(ValueError, match="plane.store"):
+        PlaneConfig(store="pagedd")
+    with pytest.raises(ValueError, match="kind='single'"):
+        PlaneConfig(kind="sharded", store="paged")
+    with pytest.raises(ValueError, match="kind='single'"):
+        PlaneConfig(kind="none", store="paged")
+    with pytest.raises(ValueError, match="active_slots"):
+        PlaneConfig(store="paged", active_slots=0)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        PlaneConfig(prefetch_depth=0)
+    # did-you-mean inside the nested section covers the new fields too
+    with pytest.raises(ValueError, match="active_slots"):
+        RunConfig.from_dict({"plane": {"actve_slots": 4}})
+
+
+def test_plane_preset_resolution_and_roundtrip():
+    pc = api.resolve_plane("fleet1m")
+    assert (pc.kind, pc.store, pc.active_slots, pc.prefetch_depth) \
+        == ("single", "paged", 1024, 2)
+    assert api.resolve_plane(None) == PlaneConfig()
+    assert api.resolve_plane("default") == PlaneConfig()
+    assert api.resolve_plane({"preset": "fleet1m", "active_slots": 64}) \
+        == PlaneConfig(store="paged", active_slots=64)
+    with pytest.raises(ValueError, match="unknown plane preset"):
+        api.resolve_plane("fleet9z")
+    # RunConfig.from_dict accepts the preset name as a string value
+    cfg = RunConfig.from_dict({"plane": "fleet1m", "iterations": 4})
+    assert cfg.plane == pc
+    # JSON round-trip carries the new fields
+    cfg2 = RunConfig(plane=PlaneConfig(store="paged", active_slots=8,
+                                       prefetch_depth=3))
+    assert RunConfig.from_json(cfg2.to_json()) == cfg2
+    raw = json.loads(cfg2.to_json())
+    assert raw["plane"]["store"] == "paged"
+    assert raw["plane"]["active_slots"] == 8
+
+
+def test_paged_store_not_reachable_via_afl_kwargs():
+    """No run_afl keyword spells the paged store: the kwargs bridge
+    only ever produces dense planes, so afl_kwargs() of a paged config
+    round-trips to a config whose plane is dense again."""
+    cfg = RunConfig(plane=PlaneConfig(store="paged", active_slots=16))
+    kw = cfg.afl_kwargs()
+    assert "store" not in kw and "active_slots" not in kw
+    assert RunConfig.from_afl_kwargs(
+        **{k: kw[k] for k in ("algorithm", "iterations", "tau_u", "tau_d",
+                              "use_client_plane", "compiled_loop")}
+    ).plane.store == "dense"
+
+
+# ---------------------------------------------------------------------------
+# Legacy plane kwargs: deprecation shims stay bit-identical
+# ---------------------------------------------------------------------------
+def test_legacy_plane_kwargs_warn_and_stay_bit_identical():
+    import warnings
+    M, D = 4, 8
+    task = _ToyTask(M, D)
+    fleet = _fleet(M)
+    with pytest.warns(DeprecationWarning, match="use_client_plane"):
+        legacy = run_afl(task.w0, fleet, task.local_train_fn,
+                         algorithm="csmaafl", iterations=12, tau_u=0.2,
+                         tau_d=0.1, use_client_plane=False, seed=1)
+    # unset sentinels resolve to the historical defaults without a peep
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        silent = run_afl(task.w0, fleet, task.local_train_fn,
+                         algorithm="csmaafl", iterations=12, tau_u=0.2,
+                         tau_d=0.1, seed=1)
+    # plane on (the default) with client_plane=None falls back to the
+    # local path, so the two calls are the same run bit for bit
+    assert legacy.betas == silent.betas
+    assert np.array_equal(np.asarray(legacy.params),
+                          np.asarray(silent.params))
+    with pytest.warns(DeprecationWarning, match="run_fedavg"):
+        p_legacy, _ = run_fedavg(task.w0, fleet, task.local_train_fn,
+                                 rounds=4, tau_u=0.2, tau_d=0.1,
+                                 use_client_plane=False, seed=2)
+    cfg = RunConfig(algorithm="fedavg", iterations=4, seed=2,
+                    timing=TimingConfig(tau_u=0.2, tau_d=0.1),
+                    plane=PlaneConfig(kind="none"))
+    p_api, _ = api.run(task, cfg, fleet=fleet)
+    assert np.array_equal(np.asarray(p_legacy), np.asarray(p_api))
+
+
+def test_resolve_legacy_plane_kwargs_helper():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert api.resolve_legacy_plane_kwargs("run_afl") \
+            == (None, True, False)
+    with pytest.warns(DeprecationWarning, match="compiled_loop"):
+        out = api.resolve_legacy_plane_kwargs(
+            "run_afl", compiled_loop=True)
+    assert out == (None, True, True)
+    sentinel = object()
+    with pytest.warns(DeprecationWarning, match="client_plane"):
+        out = api.resolve_legacy_plane_kwargs(
+            "run_afl", client_plane=sentinel, use_client_plane=False)
+    assert out == (sentinel, False, False)
+
+
+# ---------------------------------------------------------------------------
 # Ingest spec resolution
 # ---------------------------------------------------------------------------
 def test_resolve_ingest():

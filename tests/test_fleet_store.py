@@ -1,0 +1,400 @@
+"""Tests for the paged active-set client plane (core/fleet_store.py +
+``PagedClientPlane``, docs/DESIGN.md §12):
+
+* slot-table addressing against a dict-model oracle: ensure() makes the
+  requested rows resident with forward/reverse tables in agreement and
+  pool contents equal to the host-arena truth, residency never exceeds P;
+* dirty device rows survive eviction (write-back) and reload bit-exact;
+* horizon-aware LRU: rows named in the planned prefetch horizon are
+  never evicted while a non-horizon candidate exists;
+* exact prefetch: plan()/adopt() reaches the same pool state as
+  synchronous ensure(), a desynchronized plan falls back cleanly, and a
+  post-staging arena write (version bump) wins over the stale copy;
+* FleetStore checkpoint state round-trips (arena + slot table +
+  counters);
+* dense <-> paged parity <= 1e-5 at M=256 / P=32 on the windowed,
+  compiled and sweep paths (f32 CNN, faults + guards on) and on a bf16
+  toy fleet;
+* kill-resume parity with a paged store on both AFL loops, and a dense
+  checkpoint is rejected when resumed under a paged plane;
+* an M=100k / P=64 fleet runs with device residency bounded by the
+  active set (peak_device_rows stays O(P), three orders of magnitude
+  under M) — the dense plane would need the full (M, n) device buffer
+  by construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import sweep_plane as sp
+from repro.core.afl import _run_afl_impl
+from repro.core.agg_engine import AggEngine
+from repro.core.client_plane import (ClientPlane, PagedClientPlane,
+                                     build_plane)
+from repro.core.event_trace import RunInterrupted
+from repro.core.fleet_store import FleetStore
+from repro.core.scheduler import make_fleet
+from repro.core.tasks import CNNTask
+
+M_CNN, P_CNN = 256, 32
+
+
+def _maxdiff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _hist_close(ha, hb, tol=1e-5):
+    assert ha.times == hb.times
+    assert len(ha.metrics) == len(hb.metrics)
+    for ma, mb in zip(ha.metrics, hb.metrics):
+        assert set(ma) == set(mb)
+        for k in ma:
+            assert abs(ma[k] - mb[k]) <= tol, (k, ma[k], mb[k])
+
+
+# ---------------------------------------------------------------------------
+# FleetStore unit oracles
+# ---------------------------------------------------------------------------
+def _seeded_store(M, n, P, rng):
+    store = FleetStore(M, n, P, np.float32)
+    truth = rng.normal(size=(M, n)).astype(np.float32)
+    for a in range(0, M, P):
+        store.write_rows(np.arange(a, min(a + P, M)), truth[a:a + P])
+    return store, truth, jnp.zeros((store.P, n), jnp.float32)
+
+
+def test_slot_addressing_matches_dict_oracle():
+    rng = np.random.default_rng(0)
+    M, n, P = 24, 5, 6
+    store, truth, pool = _seeded_store(M, n, P, rng)
+    for _ in range(60):
+        cids = np.unique(rng.choice(M, size=int(rng.integers(1, P + 1)),
+                                    replace=False))
+        pool = store.ensure(pool, cids)
+        slots = store.slots_of(cids)
+        assert (slots >= 0).all()
+        # forward and reverse tables agree, and no two cids share a slot
+        assert np.array_equal(store.slot_cids[slots], cids)
+        assert np.unique(slots).size == slots.size
+        np.testing.assert_array_equal(np.asarray(pool)[slots], truth[cids])
+        assert store.resident <= P
+    assert store.evictions > 0              # the walk overflowed the pool
+    assert store.peak_device_rows <= P
+    ms = store.memory_stats()
+    assert all(isinstance(v, int) for v in ms.values())
+
+
+def test_ensure_rejects_oversized_working_set():
+    store = FleetStore(10, 3, 4, np.float32)
+    pool = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="P=4"):
+        store.ensure(pool, np.arange(5))
+
+
+def test_dirty_writeback_survives_eviction():
+    rng = np.random.default_rng(1)
+    M, n, P = 12, 4, 3
+    store, truth, pool = _seeded_store(M, n, P, rng)
+    pool = store.ensure(pool, [0])
+    new_row = np.full(n, 7.5, np.float32)
+    pool = pool.at[int(store.slot_map[0])].set(jnp.asarray(new_row))
+    store.mark_dirty([0])
+    # churn the pool until cid 0 is evicted (write-back must fire)
+    for c in range(1, M):
+        pool = store.ensure(pool, [c])
+        if store.slot_map[0] < 0:
+            break
+    assert store.slot_map[0] < 0
+    np.testing.assert_array_equal(store.arena[0], new_row)
+    pool = store.ensure(pool, [0])
+    np.testing.assert_array_equal(
+        np.asarray(pool)[int(store.slot_map[0])], new_row)
+
+
+def test_eviction_never_evicts_horizon_row_while_alternative_exists():
+    rng = np.random.default_rng(2)
+    M, n, P = 12, 3, 4
+    store, _, pool = _seeded_store(M, n, P, rng)
+    pool = store.ensure(pool, [0, 1, 2, 3])          # fill the pool
+    store.plan([np.array([0, 1])])                   # 0,1 enter the horizon
+    pool = store.ensure(pool, [2, 3])                # 2,3 most recently used
+    pool = store.ensure(pool, [7])                   # needs one victim
+    # LRU alone would evict 0 or 1 (oldest) — the horizon overrides it
+    assert store.slot_map[0] >= 0 and store.slot_map[1] >= 0
+    assert (store.slot_map[2] < 0) or (store.slot_map[3] < 0)
+    store.cancel_plan()
+    assert not store._horizon                        # bookkeeping drained
+
+
+def test_prefetch_adopt_matches_ensure_and_counts_stalls():
+    rng = np.random.default_rng(3)
+    M, n, P = 20, 6, 5
+    chunks = [np.unique(rng.choice(M, size=int(rng.integers(1, P + 1)),
+                                   replace=False)) for _ in range(8)]
+    s_a, truth, pool_a = _seeded_store(M, n, P, rng)
+    s_b = FleetStore(M, n, P, np.float32)
+    for a in range(0, M, P):
+        s_b.write_rows(np.arange(a, min(a + P, M)), truth[a:a + P])
+    pool_b = jnp.zeros((P, n), jnp.float32)
+    s_a.plan(chunks)
+    for c in chunks:
+        pool_a = s_a.adopt(pool_a, c)
+        pool_b = s_b.ensure(pool_b, c)
+        for cid in c:
+            np.testing.assert_array_equal(
+                np.asarray(pool_a)[int(s_a.slot_map[cid])], truth[cid])
+    assert isinstance(s_a.prefetch_stalls, int)
+    assert not s_a._plan and not s_a._inflight
+    # a desynchronized adopt falls back to ensure without corruption
+    s_a.plan([np.array([0, 1]), np.array([2])])
+    pool_a = s_a.adopt(pool_a, np.array([4, 5]))     # not the planned chunk
+    np.testing.assert_array_equal(
+        np.asarray(pool_a)[int(s_a.slot_map[4])], truth[4])
+    assert not s_a._inflight                         # plan was cancelled
+
+
+def test_prefetch_version_bump_beats_stale_staged_copy():
+    rng = np.random.default_rng(4)
+    M, n, P = 8, 4, 3
+    store, truth, pool = _seeded_store(M, n, P, rng)
+    store.plan([np.array([1, 2])])
+    store._inflight[0][2].result()                   # staging finished
+    fresh = np.full(n, -3.25, np.float32)
+    store.write_rows(np.array([1]), fresh[None])     # bump row 1's version
+    pool = store.adopt(pool, np.array([1, 2]))
+    np.testing.assert_array_equal(
+        np.asarray(pool)[int(store.slot_map[1])], fresh)
+    np.testing.assert_array_equal(
+        np.asarray(pool)[int(store.slot_map[2])], truth[2])
+
+
+def test_store_state_roundtrip():
+    rng = np.random.default_rng(5)
+    M, n, P = 10, 4, 3
+    store, truth, pool = _seeded_store(M, n, P, rng)
+    pool = store.ensure(pool, [2, 5])
+    mod = np.full(n, 9.0, np.float32)
+    pool = pool.at[int(store.slot_map[5])].set(jnp.asarray(mod))
+    store.mark_dirty([5])
+    st = store.state_dict(pool)
+    np.testing.assert_array_equal(st["arena"][5], mod)    # flushed
+    other = FleetStore(M, n, P, np.float32)
+    other.load_state(st)
+    np.testing.assert_array_equal(other.arena, st["arena"])
+    assert other.slot_map[2] >= 0 and other.slot_map[5] >= 0
+    assert np.array_equal(other.slot_cids, store.slot_cids)
+    assert other.initialized.all()
+    bad = dict(st)
+    bad["slot_cids"] = np.full(P + 1, -1, np.int64)
+    with pytest.raises(ValueError, match="active_slots"):
+        FleetStore(M, n, P, np.float32).load_state(bad)
+    with pytest.raises(ValueError, match="arena"):
+        FleetStore(M + 1, n, P, np.float32).load_state(st)
+
+
+# ---------------------------------------------------------------------------
+# Dense <-> paged parity at M=256 / P=32 (f32 CNN, faults + guards on)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cnn256():
+    task = CNNTask(iid=True, num_clients=M_CNN, train_n=2048, test_n=64,
+                   local_batches_per_step=1)
+    fleet = make_fleet(M_CNN, tau=1.0, hetero_a=4.0,
+                       samples_per_client=task.num_samples(), seed=1)
+    return task, fleet, task.init_params()
+
+
+def _afl(p0, fleet, plane, **kw):
+    kw.setdefault("algorithm", "csmaafl")
+    kw.setdefault("iterations", 32)
+    kw.setdefault("faults", "lossy")
+    kw.setdefault("guards", "default")
+    return _run_afl_impl(p0, fleet, None, client_plane=plane, tau_u=0.1,
+                         tau_d=0.1, gamma=0.4, eval_every=16, seed=3, **kw)
+
+
+@pytest.mark.parametrize("compiled", [False, True],
+                         ids=["windowed", "compiled"])
+def test_dense_paged_parity_m256(cnn256, compiled):
+    task, fleet, p0 = cnn256
+    dense = task.client_plane(fleet)
+    paged = task.client_plane(fleet, store="paged", active_slots=P_CNN)
+    kw = dict(eval_fn=task.eval_fn, compiled_loop=compiled)
+    r_d = _afl(p0, fleet, dense, **kw)
+    r_p = _afl(p0, fleet, paged, **kw)
+    assert _maxdiff(r_d.params, r_p.params) <= 1e-5
+    _hist_close(r_d.history, r_p.history)
+    assert r_d.betas == r_p.betas
+    # the stats satellite: dense reports the full fleet, paged the pool
+    assert r_d.stats["peak_device_rows"] == M_CNN
+    assert r_d.stats["prefetch_stalls"] == 0
+    assert r_p.stats["peak_device_rows"] <= 2 * P_CNN
+    assert r_p.stats["prefetch_stalls"] >= 0
+    # guard verdicts agree event for event (identical counters)
+    assert {k: v for k, v in r_d.stats["faults"].items()
+            if k.startswith("guard")} \
+        == {k: v for k, v in r_p.stats["faults"].items()
+            if k.startswith("guard")}
+
+
+def test_dense_paged_parity_sweep_m256(cnn256):
+    task, _, _ = cnn256
+    kw = dict(iterations=24, eval_every=12)
+    r_d = sp.run_sweep(task, ["paper_iid"], [0, 1], **kw)
+    r_p = sp.run_sweep(task, ["paper_iid"], [0, 1],
+                       plane_kw=dict(store="paged", active_slots=P_CNN),
+                       **kw)
+    for rd, rp in zip(r_d.runs, r_p.runs):
+        _hist_close(rd.history, rp.history)
+    assert r_d.stats["peak_device_rows"] == M_CNN
+    assert r_p.stats["peak_device_rows"] <= 2 * P_CNN
+
+
+# ---------------------------------------------------------------------------
+# bf16 toy parity + kill-resume with a paged store
+# ---------------------------------------------------------------------------
+def _toy(M, D, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    w0 = jnp.asarray(rng.normal(size=D), dtype)
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[60 + 10 * m for m in range(M)],
+                       adaptive=True, max_steps=3, seed=2)
+
+    def batch_fn(cid, num_steps, seed_):
+        r = np.random.default_rng((seed_ * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(num_steps, D)), dtype)
+
+    def step(flat, target):
+        return (flat.astype(jnp.float32)
+                - 0.25 * (flat.astype(jnp.float32)
+                          - target.astype(jnp.float32))).astype(dtype)
+
+    engine = AggEngine(w0, storage_dtype=dtype)
+    return w0, fleet, engine, step, batch_fn
+
+
+def test_dense_paged_parity_bf16_toy():
+    M, D = 16, 97
+    w0, fleet, engine, step, batch_fn = _toy(M, D, jnp.bfloat16)
+    dense = build_plane(engine, fleet, step, batch_fn)
+    paged = build_plane(AggEngine(w0, storage_dtype=jnp.bfloat16), fleet,
+                        step, batch_fn, store="paged", active_slots=5)
+    assert isinstance(dense, ClientPlane)
+    assert isinstance(paged, PagedClientPlane) and paged.P == 5
+    eval_fn = (lambda p: {"s": float(jnp.sum(jnp.asarray(p, jnp.float32)))})
+    kw = dict(algorithm="csmaafl", iterations=24, tau_u=0.1, tau_d=0.1,
+              gamma=0.4, eval_fn=eval_fn, eval_every=6, seed=3,
+              faults="lossy", guards="default")
+    r_d = _run_afl_impl(w0, fleet, None, client_plane=dense, **kw)
+    r_p = _run_afl_impl(w0, fleet, None, client_plane=paged, **kw)
+    assert _maxdiff(r_d.params, r_p.params) <= 1e-5
+    _hist_close(r_d.history, r_p.history)
+    assert r_p.stats["peak_device_rows"] <= 2 * 5 < M
+
+
+def test_build_plane_rejects_bad_store():
+    M, D = 4, 7
+    w0, fleet, engine, step, batch_fn = _toy(M, D)
+    with pytest.raises(ValueError, match="dense|paged"):
+        build_plane(engine, fleet, step, batch_fn, store="cold")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        build_plane(engine, fleet, step, batch_fn, store="paged",
+                    sharded=True)
+
+
+@pytest.mark.parametrize("compiled", [False, True],
+                         ids=["windowed", "compiled"])
+def test_paged_kill_resume_parity(tmp_path, compiled):
+    M, D, P, ITER = 12, 97, 4, 24
+    w0, fleet, engine, step, batch_fn = _toy(M, D)
+    plane = build_plane(engine, fleet, step, batch_fn, store="paged",
+                        active_slots=P)
+    eval_fn = (lambda p: {
+        "norm": float(np.linalg.norm(np.asarray(p, np.float32)))})
+    kw = dict(algorithm="csmaafl", iterations=ITER, tau_u=0.1, tau_d=0.1,
+              gamma=0.4, eval_fn=eval_fn, eval_every=6, seed=3,
+              compiled_loop=compiled)
+    full = _run_afl_impl(w0, fleet, None, client_plane=plane, **kw)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > (1 if compiled else 8)
+
+    d = str(tmp_path)
+    with pytest.raises(RunInterrupted):
+        _run_afl_impl(w0, fleet, None, client_plane=plane,
+                      autosave_every=4 if not compiled else 6,
+                      autosave_dir=d, stop_flag=stop, **kw)
+    st = ckpt.load_afl_state(ckpt.latest_valid(d))
+    assert 0 < st["cursor"] < ITER
+    assert "fleet_store" in st          # the store spilled with the state
+    assert st["fleet_store"]["arena"].shape == (M, engine.n)
+    res = _run_afl_impl(w0, fleet, None, client_plane=plane,
+                        resume_state=st, **kw)
+    assert _maxdiff(res.params, full.params) <= 1e-5
+    _hist_close(res.history, full.history)
+    assert res.state["fleet_buf"].shape[0] == P
+
+
+def test_paged_resume_rejects_dense_checkpoint(tmp_path):
+    M, D, ITER = 12, 97, 24
+    w0, fleet, engine, step, batch_fn = _toy(M, D)
+    dense = build_plane(engine, fleet, step, batch_fn)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 8
+
+    kw = dict(algorithm="csmaafl", iterations=ITER, tau_u=0.1, tau_d=0.1,
+              gamma=0.4, seed=3)
+    with pytest.raises(RunInterrupted):
+        _run_afl_impl(w0, fleet, None, client_plane=dense,
+                      autosave_every=4, autosave_dir=str(tmp_path),
+                      stop_flag=stop, **kw)
+    st = ckpt.load_afl_state(ckpt.latest_valid(str(tmp_path)))
+    paged = build_plane(AggEngine(w0), fleet, step, batch_fn,
+                        store="paged", active_slots=4)
+    with pytest.raises(ValueError, match="fleet_store"):
+        _run_afl_impl(w0, fleet, None, client_plane=paged,
+                      resume_state=st, **kw)
+
+
+# ---------------------------------------------------------------------------
+# M=100k bounded-memory smoke (the dense plane would allocate (M, n)
+# device rows by construction; the paged plane stays O(P))
+# ---------------------------------------------------------------------------
+def test_100k_fleet_runs_in_bounded_device_memory():
+    M, D, P = 100_000, 32, 64
+    w0, fleet, engine, step, batch_fn = None, None, None, None, None
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=D).astype(np.float32))
+    fleet = make_fleet(M, tau=1.0, hetero_a=4.0,
+                       samples_per_client=[100] * M, adaptive=False,
+                       seed=0)
+
+    def batch_fn(cid, num_steps, seed_):
+        r = np.random.default_rng((seed_ * 131 + cid) % (2 ** 31))
+        return jnp.asarray(r.normal(size=(num_steps, D)).astype(np.float32))
+
+    def step(flat, target):
+        return flat - 0.25 * (flat - target)
+
+    engine = AggEngine(w0)
+    plane = build_plane(engine, fleet, step, batch_fn, store="paged",
+                        active_slots=P)
+    res = _run_afl_impl(w0, fleet, None, client_plane=plane,
+                        algorithm="csmaafl", iterations=48, tau_u=0.1,
+                        tau_d=0.1, gamma=0.4, seed=0)
+    assert np.isfinite(np.asarray(res.params, np.float32)).all()
+    # residency is bounded by the active set, not the fleet size
+    assert res.stats["peak_device_rows"] <= 2 * P
+    assert res.stats["peak_device_rows"] < M // 100
+    assert res.state["fleet_buf"].shape == (P, engine.n)
+    # only the uploaders ever materialized host rows
+    assert plane.store.initialized.sum() <= 48
